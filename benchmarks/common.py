@@ -1,0 +1,37 @@
+"""Shared benchmark fixtures: laptop-scale analogs of the paper's datasets.
+
+Scaled so every figure reproduces its paper counterpart's *shape* in
+seconds, not hours: RMAT keeps (a=0.45,b=0.25,c=0.15); BA supplies the
+WK/LJ-style heavy in-degree tail; ER is the low-skew control.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.graph import generators
+
+DATASETS = {
+    "E14": lambda: generators.erdos_renyi(1 << 14, avg_degree=9.0, seed=1),
+    "R14": lambda: generators.rmat(14, edge_factor=16, seed=2),
+    "BA14": lambda: generators.ba_skewed(1 << 14, m_per=8, seed=3),
+    "AM-like": lambda: generators.rmat(14, edge_factor=5, a=0.30, b=0.25,
+                                       c=0.25, seed=4),
+}
+
+
+def reversed_graph(g):
+    from repro.graph.graph import COOGraph
+    return COOGraph(g.n, g.dst, g.src, g.weight)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

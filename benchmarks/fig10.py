@@ -1,0 +1,30 @@
+"""Paper Fig 10: Torus-Mesh vs Mesh — % time reduction and % energy
+increase (cycle-level AM-CCA simulator, BFS)."""
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.amcca_sim import AmccaSim
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators
+
+
+def main():
+    for n, shards in ((600, 64), (1200, 256)):
+        g = generators.ba_skewed(n, m_per=5, seed=9)
+        root = int(np.argmax(g.out_degrees()))
+        out = {}
+        for torus in (False, True):
+            part = build_partition(g, PartitionConfig(
+                num_shards=shards, rpvo_max=4, local_edge_list_size=8,
+                torus=torus, seed=8))
+            res, us = timed(AmccaSim(part, torus=torus).run_min_app,
+                            {root: 0.0}, False)
+            out[torus] = (res.cycles, res.energy_pj, us)
+        dt = 100 * (out[False][0] - out[True][0]) / out[False][0]
+        de = 100 * (out[True][1] - out[False][1]) / out[False][1]
+        emit(f"fig10/cc{shards}", out[True][2],
+             f"time_reduction_pct={dt:.1f};energy_increase_pct={de:.1f}")
+
+
+if __name__ == "__main__":
+    main()

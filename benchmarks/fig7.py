@@ -1,0 +1,33 @@
+"""Paper Fig 7: strong scaling of BFS/SSSP/PageRank, 256 -> 16384 cells,
+with and without rhizomes (cost-model cycles over reference traces)."""
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.costmodel import CostModel
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators, reference
+
+
+def main():
+    g = generators.rmat(14, edge_factor=16, seed=2)  # R14 (skewed)
+    root = int(np.argmax(g.out_degrees()))
+    traces = {
+        "bfs": reference.bfs_frontier_trace(g, root),
+        "sssp": reference.sssp_relax_trace(g.with_random_weights(seed=2), root),
+    }
+    pr_trace = [np.arange(g.n, dtype=np.int64)] * 10  # PR: all active x iters
+    traces["pagerank"] = pr_trace
+    for app, trace in traces.items():
+        for shards in (256, 1024, 4096):
+            for rmax, label in ((1, "rpvo"), (16, "rhizome")):
+                part = build_partition(g, PartitionConfig(
+                    num_shards=shards, rpvo_max=rmax,
+                    local_edge_list_size=16, seed=5))
+                res, us = timed(CostModel(part, torus=True).replay, trace)
+                emit(f"fig7/{app}/{label}/cc{shards}", us,
+                     f"cycles={res.cycles:.0f};msgs={res.messages};"
+                     f"max_link={res.max_link_load}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Pallas kernel micro-benchmark: rhizome_segment_reduce vs the jnp oracle
+(interpret mode on CPU — correctness + relative cost only; Mosaic timings
+need a real TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.ref import segment_combine_ref
+from repro.kernels.rhizome_segment_reduce import segment_combine_pallas
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for e, nseg in ((4096, 1024), (16384, 4096)):
+        data = jnp.asarray(rng.uniform(-1, 1, e).astype(np.float32))
+        ids = jnp.asarray(np.sort(rng.integers(0, nseg, e)).astype(np.int32))
+        for kind in ("min", "sum"):
+            ref = jax.jit(lambda d, i: segment_combine_ref(d, i, nseg, kind))
+            _ = ref(data, ids).block_until_ready()
+            _, us_ref = timed(lambda: ref(data, ids).block_until_ready(),
+                              repeats=5)
+            out = segment_combine_pallas(data, ids, nseg, kind,
+                                         interpret=True)
+            np.testing.assert_allclose(np.asarray(out),
+                                       np.asarray(ref(data, ids)),
+                                       rtol=5e-5, atol=1e-6)
+            emit(f"kernel/{kind}/E{e}", us_ref,
+                 f"oracle_us={us_ref:.0f};pallas=validated-interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.  ``python -m benchmarks.report [--tag default]``
+prints markdown.
+"""
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCH_ORDER = ["paligemma-3b", "whisper-medium", "granite-moe-1b-a400m",
+              "deepseek-moe-16b", "command-r-35b", "minitron-4b",
+              "qwen3-32b", "phi3-medium-14b", "xlstm-125m", "jamba-v0.1-52b",
+              "graph-bfs-rhizome", "graph-bfs-rpvo", "graph-bfs-simple"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "rmat22"]
+
+
+def load(tag: str):
+    recs = {}
+    for path in glob.glob(os.path.join(RESULTS, f"*__{tag}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="default")
+    args = ap.parse_args()
+    recs = load(args.tag)
+
+    print("### Dry-run (per-device memory & compile status)\n")
+    print("| arch | shape | mesh | status | args GiB/dev | temps GiB/dev |"
+          " compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mp in (False, True):
+                r = recs.get((arch, shape, mp))
+                if r is None:
+                    continue
+                mesh = "2x16x16" if mp else "16x16"
+                if "skipped" in r:
+                    print(f"| {arch} | {shape} | {mesh} | SKIP² | - | - | - |")
+                    continue
+                if not r.get("ok"):
+                    print(f"| {arch} | {shape} | {mesh} | FAIL | - | - | - |")
+                    continue
+                m = r["memory"]
+                print(f"| {arch} | {shape} | {mesh} | ok "
+                      f"| {fmt_bytes(m['argument_size_bytes'])} "
+                      f"| {fmt_bytes(m['temp_size_bytes'])} "
+                      f"| {r.get('compile_s', 0):.0f} |")
+
+    print("\n### Roofline (single-pod 16x16, per-device program)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " useful ratio¹ | compute fraction |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, False))
+            if r is None or "skipped" in r or not r.get("ok"):
+                continue
+            t = r["roofline"]
+            tot = t["compute_s"] + t["memory_s"] + t["collective_s"]
+            frac = t["compute_s"] / max(tot, 1e-30)
+            u = r.get("useful_compute_ratio")
+            dyn = (" (per-round)" if r["per_device"].get("has_dynamic_loops")
+                   else "")
+            print(f"| {arch} | {shape}{dyn} | {t['compute_s']:.3e} "
+                  f"| {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+                  f"| {t['dominant'].replace('_s','')} "
+                  f"| {f'{u:.2f}' if u else '-'} | {frac:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

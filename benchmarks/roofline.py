@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and the roofline
+fraction bound_term / sum_terms (how close the dominant term is to being
+the whole step — the optimizable headroom indicator).
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = load_records()
+    print("name,us_per_call,derived")
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['shape']}/" \
+              f"{'pod2' if r.get('multi_pod') else 'pod1'}"
+        if "skipped" in r:
+            print(f"{tag},0.0,SKIP:{r['skipped'][:60]}")
+            continue
+        if not r.get("ok"):
+            print(f"{tag},0.0,FAIL:{r.get('error', '')[:80]}")
+            continue
+        if "roofline" not in r:   # e.g. the pipeline proof cell
+            print(f"{tag},0.0,ok-no-roofline")
+            continue
+        t = r["roofline"]
+        total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        frac = t["compute_s"] / max(total, 1e-30)
+        ucr = r.get("useful_compute_ratio")
+        print(f"{tag},{r.get('compile_s', 0) * 1e6:.0f},"
+              f"comp={t['compute_s']:.3e};mem={t['memory_s']:.3e};"
+              f"coll={t['collective_s']:.3e};dom={t['dominant']};"
+              f"mfu_bound={frac:.3f}"
+              + (f";useful={ucr:.2f}" if ucr else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.apps.bfs import bfs
+from repro.apps.sssp import sssp
+from repro.apps.pagerank import pagerank
+
+__all__ = ["bfs", "sssp", "pagerank"]

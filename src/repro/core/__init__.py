@@ -1,0 +1,13 @@
+"""The paper's primary contribution: RPVO/Rhizome partitioning, the
+diffusive execution engine, LCO synchronization, and the AM-CCA models."""
+from repro.core.partition import PartitionConfig, Partition, build_partition
+from repro.core.actions import Semiring, BFS, SSSP, PAGERANK, SEMIRINGS
+from repro.core.lco import AndGate, Future, and_gate_tree
+from repro.core import engine
+
+__all__ = [
+    "PartitionConfig", "Partition", "build_partition",
+    "Semiring", "BFS", "SSSP", "PAGERANK", "SEMIRINGS",
+    "AndGate", "Future", "and_gate_tree",
+    "engine",
+]

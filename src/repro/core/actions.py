@@ -1,0 +1,72 @@
+"""Action vocabulary (paper §5): an action = (predicate, work, diffuse).
+
+The TPU engine executes actions in bulk as semiring relaxation steps; the
+``Semiring`` here is the algebra of one action class:
+
+* ``relax(src_val, w)``   — message payload built during *diffuse*.
+* ``combine``             — how the inbox merges (min for BFS/SSSP, + for PR).
+* ``improved(new, old)``  — the *predicate*: does this action perform work?
+  (False ⇒ the action — and its diffusion — is pruned, Listing 6.)
+
+``identity`` is the value of a pruned/padded message, so pruning is a
+select, never a data-dependent shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax.numpy as jnp
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    identity: float                       # combine identity
+    combine: typing.Callable              # (a, b) -> a⊕b, elementwise
+    relax: typing.Callable                # (src_val, w) -> msg
+    improved: typing.Callable             # (new, old) -> bool  (the predicate)
+    segment: str                          # 'min' | 'sum' — inbox reduction kind
+
+    def segment_combine(self, data, segment_ids, num_segments):
+        """Inbox reduction. Empty segments get the combine identity."""
+        init = jnp.full((num_segments,), self.identity, data.dtype)
+        if self.segment == "min":
+            return init.at[segment_ids].min(data, indices_are_sorted=True)
+        if self.segment == "sum":
+            return init.at[segment_ids].add(data, indices_are_sorted=True)
+        raise ValueError(self.segment)
+
+
+# BFS: level relaxation. msg = src_level + 1 (weights forced to 1).
+BFS = Semiring(
+    name="bfs",
+    identity=jnp.inf,
+    combine=jnp.minimum,
+    relax=lambda v, w: v + 1.0,
+    improved=lambda new, old: new < old,
+    segment="min",
+)
+
+# SSSP: min-plus.
+SSSP = Semiring(
+    name="sssp",
+    identity=jnp.inf,
+    combine=jnp.minimum,
+    relax=lambda v, w: v + w,
+    improved=lambda new, old: new < old,
+    segment="min",
+)
+
+# PageRank: plus-times; edge weight is pre-folded to 1/out_deg(src).
+PAGERANK = Semiring(
+    name="pagerank",
+    identity=0.0,
+    combine=lambda a, b: a + b,
+    relax=lambda v, w: v * w,
+    improved=lambda new, old: jnp.full(new.shape, True),
+    segment="sum",
+)
+
+SEMIRINGS = {s.name: s for s in (BFS, SSSP, PAGERANK)}

@@ -1,0 +1,287 @@
+"""Vectorized cycle-level AM-CCA simulator (paper §6.1 methodology).
+
+Models a chip of X×Y compute cells on a Mesh or Torus-Mesh NoC:
+
+* one message traverses one hop per cycle (256-bit channels, single-flit
+  messages), XY dimension-order routing, one message per (CC, direction)
+  per cycle — extra claimants stall and are counted as *contention*;
+* per-CC injection of one staged message per cycle (a CC either computes
+  or stages a message);
+* **throttling** (Eq. 2): a CC that saw contention on its links halts
+  injection for ``T = hypot(dim_x, dim_y)`` cycles (halved on torus);
+* **dual queues / lazy diffuse**: staged diffusions carry their own
+  predicate and are re-checked at injection time — stale diffusions are
+  pruned (Fig 6);
+* rhizome-link sibling broadcasts and root→ghost relay latency are
+  modeled as messages / injection delays.
+
+Supports min-semiring applications (BFS, SSSP). Small-scale by design —
+the analytic model (`repro.core.costmodel`) covers large runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import Partition
+
+# --- energy constants (7nm, paper §6.1 energy cost model; pJ) -------------
+E_HOP_PJ = 15.0        # one 256-bit flit across one NoC hop (mesh)
+TORUS_HOP_FACTOR = 1.5 # torus consumes 50% more NoC resources [22]
+E_ACTION_PJ = 25.0     # predicate + work: few integer ops + SRAM access
+E_SRAM_PJ = 6.0        # 64-bit SRAM access [31]
+E_LEAK_PJ_PER_CC_CYCLE = 0.05
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    messages_injected: int
+    hops_total: int
+    actions_executed: int       # messages delivered (predicate evaluated)
+    work_actions: int           # predicate fired -> work performed
+    diffusions_staged: int
+    diffusions_pruned: int      # pruned at injection time (lazy diffuse)
+    contention_stall_cycles: int
+    link_contention: np.ndarray  # (S, 4) stalls per (cc, direction)
+    max_inflight: int
+    energy_pj: float
+    values: np.ndarray           # final per-slot values (S*R_max,)
+
+
+def _xy_next_hop(cx, cy, dxs, dys, X, Y, torus):
+    """XY routing: move in x first, then y. Returns (nx, ny, direction).
+    Directions: 0=E,1=W,2=N,3=S."""
+    gox = cx != dxs
+    if torus:
+        right = ((dxs - cx) % X) <= ((cx - dxs) % X)
+        up = ((dys - cy) % Y) <= ((cy - dys) % Y)
+    else:
+        right = dxs > cx
+        up = dys > cy
+    stepx = np.where(right, 1, -1)
+    stepy = np.where(up, 1, -1)
+    nx = np.where(gox, (cx + stepx) % X if torus else cx + stepx, cx)
+    ny = np.where(gox, cy, (cy + stepy) % Y if torus else cy + stepy)
+    direction = np.where(gox, np.where(right, 0, 1), np.where(up, 2, 3))
+    return nx, ny, direction
+
+
+class AmccaSim:
+    def __init__(self, part: Partition, torus: bool = True, seed: int = 0):
+        self.part = part
+        self.X, self.Y = part.cfg.dims()
+        self.torus = torus
+        self.S = part.S
+        self.R_max = part.R_max
+        self.rng = np.random.default_rng(seed)
+        # Eq. 2 throttling period
+        t = float(np.hypot(self.X, self.Y))
+        self.throttle_T = int(np.ceil(t / 2 if torus else t))
+
+        # flatten edges: for each vertex, its out-edges with owner cc + dst
+        mask = part.edge_mask.reshape(-1)
+        self.e_src = part.edge_src_vertex.reshape(-1)[mask]
+        self.e_dst_flat = part.edge_dst_flat.reshape(-1)[mask]
+        self.e_w = part.edge_w.reshape(-1)[mask]
+        self.e_owner = part.edge_owner_cc.reshape(-1)[mask]
+        order = np.argsort(self.e_src, kind="stable")
+        self.e_src = self.e_src[order]
+        self.e_dst_flat = self.e_dst_flat[order]
+        self.e_w = self.e_w[order]
+        self.e_owner = self.e_owner[order]
+        self.v_ptr = np.zeros(part.n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(self.e_src, minlength=part.n), out=self.v_ptr[1:])
+
+    def _cc_xy(self, cc):
+        return cc % self.X, cc // self.X
+
+    def _dist(self, a, b):
+        ax, ay = self._cc_xy(a)
+        bx, by = self._cc_xy(b)
+        dx = np.abs(ax - bx)
+        dy = np.abs(ay - by)
+        if self.torus:
+            dx = np.minimum(dx, self.X - dx)
+            dy = np.minimum(dy, self.Y - dy)
+        return dx + dy
+
+    def run_min_app(self, sources: dict[int, float], weights: bool,
+                    max_cycles: int = 200_000, throttle: bool = True) -> SimResult:
+        """BFS (weights=False: msg=val+1) or SSSP (weights=True: msg=val+w)."""
+        part = self.part
+        S, R_max = self.S, self.R_max
+        val = np.full(S * R_max, np.inf, dtype=np.float64)
+        best_diffused = np.full(part.n, np.inf)  # diffusion predicate state
+
+        # staged outbox entries (lazy diffuse queue, one per message)
+        ob_cc = np.zeros(0, np.int64)      # owner cc staging the message
+        ob_dst = np.zeros(0, np.int64)     # dst flat slot
+        ob_val = np.zeros(0, np.float64)   # payload
+        ob_vertex = np.zeros(0, np.int64)  # diffusing vertex (for pruning)
+        ob_stamp = np.zeros(0, np.float64) # level/dist at staging time
+        ob_ready = np.zeros(0, np.int64)   # cycle at which injectable
+
+        # in-flight messages
+        fl_x = np.zeros(0, np.int64)
+        fl_y = np.zeros(0, np.int64)
+        fl_dst = np.zeros(0, np.int64)
+        fl_val = np.zeros(0, np.float64)
+
+        stats = dict(inj=0, hops=0, act=0, work=0, staged=0, pruned=0,
+                     stall=0, maxfl=0)
+        link_cont = np.zeros((S, 4), dtype=np.int64)
+        throttle_until = np.zeros(S, dtype=np.int64)
+
+        def stage_diffusion(vertices, vals, now):
+            nonlocal ob_cc, ob_dst, ob_val, ob_vertex, ob_stamp, ob_ready
+            for v, x in zip(vertices, vals):
+                lo, hi = self.v_ptr[v], self.v_ptr[v + 1]
+                if hi == lo:
+                    continue
+                owners = self.e_owner[lo:hi]
+                root_cc = int(part.root_flat[v]) // R_max
+                relay = self._dist(np.full(owners.shape, root_cc), owners)
+                msg = x + (self.e_w[lo:hi] if weights
+                           else np.ones(int(hi - lo)))
+                ob_cc = np.concatenate([ob_cc, owners])
+                ob_dst = np.concatenate([ob_dst, self.e_dst_flat[lo:hi]])
+                ob_val = np.concatenate([ob_val, msg])
+                ob_vertex = np.concatenate([ob_vertex, np.full(owners.shape, v)])
+                ob_stamp = np.concatenate([ob_stamp, np.full(owners.shape, x)])
+                ob_ready = np.concatenate([ob_ready, now + relay])
+                stats["staged"] += int(hi - lo)
+
+        # germinate: sources' root slots perform work and diffuse
+        for v, x in sources.items():
+            for k in range(part.cfg.rpvo_max):
+                s0, sl0 = divmod(int(part.root_flat[v]), R_max)
+                if part.sibling_mask[s0, sl0, k]:
+                    f = int(part.sibling_flat[s0, sl0, k])
+                    val[f] = x
+            best_diffused[v] = x
+            stage_diffusion([v], [x], now=0)
+
+        cycle = 0
+        contended_prev = np.zeros(S, dtype=bool)
+        while cycle < max_cycles and (fl_x.size or ob_cc.size):
+            cycle += 1
+            # ---- injection: one staged message per CC per cycle ----------
+            if ob_cc.size:
+                # lazy-diffuse pruning: drop stale diffusions (Listing 6)
+                live = ob_stamp <= best_diffused[ob_vertex] + 1e-12
+                stats["pruned"] += int((~live).sum())
+                ob_cc, ob_dst, ob_val = ob_cc[live], ob_dst[live], ob_val[live]
+                ob_vertex, ob_stamp, ob_ready = (
+                    ob_vertex[live], ob_stamp[live], ob_ready[live])
+            if ob_cc.size:
+                ready = ob_ready <= cycle
+                if throttle:
+                    ready &= throttle_until[ob_cc] <= cycle
+                idx = np.nonzero(ready)[0]
+                if idx.size:
+                    # first ready entry per CC wins this cycle
+                    _, first = np.unique(ob_cc[idx], return_index=True)
+                    take = idx[first]
+                    # messages to slots on the same CC are delivered locally
+                    fl_x = np.concatenate([fl_x, ob_cc[take] % self.X])
+                    fl_y = np.concatenate([fl_y, ob_cc[take] // self.X])
+                    fl_dst = np.concatenate([fl_dst, ob_dst[take]])
+                    fl_val = np.concatenate([fl_val, ob_val[take]])
+                    stats["inj"] += int(take.size)
+                    keep = np.ones(ob_cc.size, dtype=bool)
+                    keep[take] = False
+                    ob_cc, ob_dst, ob_val = ob_cc[keep], ob_dst[keep], ob_val[keep]
+                    ob_vertex, ob_stamp, ob_ready = (
+                        ob_vertex[keep], ob_stamp[keep], ob_ready[keep])
+
+            stats["maxfl"] = max(stats["maxfl"], int(fl_x.size))
+
+            # ---- network hop: one message per (cc, direction) ------------
+            if fl_x.size:
+                dcc = fl_dst // R_max
+                dxs, dys = dcc % self.X, dcc // self.X
+                at_dst = (fl_x == dxs) & (fl_y == dys)
+                move = ~at_dst
+                nx, ny, ddir = _xy_next_hop(fl_x, fl_y, dxs, dys,
+                                            self.X, self.Y, self.torus)
+                cur_cc = fl_y * self.X + fl_x
+                key = cur_cc * 4 + ddir
+                win = np.zeros(fl_x.size, dtype=bool)
+                mi = np.nonzero(move)[0]
+                if mi.size:
+                    _, first = np.unique(key[mi], return_index=True)
+                    win[mi[first]] = True
+                    stalled = move & ~win
+                    stats["stall"] += int(stalled.sum())
+                    np.add.at(link_cont, (cur_cc[stalled], ddir[stalled]), 1)
+                    # mark CCs with contended links for throttling
+                    if throttle:
+                        cs = np.unique(cur_cc[stalled])
+                        throttle_until[cs] = cycle + self.throttle_T
+                fl_x = np.where(win, nx, fl_x)
+                fl_y = np.where(win, ny, fl_y)
+                stats["hops"] += int(win.sum())
+
+                # ---- arrivals: predicate + work + diffuse -----------------
+                arr = at_dst
+                if arr.any():
+                    slots = fl_dst[arr]
+                    vals = fl_val[arr]
+                    stats["act"] += int(arr.sum())
+                    old = val.copy()
+                    np.minimum.at(val, slots, vals)
+                    improved_slots = np.unique(slots[vals < old[slots]])
+                    improved_slots = improved_slots[
+                        val[improved_slots] < old[improved_slots]]
+                    stats["work"] += int(improved_slots.size)
+                    if improved_slots.size:
+                        sh = improved_slots // R_max
+                        sl = improved_slots % R_max
+                        verts = part.slot_vertex[sh, sl]
+                        # rhizome-link sibling broadcast (collapse bcast)
+                        sib = part.sibling_flat[sh, sl]
+                        sibm = part.sibling_mask[sh, sl]
+                        bvals = np.repeat(val[improved_slots],
+                                          sib.shape[1])[sibm.reshape(-1)]
+                        bdst = sib.reshape(-1)[sibm.reshape(-1)]
+                        self_m = bdst != np.repeat(improved_slots,
+                                                   sib.shape[1])[sibm.reshape(-1)]
+                        owners = improved_slots // R_max
+                        bcc = np.repeat(owners, sib.shape[1])[sibm.reshape(-1)]
+                        ob_cc = np.concatenate([ob_cc, bcc[self_m]])
+                        ob_dst = np.concatenate([ob_dst, bdst[self_m]])
+                        ob_val = np.concatenate([ob_val, bvals[self_m]])
+                        ob_vertex = np.concatenate(
+                            [ob_vertex,
+                             np.repeat(verts, sib.shape[1])[sibm.reshape(-1)][self_m]])
+                        ob_stamp = np.concatenate([ob_stamp, bvals[self_m]])
+                        ob_ready = np.concatenate(
+                            [ob_ready, np.full(self_m.sum(), cycle)])
+                        # diffuse along out-edges, gated by best_diffused
+                        newv = val[improved_slots]
+                        gate = newv < best_diffused[verts] - 1e-12
+                        dverts = verts[gate]
+                        dvals = newv[gate]
+                        best_diffused[dverts] = np.minimum(
+                            best_diffused[dverts], dvals)
+                        stage_diffusion(dverts, dvals, now=cycle)
+                    fl_x, fl_y = fl_x[~arr], fl_y[~arr]
+                    fl_dst, fl_val = fl_dst[~arr], fl_val[~arr]
+
+            contended_prev = link_cont.sum(axis=1) > 0
+
+        hop_e = E_HOP_PJ * (TORUS_HOP_FACTOR if self.torus else 1.0)
+        energy = (stats["hops"] * hop_e
+                  + stats["act"] * (E_ACTION_PJ + 2 * E_SRAM_PJ)
+                  + cycle * self.S * E_LEAK_PJ_PER_CC_CYCLE)
+        return SimResult(
+            cycles=cycle, messages_injected=stats["inj"],
+            hops_total=stats["hops"], actions_executed=stats["act"],
+            work_actions=stats["work"], diffusions_staged=stats["staged"],
+            diffusions_pruned=stats["pruned"],
+            contention_stall_cycles=stats["stall"],
+            link_contention=link_cont, max_inflight=stats["maxfl"],
+            energy_pj=float(energy), values=val,
+        )

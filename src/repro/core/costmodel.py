@@ -1,0 +1,187 @@
+"""Analytic AM-CCA cost model for large graphs (paper Figs 7–10).
+
+Replays a reference execution trace (per-round active vertices from
+``repro.graph.reference``) against a Partition and estimates, without
+simulating individual cycles:
+
+* per-round message counts (diffusions + rhizome sibling broadcasts +
+  root→ghost relays),
+* per-link loads under XY dimension-order routing (difference arrays over
+  row/column link segments → Fig 9 contention histograms),
+* time-to-solution ≈ Σ_rounds max(serialization bounds): peak link load,
+  peak CC injection, peak CC arrival, mean distance,
+* energy per the §6.1 model (hop/action/SRAM/leakage terms; torus hops
+  cost 1.5×).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import Partition
+from repro.core.amcca_sim import (
+    E_ACTION_PJ, E_HOP_PJ, E_LEAK_PJ_PER_CC_CYCLE, E_SRAM_PJ, TORUS_HOP_FACTOR,
+)
+
+
+@dataclasses.dataclass
+class CostResult:
+    cycles: float
+    energy_pj: float
+    messages: int
+    hops: int
+    rounds: int
+    max_link_load: int
+    link_loads: np.ndarray      # (num_h_links + num_v_links,)
+    cc_arrivals: np.ndarray     # (S,)
+    per_round_cycles: list
+
+
+class CostModel:
+    def __init__(self, part: Partition, torus: bool = True):
+        self.part = part
+        self.X, self.Y = part.cfg.dims()
+        self.torus = torus
+        self.S = part.S
+        R_max = part.R_max
+
+        mask = part.edge_mask.reshape(-1)
+        self.e_src = part.edge_src_vertex.reshape(-1)[mask]
+        e_dst_flat = part.edge_dst_flat.reshape(-1)[mask]
+        self.e_owner = part.edge_owner_cc.reshape(-1)[mask]
+        self.e_dst_cc = e_dst_flat // R_max
+        order = np.argsort(self.e_src, kind="stable")
+        for name in ("e_src", "e_owner", "e_dst_cc"):
+            setattr(self, name, getattr(self, name)[order])
+        self.v_ptr = np.zeros(part.n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(self.e_src, minlength=part.n), out=self.v_ptr[1:])
+
+        # per-vertex rhizome fan (sibling shards) and root cc
+        self.root_cc = part.root_flat // R_max
+        sib_sh = np.where(part.sibling_mask, part.sibling_flat // R_max, -1)
+        self.slot_sib_shards = sib_sh  # (S, R_max, K)
+
+    # ----- geometry -------------------------------------------------------
+    def _xy(self, cc):
+        return cc % self.X, cc // self.X
+
+    def dist(self, a, b):
+        ax, ay = self._xy(a)
+        bx, by = self._xy(b)
+        dx, dy = np.abs(ax - bx), np.abs(ay - by)
+        if self.torus:
+            dx = np.minimum(dx, self.X - dx)
+            dy = np.minimum(dy, self.Y - dy)
+        return dx + dy
+
+    def _accumulate_links(self, src_cc, dst_cc, h_diff, v_diff):
+        """XY routing: horizontal segment in the source row, then vertical
+        segment in the destination column — O(msgs) difference updates."""
+        sx, sy = self._xy(src_cc)
+        dx, dy = self._xy(dst_cc)
+        X, Y = self.X, self.Y
+        if self.torus:
+            right = ((dx - sx) % X) <= ((sx - dx) % X)
+            lo = np.where(right, sx, dx)
+            hi = np.where(right, dx, sx)
+            wrap = np.where(right, (dx - sx) % X, (sx - dx) % X) != (hi - lo)
+        else:
+            lo, hi = np.minimum(sx, dx), np.maximum(sx, dx)
+            wrap = np.zeros(sx.shape, dtype=bool)
+        # horizontal links in row sy: link i = (i -> i+1). non-wrap: [lo,hi)
+        nw = ~wrap
+        np.add.at(h_diff, (sy[nw], lo[nw]), 1)
+        np.add.at(h_diff, (sy[nw], hi[nw]), -1)
+        if wrap.any():  # wrap-around uses [hi, X) and [0, lo)
+            np.add.at(h_diff, (sy[wrap], hi[wrap]), 1)
+            np.add.at(h_diff, (sy[wrap], np.full(wrap.sum(), X)), -1)
+            np.add.at(h_diff, (sy[wrap], np.zeros(wrap.sum(), np.int64)), 1)
+            np.add.at(h_diff, (sy[wrap], lo[wrap]), -1)
+        if self.torus:
+            up = ((dy - sy) % Y) <= ((sy - dy) % Y)
+            lo2 = np.where(up, sy, dy)
+            hi2 = np.where(up, dy, sy)
+            wrap2 = np.where(up, (dy - sy) % Y, (sy - dy) % Y) != (hi2 - lo2)
+        else:
+            lo2, hi2 = np.minimum(sy, dy), np.maximum(sy, dy)
+            wrap2 = np.zeros(sy.shape, dtype=bool)
+        nw2 = ~wrap2
+        np.add.at(v_diff, (dx[nw2], lo2[nw2]), 1)
+        np.add.at(v_diff, (dx[nw2], hi2[nw2]), -1)
+        if wrap2.any():
+            np.add.at(v_diff, (dx[wrap2], hi2[wrap2]), 1)
+            np.add.at(v_diff, (dx[wrap2], np.full(wrap2.sum(), Y)), -1)
+            np.add.at(v_diff, (dx[wrap2], np.zeros(wrap2.sum(), np.int64)), 1)
+            np.add.at(v_diff, (dx[wrap2], lo2[wrap2]), -1)
+
+    # ----- replay ---------------------------------------------------------
+    def replay(self, trace: list[np.ndarray]) -> CostResult:
+        part = self.part
+        h_diff = np.zeros((self.Y, self.X + 1), dtype=np.int64)
+        v_diff = np.zeros((self.X, self.Y + 1), dtype=np.int64)
+        cc_arr = np.zeros(self.S, dtype=np.int64)
+        msgs = hops = 0
+        per_round = []
+        actions = 0
+        for f in trace:
+            f = np.asarray(f, dtype=np.int64)
+            if f.size == 0:
+                continue
+            # out-edge diffusions of the active vertices
+            segs = [np.arange(self.v_ptr[v], self.v_ptr[v + 1]) for v in f]
+            eidx = np.concatenate(segs) if segs else np.zeros(0, np.int64)
+            src_cc = self.e_owner[eidx]
+            dst_cc = self.e_dst_cc[eidx]
+            # root -> ghost relay messages
+            relay_src = self.root_cc[self.e_src[eidx]]
+            relay_dst = src_cc
+            # rhizome sibling broadcasts: root -> each sibling replica shard
+            r_cc = self.root_cc[f]
+            nrep = part.num_replicas[f]
+            fan = np.maximum(nrep - 1, 0)
+            bc_src = np.repeat(r_cc, fan)
+            sib = self.slot_sib_shards[
+                self.root_cc[f], part.root_flat[f] % part.R_max]
+            bc_dst_all = []
+            for i, v in enumerate(f):
+                shards = sib[i][sib[i] >= 0]
+                bc_dst_all.append(shards[shards != r_cc[i]][: fan[i]])
+            bc_dst = (np.concatenate(bc_dst_all) if bc_dst_all
+                      else np.zeros(0, np.int64))
+            bc_src = bc_src[: bc_dst.size]
+
+            all_src = np.concatenate([src_cc, relay_src, bc_src])
+            all_dst = np.concatenate([dst_cc, relay_dst, bc_dst])
+            d = self.dist(all_src, all_dst)
+            msgs += int(all_src.size)
+            hops += int(d.sum())
+            actions += int(eidx.size)
+            self._accumulate_links(all_src, all_dst, h_diff, v_diff)
+            np.add.at(cc_arr, all_dst, 1)
+
+            inj_load = np.bincount(all_src, minlength=self.S).max()
+            arr_load = np.bincount(all_dst, minlength=self.S).max()
+            hload = np.cumsum(h_diff[:, :-1], axis=1)
+            # round time: serialization bound (one msg/link/cycle, one
+            # injection/CC/cycle, one action/CC/cycle) + pipeline latency
+            per_round.append(float(max(inj_load, arr_load)
+                                   + (d.mean() if d.size else 0.0)))
+
+        h_loads = np.cumsum(h_diff[:, :-1], axis=1).reshape(-1)
+        v_loads = np.cumsum(v_diff[:, :-1], axis=1).reshape(-1)
+        link_loads = np.concatenate([h_loads, v_loads])
+        # congestion bound over the whole run (links are reused across
+        # rounds; the max-link serialization applies globally)
+        cycles = max(float(link_loads.max() if link_loads.size else 0),
+                     sum(per_round))
+        hop_e = E_HOP_PJ * (TORUS_HOP_FACTOR if self.torus else 1.0)
+        energy = (hops * hop_e + actions * (E_ACTION_PJ + 2 * E_SRAM_PJ)
+                  + cycles * self.S * E_LEAK_PJ_PER_CC_CYCLE)
+        return CostResult(
+            cycles=cycles, energy_pj=float(energy), messages=msgs, hops=hops,
+            rounds=len(per_round),
+            max_link_load=int(link_loads.max() if link_loads.size else 0),
+            link_loads=link_loads, cc_arrivals=cc_arr,
+            per_round_cycles=per_round,
+        )

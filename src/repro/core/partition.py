@@ -1,0 +1,347 @@
+"""RPVO + Rhizome partitioning (paper §3, §6.1 "Graph Construction").
+
+Maps a COO graph onto S shards (compute cells in the AM-CCA cost model,
+TPU devices in the JAX engine):
+
+* **RPVO (out-degree)** — each vertex's out-edges are chunked into
+  ``local_edge_list_size`` ghost chunks; chunks are placed by an allocator
+  (home / vicinity / random / balanced).  With ``ghost_alloc="home"`` all
+  chunks stay at the root's shard — the paper's Fig 2a "simple vertex"
+  baseline, whose padded per-shard edge width inflates with out-degree skew.
+* **Rhizome (in-degree)** — Eq. 1: ``cutoff_chunk = indegree_max /
+  rpvo_max``; every ``cutoff_chunk`` in-edges of a vertex are pointed at
+  the next replica (cycling), so a hub's inbox is spread over up to
+  ``rpvo_max`` replica slots on distinct shards.  Replicas are allocated
+  by the *random* allocator (paper §6.1, Fig 4c).
+
+The result is a set of static, padded arrays directly consumable by the
+JAX engine (`repro.core.engine`) and by the AM-CCA cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.graph import COOGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    num_shards: int
+    local_edge_list_size: int = 32
+    rpvo_max: int = 1                 # 1 => plain RPVO (no rhizomes)
+    ghost_alloc: str = "balanced"     # 'home' | 'vicinity' | 'random' | 'balanced'
+    mesh_dims: tuple[int, int] | None = None  # (X, Y); default near-square
+    torus: bool = True
+    seed: int = 0
+
+    def dims(self) -> tuple[int, int]:
+        if self.mesh_dims is not None:
+            assert self.mesh_dims[0] * self.mesh_dims[1] == self.num_shards
+            return self.mesh_dims
+        x = int(np.floor(np.sqrt(self.num_shards)))
+        while self.num_shards % x:
+            x -= 1
+        return (self.num_shards // x, x)
+
+
+@dataclasses.dataclass
+class Partition:
+    """Sharded RPVO/Rhizome layout. ``flat`` replica id = shard * R_max + slot."""
+
+    cfg: PartitionConfig
+    n: int
+    num_edges: int
+    S: int
+    E_max: int                      # padded edges per shard
+    R_max: int                      # padded replica slots per shard
+    num_replicas_total: int
+
+    # --- per-edge, per-shard arrays, all shaped (S, E_max) ---
+    edge_src_root_flat: np.ndarray  # flat id of src vertex's ROOT replica
+    edge_dst_flat: np.ndarray       # flat id of the dst REPLICA this edge feeds
+    edge_w: np.ndarray              # float32 weights
+    edge_mask: np.ndarray           # bool, False on padding
+    edge_src_vertex: np.ndarray     # int32 global src vertex (cost model)
+    edge_dst_vertex: np.ndarray     # int32 global dst vertex (cost model)
+    edge_owner_cc: np.ndarray       # int32 CC owning the ghost chunk (== shard)
+
+    # --- per-slot tables, shaped (S, R_max) ---
+    slot_vertex: np.ndarray         # vertex id of replica at slot (-1 pad)
+    slot_is_root: np.ndarray        # bool
+    sibling_flat: np.ndarray        # (S, R_max, rpvo_max) flat ids of ALL
+    sibling_mask: np.ndarray        # replicas of the slot's vertex (+mask)
+
+    # --- per-vertex tables ---
+    root_flat: np.ndarray           # (n,) flat id of root replica
+    num_replicas: np.ndarray        # (n,)
+    out_deg: np.ndarray             # (n,) int64
+    in_deg: np.ndarray              # (n,) int64
+
+    # --- compact targeted-exchange plan (§Perf; message-driven semantics:
+    #     contributions travel only to the replica's owner shard) ---
+    P_t: int                        # padded distinct-dst slots per (src,tgt)
+    edge_dst_compact: np.ndarray    # (S, E_max) int32 -> [0, S*P_t)
+    inbox_slot_map: np.ndarray      # (S_tgt, S_src, P_t) local slot or R_max
+    R_rz_max: int                   # padded rhizome slots per shard
+    rz_local: np.ndarray            # (S, R_rz_max) local slot ids (R_max pad)
+    rz_sibling_idx: np.ndarray      # (S, R_rz_max, K) global rz-compact ids
+    rz_sibling_mask: np.ndarray     # (S, R_rz_max, K)
+
+    # --- metrics (recorded for roofline / paper figures) ---
+    metrics: dict
+
+    def replica_shards_of(self, v: int) -> list[int]:
+        sib = self.sibling_flat[self.root_flat[v] // self.R_max,
+                                self.root_flat[v] % self.R_max]
+        msk = self.sibling_mask[self.root_flat[v] // self.R_max,
+                                self.root_flat[v] % self.R_max]
+        return sorted({int(f) // self.R_max for f, m in zip(sib, msk) if m})
+
+
+def _vicinity_order(cfg: PartitionConfig) -> np.ndarray:
+    """CC offsets sorted by Manhattan distance from origin (torus-aware)."""
+    X, Y = cfg.dims()
+    xs, ys = np.meshgrid(np.arange(X), np.arange(Y), indexing="ij")
+    dx, dy = xs.ravel(), ys.ravel()
+    if cfg.torus:
+        ddx = np.minimum(dx, X - dx)
+        ddy = np.minimum(dy, Y - dy)
+    else:
+        ddx, ddy = dx, dy
+    order = np.argsort(ddx + ddy, kind="stable")
+    return (dy[order] * X + dx[order]).astype(np.int64)  # cc ids by distance
+
+
+def build_partition(g: COOGraph, cfg: PartitionConfig) -> Partition:
+    rng = np.random.default_rng(cfg.seed)
+    S = cfg.num_shards
+    n, E = g.n, g.num_edges
+    in_deg = g.in_degrees()
+    out_deg = g.out_degrees()
+
+    # ---- 1. root homes: random allocation across the chip (paper §6.1) ----
+    root_shard = rng.integers(0, S, size=n).astype(np.int64)
+
+    # ---- 2. rhizome replicas (Eq. 1) ----
+    indeg_max = max(int(in_deg.max()) if n else 1, 1)
+    cutoff_chunk = max(int(np.ceil(indeg_max / cfg.rpvo_max)), 1)
+    num_replicas = np.minimum(
+        cfg.rpvo_max, np.maximum(1, np.ceil(in_deg / cutoff_chunk).astype(np.int64))
+    )
+    R_total = int(num_replicas.sum())
+    first_rid = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(num_replicas, out=first_rid[1:])
+
+    # replica r of vertex v -> shard: r=0 at root home; r>0 random (paper)
+    rep_vertex = np.repeat(np.arange(n, dtype=np.int64), num_replicas)
+    rep_index = np.arange(R_total, dtype=np.int64) - first_rid[rep_vertex]
+    rep_shard = np.where(
+        rep_index == 0,
+        root_shard[rep_vertex],
+        rng.integers(0, S, size=R_total),
+    ).astype(np.int64)
+
+    # slots: order replicas per shard
+    order = np.argsort(rep_shard, kind="stable")
+    rep_slot = np.zeros(R_total, dtype=np.int64)
+    counts = np.bincount(rep_shard, minlength=S)
+    starts = np.zeros(S + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    rep_slot[order] = np.arange(R_total, dtype=np.int64) - starts[rep_shard[order]]
+    R_max = max(int(counts.max()) if R_total else 1, 1)
+    rep_flat = rep_shard * R_max + rep_slot
+    root_flat = rep_flat[first_rid[:-1]] if n else np.zeros(0, np.int64)
+
+    # ---- 3. in-edge -> replica assignment (cycling every cutoff_chunk) ----
+    dst_order = np.argsort(g.dst, kind="stable")
+    in_rank = np.zeros(E, dtype=np.int64)
+    dst_counts = np.bincount(g.dst, minlength=n)
+    dst_starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(dst_counts, out=dst_starts[1:])
+    in_rank[dst_order] = np.arange(E, dtype=np.int64) - dst_starts[g.dst[dst_order]]
+    dst_rep_index = (in_rank // cutoff_chunk) % np.maximum(num_replicas[g.dst], 1)
+    edge_dst_rid = first_rid[g.dst] + dst_rep_index  # global replica id per edge
+
+    # ---- 4. out-edge chunking (RPVO ghosts) + allocation ----
+    src_order = np.argsort(g.src, kind="stable")
+    out_rank = np.zeros(E, dtype=np.int64)
+    src_counts = np.bincount(g.src, minlength=n)
+    src_starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(src_counts, out=src_starts[1:])
+    out_rank[src_order] = np.arange(E, dtype=np.int64) - src_starts[g.src[src_order]]
+    chunk_of_edge = out_rank // max(cfg.local_edge_list_size, 1)
+
+    # allocate chunks -> shards
+    # chunk key: (src vertex, chunk index); dedupe to one placement per chunk
+    chunk_key = g.src.astype(np.int64) * (E + 1) + chunk_of_edge
+    uniq_keys, chunk_id_of_edge = np.unique(chunk_key, return_inverse=True)
+    n_chunks = uniq_keys.size
+    chunk_vertex = (uniq_keys // (E + 1)).astype(np.int64)
+    chunk_index = (uniq_keys % (E + 1)).astype(np.int64)
+
+    if cfg.ghost_alloc == "home":
+        chunk_shard = root_shard[chunk_vertex]
+    elif cfg.ghost_alloc == "random":
+        chunk_shard = np.where(
+            chunk_index == 0,
+            root_shard[chunk_vertex],
+            rng.integers(0, S, size=n_chunks),
+        )
+    elif cfg.ghost_alloc == "vicinity":
+        vic = _vicinity_order(cfg)
+        win = min(S, 25)  # 5x5 neighborhood of the root CC
+        offs = vic[1 + rng.integers(0, max(win - 1, 1), size=n_chunks)]
+        X, Yd = cfg.dims()
+        hx, hy = root_shard[chunk_vertex] % X, root_shard[chunk_vertex] // X
+        ox, oy = offs % X, offs // X
+        near = ((hy + oy) % Yd) * X + (hx + ox) % X
+        chunk_shard = np.where(chunk_index == 0, root_shard[chunk_vertex], near)
+    elif cfg.ghost_alloc == "balanced":
+        # greedy least-loaded by edges — the TPU-engine default (no NoC
+        # locality to exploit under dense collectives; see DESIGN.md §2)
+        chunk_sizes = np.bincount(chunk_id_of_edge, minlength=n_chunks)
+        load = np.zeros(S, dtype=np.int64)
+        chunk_shard = np.zeros(n_chunks, dtype=np.int64)
+        csort = np.argsort(-chunk_sizes, kind="stable")
+        for c in csort:
+            s = int(np.argmin(load))
+            chunk_shard[c] = s
+            load[s] += chunk_sizes[c]
+    else:
+        raise ValueError(f"unknown ghost_alloc {cfg.ghost_alloc!r}")
+    chunk_shard = chunk_shard.astype(np.int64)
+    edge_shard = chunk_shard[chunk_id_of_edge]
+
+    # ---- 5. per-shard padded edge arrays, sorted by destination flat ----
+    e_counts = np.bincount(edge_shard, minlength=S)
+    E_max = max(int(e_counts.max()) if E else 1, 1)
+
+    def pad2(vals, fill, dtype):
+        outv = np.full((S, E_max), fill, dtype=dtype)
+        return outv
+
+    edge_src_root_flat = pad2(None, 0, np.int64)
+    edge_dst_flat = pad2(None, 0, np.int64)
+    edge_w = np.zeros((S, E_max), dtype=np.float32)
+    edge_mask = np.zeros((S, E_max), dtype=bool)
+    edge_src_vertex = pad2(None, 0, np.int64)
+    edge_dst_vertex = pad2(None, 0, np.int64)
+
+    shard_sort = np.argsort(edge_shard, kind="stable")
+    e_starts = np.zeros(S + 1, dtype=np.int64)
+    np.cumsum(e_counts, out=e_starts[1:])
+    for s in range(S):
+        es = shard_sort[e_starts[s] : e_starts[s + 1]]
+        if es.size == 0:
+            continue
+        dflat = rep_flat[edge_dst_rid[es]]
+        local_order = np.argsort(dflat, kind="stable")
+        es = es[local_order]
+        k = es.size
+        edge_src_root_flat[s, :k] = root_flat[g.src[es]]
+        edge_dst_flat[s, :k] = rep_flat[edge_dst_rid[es]]
+        edge_w[s, :k] = g.weight[es]
+        edge_mask[s, :k] = True
+        edge_src_vertex[s, :k] = g.src[es]
+        edge_dst_vertex[s, :k] = g.dst[es]
+
+    edge_owner_cc = np.broadcast_to(
+        np.arange(S, dtype=np.int64)[:, None], (S, E_max)
+    ).copy()
+
+    # ---- 6. slot tables + rhizome sibling links ----
+    slot_vertex = np.full((S, R_max), -1, dtype=np.int64)
+    slot_is_root = np.zeros((S, R_max), dtype=bool)
+    slot_vertex[rep_shard, rep_slot] = rep_vertex
+    slot_is_root[rep_shard, rep_slot] = rep_index == 0
+
+    sibling_flat = np.zeros((S, R_max, cfg.rpvo_max), dtype=np.int64)
+    sibling_mask = np.zeros((S, R_max, cfg.rpvo_max), dtype=bool)
+    for r in range(cfg.rpvo_max):
+        has = num_replicas[rep_vertex] > r
+        sib_rid = first_rid[rep_vertex] + np.minimum(r, num_replicas[rep_vertex] - 1)
+        sibling_flat[rep_shard, rep_slot, r] = rep_flat[sib_rid]
+        sibling_mask[rep_shard, rep_slot, r] = has
+
+    # ---- 6b. compact targeted-exchange plan ----
+    # distinct destination slots per (source shard, target shard); edges are
+    # already sorted by dst flat, so distinct ranks are contiguous per target
+    per_st_counts = np.zeros((S, S), dtype=np.int64)
+    shard_uniques = []
+    for s in range(S):
+        dst = edge_dst_flat[s][edge_mask[s]]
+        uniq, inv = np.unique(dst, return_inverse=True)
+        shard_uniques.append((uniq, inv))
+        tgt = uniq // R_max
+        cnt = np.bincount(tgt, minlength=S)
+        per_st_counts[s] = cnt
+    P_t = max(int(per_st_counts.max()), 1)
+    edge_dst_compact = np.zeros((S, E_max), dtype=np.int64)
+    inbox_slot_map = np.full((S, S, P_t), R_max, dtype=np.int64)  # pad=R_max
+    for s in range(S):
+        uniq, inv = shard_uniques[s]
+        if uniq.size == 0:
+            continue
+        tgt = uniq // R_max
+        t_starts = np.zeros(S + 1, dtype=np.int64)
+        np.cumsum(np.bincount(tgt, minlength=S), out=t_starts[1:])
+        rank = np.arange(uniq.size) - t_starts[tgt]
+        compact_of_uniq = tgt * P_t + rank
+        edge_dst_compact[s, : inv.size] = compact_of_uniq[inv]
+        inbox_slot_map[tgt, s, rank] = uniq % R_max
+
+    # compact rhizome-collapse tables (only slots with >1 replica collapse)
+    is_rz = sibling_mask.sum(axis=-1) > 1                      # (S, R_max)
+    R_rz_max = max(int(is_rz.sum(axis=1).max()), 1)
+    rz_local = np.full((S, R_rz_max), R_max, dtype=np.int64)
+    rz_compact_of_flat = {}
+    for s in range(S):
+        slots = np.nonzero(is_rz[s])[0]
+        rz_local[s, : slots.size] = slots
+        for k, sl in enumerate(slots):
+            rz_compact_of_flat[s * R_max + sl] = s * R_rz_max + k
+    rz_sibling_idx = np.zeros((S, R_rz_max, cfg.rpvo_max), dtype=np.int64)
+    rz_sibling_mask = np.zeros((S, R_rz_max, cfg.rpvo_max), dtype=bool)
+    for s in range(S):
+        slots = np.nonzero(is_rz[s])[0]
+        for k, sl in enumerate(slots):
+            for r in range(cfg.rpvo_max):
+                if sibling_mask[s, sl, r]:
+                    f = int(sibling_flat[s, sl, r])
+                    rz_sibling_idx[s, k, r] = rz_compact_of_flat.get(f, 0)
+                    rz_sibling_mask[s, k, r] = f in rz_compact_of_flat
+
+    # ---- 7. metrics ----
+    ideal = max(E / S, 1e-9)
+    metrics = {
+        "E_max": E_max,
+        "edge_balance": E_max / ideal,            # 1.0 == perfect
+        "R_max": R_max,
+        "replicas_total": R_total,
+        "replica_overhead": R_total / max(n, 1),
+        "cutoff_chunk": cutoff_chunk,
+        "max_inbox_per_slot": int(
+            np.bincount(edge_dst_rid, minlength=R_total).max() if E else 0
+        ),
+        "shard_edge_counts": e_counts,
+    }
+
+    return Partition(
+        cfg=cfg, n=n, num_edges=E, S=S, E_max=E_max, R_max=R_max,
+        num_replicas_total=R_total,
+        edge_src_root_flat=edge_src_root_flat, edge_dst_flat=edge_dst_flat,
+        edge_w=edge_w, edge_mask=edge_mask,
+        edge_src_vertex=edge_src_vertex, edge_dst_vertex=edge_dst_vertex,
+        edge_owner_cc=edge_owner_cc,
+        slot_vertex=slot_vertex, slot_is_root=slot_is_root,
+        sibling_flat=sibling_flat, sibling_mask=sibling_mask,
+        root_flat=root_flat, num_replicas=num_replicas,
+        out_deg=out_deg, in_deg=in_deg,
+        P_t=P_t, edge_dst_compact=edge_dst_compact,
+        inbox_slot_map=inbox_slot_map,
+        R_rz_max=R_rz_max, rz_local=rz_local,
+        rz_sibling_idx=rz_sibling_idx, rz_sibling_mask=rz_sibling_mask,
+        metrics=metrics,
+    )

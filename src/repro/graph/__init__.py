@@ -1,0 +1,14 @@
+from repro.graph.graph import COOGraph, degree_stats
+from repro.graph.generators import rmat, erdos_renyi, star, ring, ba_skewed
+from repro.graph import reference
+
+__all__ = [
+    "COOGraph",
+    "degree_stats",
+    "rmat",
+    "erdos_renyi",
+    "star",
+    "ring",
+    "ba_skewed",
+    "reference",
+]

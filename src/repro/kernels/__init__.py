@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+``rhizome_segment_reduce`` — blocked semiring segment reduction (the
+per-shard inbox collapse). ``ops`` holds the jit'd wrappers, ``ref`` the
+pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,22 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on a real TPU backend the
+same ``pallas_call`` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rhizome_segment_reduce import segment_combine_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def segment_combine(data, segment_ids, num_segments: int, kind: str):
+    """Semiring segment reduction (min | sum) over edge messages."""
+    return segment_combine_pallas(
+        data, segment_ids, num_segments, kind, interpret=_interpret()
+    )

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Semantics contract (shared by kernel, oracle, and the engine):
+empty segments hold the combine identity (+inf for min, 0 for sum).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_combine_ref(data, segment_ids, num_segments: int, kind: str):
+    """Semiring segment reduction: the inbox partial-reduce of one shard.
+
+    data: (E,) float; segment_ids: (E,) int32 in [0, num_segments);
+    returns (num_segments,) float.
+    """
+    if kind == "min":
+        init = jnp.full((num_segments,), jnp.inf, data.dtype)
+        return init.at[segment_ids].min(data)
+    if kind == "sum":
+        init = jnp.zeros((num_segments,), data.dtype)
+        return init.at[segment_ids].add(data)
+    raise ValueError(kind)
+
+
+def frontier_relax_ref(values, src_flat, weights, mask, kind: str):
+    """Gather + relax: msg_e = values[src_e] (+ w_e | * w_e), masked to the
+    semiring identity. values: (V,), src_flat/weights/mask: (E,)."""
+    v = values[src_flat]
+    if kind == "min":  # min-plus relax
+        msg = v + weights
+        return jnp.where(mask, msg, jnp.inf)
+    if kind == "sum":  # plus-times relax
+        msg = v * weights
+        return jnp.where(mask, msg, 0.0)
+    raise ValueError(kind)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blocked semiring segment reduction.
+
+The compute hot-spot of the diffusive engine is the per-shard inbox
+reduction: E_max edge messages collapse into R replica slots
+(min for BFS/SSSP, + for PageRank). On GPU this is an atomic scatter;
+TPU has no fast scatter, so we re-block it for the MXU/VPU
+(hardware adaptation — DESIGN.md §2):
+
+* the edge axis is tiled into ``EBLK`` chunks and the segment axis into
+  ``SBLK`` blocks (both MXU-aligned multiples of 128);
+* grid cell (i, j) builds an (EBLK × SBLK) hit mask
+  ``ids == seg_base + col`` and reduces over edges:
+  - sum: one-hot **matmul** ``hitᵀ @ msg`` — runs on the MXU systolic
+    array, the TPU-native scatter-free reduction;
+  - min: masked ``min`` over the edge axis — a VPU reduction;
+* the output block for segment block *i* is revisited across all *j*
+  edge chunks and accumulated in place (VMEM-resident);
+* because the engine sorts edges by destination, each edge chunk touches
+  a narrow segment range: a scalar-prefetched per-chunk [lo, hi) id range
+  lets grid cells **skip** non-intersecting (i, j) pairs entirely — the
+  sorted-CSR sparsity exploited without dynamic shapes.
+
+Weak-typed, f32/bf16. Validated against ``ref.segment_combine_ref`` in
+interpret mode (CPU); compiled path targets TPU VMEM via BlockSpecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EBLK = 512   # edge-axis tile
+SBLK = 256   # segment-axis tile (lane-aligned)
+
+
+def _kernel(chunk_lo_ref, chunk_hi_ref, ids_ref, msg_ref, out_ref, *, kind):
+    i = pl.program_id(0)  # segment block
+    j = pl.program_id(1)  # edge chunk
+
+    identity = jnp.inf if kind == "min" else 0.0
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full((SBLK,), identity, out_ref.dtype)
+
+    seg0 = i * SBLK
+    # sorted-edges block skip: chunk j covers ids [chunk_lo[j], chunk_hi[j]]
+    intersects = (chunk_hi_ref[j] >= seg0) & (chunk_lo_ref[j] < seg0 + SBLK)
+
+    @pl.when(intersects)
+    def _compute():
+        ids = ids_ref[...]                      # (EBLK,) int32
+        msg = msg_ref[...]                      # (EBLK,)
+        local = ids - seg0
+        cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
+        hit = local[:, None] == cols            # (EBLK, SBLK)
+        if kind == "sum":
+            # one-hot matmul -> MXU systolic reduction
+            contrib = jnp.dot(
+                hit.astype(msg.dtype).T, msg,
+                preferred_element_type=jnp.float32,
+            ).astype(out_ref.dtype)
+            out_ref[...] += contrib
+        else:
+            padded = jnp.where(hit, msg[:, None], jnp.asarray(identity, msg.dtype))
+            contrib = jnp.min(padded, axis=0)   # VPU reduction over edges
+            out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "kind", "interpret"))
+def segment_combine_pallas(data, segment_ids, num_segments: int, kind: str,
+                           interpret: bool = True):
+    """Blocked semiring segment reduce. data: (E,), ids: (E,) sorted or not;
+    returns (num_segments,). Padding edges must carry id 0 with identity data
+    or any id with identity data (identity never changes a reduction)."""
+    e = data.shape[0]
+    e_pad = -(-e // EBLK) * EBLK
+    s_pad = -(-num_segments // SBLK) * SBLK
+    identity = jnp.inf if kind == "min" else 0.0
+    data_p = jnp.full((e_pad,), identity, data.dtype).at[:e].set(data)
+    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        segment_ids.astype(jnp.int32))
+
+    # per-chunk id ranges for the sorted-skip (scalar-prefetch operands)
+    idc = ids_p.reshape(e_pad // EBLK, EBLK)
+    mask = (jnp.arange(e_pad) < e).reshape(e_pad // EBLK, EBLK)
+    chunk_lo = jnp.where(mask, idc, jnp.iinfo(jnp.int32).max).min(axis=1)
+    chunk_hi = jnp.where(mask, idc, -1).max(axis=1)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((EBLK,), lambda i, j, lo, hi: (j,)),
+                pl.BlockSpec((EBLK,), lambda i, j, lo, hi: (j,)),
+            ],
+            out_specs=pl.BlockSpec((SBLK,), lambda i, j, lo, hi: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_pad,), data.dtype),
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, ids_p, data_p)
+    return out[:num_segments]

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): 16×16 = 256 chips per pod, 2 pods = 512 chips
+multi-pod. The dry-run forces 512 host devices via XLA_FLAGS before any
+jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.sharding.specs import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py does this) or on a real pod slice")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_ctx(mesh, rules: str = "default") -> ShardCtx:
+    """Bind the ruleset's dp/tp roles to this mesh's axes."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = ("model",) if "model" in names else ()
+    return ShardCtx(mesh=mesh, rules=rules, dp=dp, tp=tp)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

@@ -1,0 +1,305 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (+KV cache,
+online-softmax chunking for long sequences), MLP variants, embeddings.
+
+Parameter convention: init fns return a pytree whose leaves are
+``Leaf(value, axes)`` — a weight plus its logical sharding axes.
+``split_tree`` separates (params, axes) once per model; apply fns consume
+plain arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.specs import ShardCtx, constrain
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: jax.Array
+    axes: tuple
+
+
+def split_tree(tree):
+    is_leaf = lambda x: isinstance(x, Leaf)
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def dense_init(key, shape, axes, dtype, fan_in: int | None = None, scale=1.0):
+    fan = fan_in if fan_in is not None else shape[0]
+    w = jax.random.normal(key, shape, jnp.float32) * (scale / np.sqrt(max(fan, 1)))
+    return Leaf(w.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype):
+    return Leaf(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype):
+    return Leaf(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# norms / positions
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf / nrm) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d, dtype):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+ATTN_CHUNK_THRESHOLD = 8192
+KV_CHUNK = 1024
+
+
+def init_attention(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": dense_init(ks[3], (H, hd, d), ("heads", "head_dim", "embed"),
+                         dtype, fan_in=H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), ("head_dim",), dtype)
+        p["k_norm"] = ones_init((hd,), ("head_dim",), dtype)
+    if cfg.attn_bias:
+        p["bq"] = zeros_init((H, hd), ("heads", "head_dim"), dtype)
+        p["bk"] = zeros_init((KV, hd), ("kv_heads", "head_dim"), dtype)
+        p["bv"] = zeros_init((KV, hd), ("kv_heads", "head_dim"), dtype)
+        p["bo"] = zeros_init((d,), ("embed",), dtype)
+    return p
+
+
+def _plain_attention(q, k, v, mask_fn, q_pos, k_pos, scale):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd). Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                        preferred_element_type=jnp.float32) * scale
+    mask = mask_fn(q_pos[:, None], k_pos[None, :])  # (Sq, Sk)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+
+
+def _chunked_attention(q, k, v, mask_fn, q_pos, k_pos, scale):
+    """Online-softmax over KV chunks: O(Sq·C) live memory (flash pattern)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nc = -(-Sk // KV_CHUNK)
+    pad = nc * KV_CHUNK - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+    kc = k.reshape(B, nc, KV_CHUNK, KV, hd)
+    vc = v.reshape(B, nc, KV_CHUNK, KV, hd)
+    pc = k_pos.reshape(nc, KV_CHUNK)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        kb = jnp.repeat(kb, rep, axis=2)
+        vb = jnp.repeat(vb, rep, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        mask = mask_fn(q_pos[:, None], pb[None, :])
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return jnp.moveaxis(out, 1, 2)  # (B,Sq,H,hd)
+
+
+def apply_attention(p, cfg, x, positions, mask_fn, ctx: ShardCtx | None,
+                    kv_override=None, cache=None, cache_index=None):
+    """x: (B,S,d). mask_fn(q_pos, k_pos)->bool. Returns (out, new_cache).
+
+    kv_override: (xkv, kv_positions) for cross-attention.
+    cache: dict(k=(B,Smax,KV,hd), v=..., len=()) for incremental decode.
+    """
+    B, S, d = x.shape
+    scale = cfg.hd ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    wk, wv, wo = p["wk"], p["wv"], p["wo"]
+    xkv, kv_pos = (x, positions) if kv_override is None else kv_override
+    k = jnp.einsum("bsd,dhk->bshk", xkv, wk)
+    v = jnp.einsum("bsd,dhk->bshk", xkv, wv)
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    q = constrain(q, ("act_batch", None, "act_heads", None), ctx)
+    k = constrain(k, ("act_batch", None, "act_kv_heads", None), ctx)
+
+    new_cache = None
+    if cache is not None:
+        # write this step's K/V at cache_index, attend over the full cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        Smax = ck.shape[1]
+        k_pos_full = jnp.arange(Smax)
+        mask_base = mask_fn
+        # validity from kp itself (works under per-chunk position slices)
+        mask_fn = lambda qp, kp: mask_base(qp, kp) & (kp < cache_index + S)
+        kv_pos = k_pos_full
+
+    Sk = k.shape[1]
+    # §Perf: 'attn_chunked' switches to online-softmax at train lengths too —
+    # the (B,H,Sq,Sk) f32 score tensor never hits HBM (flash pattern)
+    threshold = 1024 if "attn_chunked" in cfg.opts else ATTN_CHUNK_THRESHOLD
+    attn = (_chunked_attention if max(S, Sk) > threshold
+            else _plain_attention)
+    out = attn(q, k.astype(q.dtype), v.astype(q.dtype), mask_fn,
+               positions, kv_pos, scale)
+    out = jnp.einsum("bshk,hkd->bsd", out, wo)
+    if cfg.attn_bias:
+        out = out + p["bo"]
+    return out, new_cache
+
+
+def causal_mask(qp, kp):
+    return kp <= qp
+
+
+def full_mask(qp, kp):
+    return jnp.full(jnp.broadcast_shapes(qp.shape, kp.shape), True)
+
+
+def prefix_lm_mask(prefix_len):
+    def fn(qp, kp):
+        return (kp <= qp) | (kp < prefix_len)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], (d, f), ("embed", "mlp"), dtype),
+            "wg": dense_init(ks[1], (d, f), ("embed", "mlp"), dtype),
+            "wo": dense_init(ks[2], (f, d), ("mlp", "embed"), dtype, fan_in=f),
+        }
+    return {  # relu2 / gelu: non-gated
+        "wi": dense_init(ks[0], (d, f), ("embed", "mlp"), dtype),
+        "wo": dense_init(ks[2], (f, d), ("mlp", "embed"), dtype, fan_in=f),
+    }
+
+
+def apply_mlp(p, cfg, x, ctx: ShardCtx | None):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("act_batch", None, "act_mlp"), ctx)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg, dtype):
+    p = {"table": dense_init(key, (cfg.vocab, cfg.d_model),
+                             ("vocab", "embed"), dtype, fan_in=1)}
+    return p
+
+
+def embed(p, tokens, cfg):
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.family in ("vlm",):  # gemma scales embeddings
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def init_unembed(key, cfg, dtype):
+    if cfg.tie_embeddings:
+        return {}
+    return {"wout": dense_init(key, (cfg.d_model, cfg.vocab),
+                               ("embed", "vocab"), dtype)}
+
+
+def unembed(p, emb_p, x, cfg, ctx):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, emb_p["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["wout"])
+    logits = constrain(logits, ("act_batch", None, "act_vocab"), ctx)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticCoordinator, StragglerMonitor
+
+__all__ = ["ElasticCoordinator", "StragglerMonitor"]

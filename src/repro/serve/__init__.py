@@ -1,0 +1,8 @@
+"""Serving API: batched prefill/decode with sharded caches.
+
+Thin re-exports — the step factories live with the training substrate so
+both share sharding rules; the batched driver is ``repro.launch.serve``.
+"""
+from repro.train.train_step import cache_axes_tree, make_serve_steps
+
+__all__ = ["make_serve_steps", "cache_axes_tree"]

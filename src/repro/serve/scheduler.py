@@ -1,0 +1,130 @@
+"""Continuous-batching serve scheduler.
+
+Fixed-slot batched decoding: a pool of ``n_slots`` sequence slots shares
+one compiled decode step (static shapes). Requests join free slots at any
+step (their prompt is prefilled into the slot's cache region); finished
+sequences (EOS or max-len) free their slot immediately — no
+head-of-line blocking on long generations. Per-slot position indices and
+an active mask keep the single decode_step exact for ragged progress.
+
+This is the serving-side analog of the paper's always-keep-the-cell-busy
+runtime: slots never idle waiting for the longest sequence in a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # prompt ids
+    max_new: int = 16
+    eos_id: int = -1              # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, n_slots: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = model.init_cache(n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)       # next write index
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.last_tok = np.zeros((n_slots, 1), np.int32)
+
+        self._decode = jax.jit(self._decode_step)
+
+    # one shared decode over all slots; per-slot positions via vmapped index
+    def _decode_step(self, params, toks, caches, positions):
+        assert self.model.cfg.family != "enc_dec", "decoder-only for now"
+        axes_tree = _cache_axes(caches)
+
+        def one(tok, cache, pos):
+            # vmap strips the slot axis; the model wants B=1 — reinsert it
+            cache_b = jax.tree.map(
+                lambda c, a: jnp.expand_dims(c, a) if a is not None else c,
+                cache, axes_tree)
+            logits, new_cache = self.model.decode_step(
+                params, tok[None, None], cache_b, pos)
+            new_cache = jax.tree.map(
+                lambda c, a: jnp.squeeze(c, a) if a is not None else c,
+                new_cache, axes_tree)
+            return logits[0], new_cache
+
+        return jax.vmap(one, in_axes=(0, axes_tree, 0),
+                        out_axes=(0, axes_tree))(toks, caches, positions)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                # prefill the slot: single-sequence prefill into slot s
+                sub_cache = jax.tree.map(lambda c: c[:, s : s + 1]
+                                         if c.ndim > 1 else c, self.caches)
+                logits, sub_cache = self.model.prefill(
+                    self.params, {"tokens": jnp.asarray(req.tokens[None])},
+                    sub_cache)
+                self.caches = jax.tree.map(
+                    lambda c, sc: c.at[:, s : s + 1].set(sc)
+                    if c.ndim > 1 else c, self.caches, sub_cache)
+                self.pos[s] = len(req.tokens)
+                self.last_tok[s, 0] = int(jnp.argmax(logits[0, -1]))
+                req.out.append(int(self.last_tok[s, 0]))
+
+    def step(self):
+        """One global decode tick: admit, decode active slots, retire."""
+        self._admit()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return False
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.last_tok[:, 0]), self.caches,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.last_tok[s, 0] = tok
+            if (len(req.out) >= req.max_new or tok == req.eos_id
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[s] = None      # slot freed immediately
+        return True
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return done
+
+
+def _cache_axes(caches):
+    """in_axes pytree mapping the slot/batch dim of each cache leaf."""
+    def ax(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        if names and names[-1] in ("out",):
+            return 0
+        if names and names[-1] == "pos":
+            return None
+        return 1 if leaf.ndim > 1 else None  # (layers, B, ...) -> B axis
+    return jax.tree_util.tree_map_with_path(ax, caches)

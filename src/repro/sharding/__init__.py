@@ -1,0 +1,3 @@
+from repro.sharding.specs import ShardCtx, spec_for, constrain, RULESETS
+
+__all__ = ["ShardCtx", "spec_for", "constrain", "RULESETS"]

@@ -1,0 +1,60 @@
+"""Elastic re-mesh + straggler state machine."""
+import numpy as np
+
+from repro.runtime.elastic import (
+    ElasticCoordinator, StragglerMonitor, viable_mesh_shapes)
+
+
+def test_viable_shapes_keep_model_axis():
+    shapes = viable_mesh_shapes(n_hosts=128, devices_per_host=4,
+                                model_axis=16)
+    assert (2, 16, 16) in shapes
+    assert all(s[2] == 16 for s in shapes)
+
+
+def test_coordinator_detects_death_and_remeshes():
+    c = ElasticCoordinator(n_hosts=128, devices_per_host=4, model_axis=16)
+    need = False
+    for step in range(8):
+        for h in range(128):
+            if h != 17 or step < 2:   # host 17 stops heartbeating at step 2
+                c.heartbeat(h, step)
+        need = need or c.tick(step)
+    assert need  # re-mesh triggered once the heartbeat window expires
+    assert not c.hosts[17].alive
+    shape = c.current_mesh_shape()
+    assert shape is not None
+    # 127 hosts x 4 = 508 devices; largest viable keeps model=16 if divisible
+    assert np.prod(shape) <= 127 * 4
+    assert np.prod(shape) % 16 == 0
+
+
+def test_coordinator_degrades_model_axis_last_resort():
+    c = ElasticCoordinator(n_hosts=3, devices_per_host=1, model_axis=16)
+    c.kill_host(2)
+    shape = c.current_mesh_shape()
+    assert shape is not None and np.prod(shape) == 2
+
+
+def test_straggler_two_stage():
+    m = StragglerMonitor(threshold=1.5, patience=3)
+    for step in range(4):
+        for h in range(8):
+            m.record(h, 1.0 if h != 3 else 3.0)  # host 3 is slow
+        cls = m.classify()
+        if step < 2:
+            assert 3 in cls["bypass"] and 3 not in cls["evict"]
+    assert 3 in cls["evict"]  # escalated after patience
+    assert all(h not in cls["evict"] for h in range(8) if h != 3)
+
+
+def test_straggler_recovery_resets_flags():
+    m = StragglerMonitor(threshold=1.5, patience=3, alpha=1.0)
+    for h in range(4):
+        m.record(h, 1.0 if h != 1 else 5.0)
+    m.classify()
+    for _ in range(3):
+        for h in range(4):
+            m.record(h, 1.0)  # host 1 recovers
+        cls = m.classify()
+    assert cls == {"bypass": [], "evict": []}

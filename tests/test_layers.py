@@ -1,0 +1,93 @@
+"""Layer-level unit + property tests: RoPE, RMSNorm, attention paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import layers as L
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 7.0
+    y = L.rms_norm(x, jnp.ones(32), 1e-6)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(1, 64))
+def test_rope_relative_property(shift):
+    """RoPE: <q_m, k_n> depends only on m-n (relative positions)."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(8), (1, 1, 1, 64))
+    def score(m, n):
+        qm = L.rope(q, jnp.asarray([m])[None], 10000.0)
+        kn = L.rope(k, jnp.asarray([n])[None], 10000.0)
+        return float(jnp.einsum("bshd,bshd->", qm, kn))
+    assert np.isclose(score(5, 5 + shift), score(90, 90 + shift), rtol=1e-4,
+                      atol=1e-5)
+
+
+def test_chunked_attention_equals_plain():
+    """Online-softmax chunked attention == plain attention (the §Perf
+    'attn_chunked' opt is numerics-preserving)."""
+    key = jax.random.PRNGKey(3)
+    B, Sq, Sk, H, hd = 2, 48, 48, 4, 16
+    q = jax.random.normal(key, (B, Sq, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, Sk, 2, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, Sk, 2, hd))
+    qp, kp = jnp.arange(Sq), jnp.arange(Sk)
+    plain = L._plain_attention(q, k, v, L.causal_mask, qp, kp, hd ** -0.5)
+    import repro.models.layers as LL
+    old = LL.KV_CHUNK
+    LL.KV_CHUNK = 16
+    try:
+        chunk = L._chunked_attention(q, k, v, L.causal_mask, qp, kp, hd ** -0.5)
+    finally:
+        LL.KV_CHUNK = old
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(chunk),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_ce_equals_dense():
+    from repro.models.model import Model
+    cfg = get_config("minitron-4b").reduced()
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    loss_d, _ = model.loss(params, batch)
+    cfg_c = dataclasses.replace(cfg, opts=("chunked_ce",))
+    model_c = Model(cfg_c)
+    loss_c, _ = model_c.loss(params, batch)
+    np.testing.assert_allclose(float(loss_d), float(loss_c), rtol=1e-5)
+
+
+def test_prefix_lm_mask():
+    fn = L.prefix_lm_mask(4)
+    qp = jnp.arange(8)[:, None]
+    kp = jnp.arange(8)[None, :]
+    m = np.asarray(fn(qp, kp))
+    assert m[0, 3]          # prefix visible everywhere
+    assert not m[2, 6]      # future suffix hidden
+    assert m[6, 5]          # causal within suffix
+
+
+def test_scan_unroll_preserves_mamba_numerics():
+    import repro.models.ssm as S
+    from repro.models.layers import split_tree
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    params, _ = split_tree(S.init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y0, s0 = S.apply_mamba(params, cfg, x)
+    cfg_u = dataclasses.replace(cfg, opts=("scan_unroll",))
+    y1, s1 = S.apply_mamba(params, cfg_u, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s0["ssm"]), np.asarray(s1["ssm"]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,54 @@
+"""AND-gate LCO semantics (paper §4.1, Fig 3)."""
+import operator
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lco import AndGate, Future, and_gate_tree
+
+
+def test_and_gate_fires_at_n():
+    gate = AndGate(target=3, op=operator.add, identity=0.0)
+    gate, fired, _ = gate.set(1.0)
+    assert not fired
+    gate, fired, _ = gate.set(2.0)
+    assert not fired
+    gate, fired, val = gate.set(3.0)
+    assert fired and val == 6.0
+    # reset after firing: usable again (paper: "the score AND Gate is reset")
+    gate, fired, _ = gate.set(5.0)
+    assert not fired and gate.count == 1
+
+
+def test_and_gate_min_op():
+    gate = AndGate(target=2, op=min, identity=float("inf"))
+    gate, _, _ = gate.set(4.0)
+    _, fired, val = gate.set(2.0)
+    assert fired and val == 2.0
+
+
+def test_future_write_once():
+    f = Future()
+    f2 = f.set(42)
+    assert f2.ready and f2.value == 42
+    with pytest.raises(RuntimeError):
+        f2.set(43)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=40),
+       st.integers(2, 5))
+def test_and_gate_tree_sum(vals, fanin):
+    """Hierarchical counted-trigger reduction == flat reduction (the
+    hardware-signalling termination-detection analog)."""
+    got, depth = and_gate_tree(np.array(vals), operator.add, 0.0, fanin=fanin)
+    np.testing.assert_allclose(got, sum(vals), rtol=1e-9)
+    assert depth <= int(np.ceil(np.log(max(len(vals), 2)) / np.log(fanin))) + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=40))
+def test_and_gate_tree_min(vals):
+    got, _ = and_gate_tree(np.array(vals), min, float("inf"))
+    assert got == min(vals)

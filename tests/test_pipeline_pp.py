@@ -1,0 +1,54 @@
+"""Pipeline parallelism: schedule correctness (== sequential stages) on a
+multi-device mesh, and gradient flow through the ppermutes."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.sharding.pipeline import pipeline_apply
+
+    mesh = Mesh(np.array(jax.devices()[:2]).reshape(2), ("pod",))
+    n_stages, n_micro, mb, d = 2, 4, 3, 8
+
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (n_stages, d, d)) * 0.3
+
+    def stage_fn(wp, x):
+        return jnp.tanh(x @ wp)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+    fn = pipeline_apply(stage_fn, n_stages, n_micro, mesh)
+    got = jax.jit(fn)({"w": w}["w"] if False else w, x)
+
+    # sequential reference
+    ref = x
+    for s in range(n_stages):
+        ref = jnp.tanh(ref @ w[s])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+    # grads flow through ppermute
+    def loss(w):
+        return jnp.sum(fn(w, x) ** 2)
+    g = jax.grad(loss)(w)
+    assert np.isfinite(np.asarray(g)).all() and float(jnp.abs(g).sum()) > 0
+    print("PIPELINE_OK")
+""")
+
+
+def test_pipeline_matches_sequential_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", CHILD], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "PIPELINE_OK" in out.stdout

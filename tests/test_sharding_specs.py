@@ -1,0 +1,61 @@
+"""Sharding rules: divisibility fallback, role binding, elasticity."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import RULESETS, ShardCtx, spec_for
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _ctx(shape, rules="default"):
+    dp = tuple(a for a in ("pod", "data") if a in shape)
+    return ShardCtx(mesh=FakeMesh(shape), rules=rules, dp=dp, tp=("model",))
+
+
+def test_basic_tp_dp_mapping():
+    ctx = _ctx({"data": 16, "model": 16})
+    spec = spec_for(("embed", "mlp"), ctx, (4096, 16384))
+    assert spec == P("data", "model")
+
+
+def test_non_dividing_dim_falls_back_to_replicated():
+    ctx = _ctx({"data": 16, "model": 16})
+    # 8 kv heads on a 16-way model axis: must drop, not crash
+    spec = spec_for(("embed", "kv_heads", None), ctx, (4096, 8, 128))
+    assert spec == P("data", None, None)
+
+
+def test_axis_used_once():
+    ctx = _ctx({"data": 16, "model": 16})
+    # two logical dims both mapping to tp: only the first gets it
+    spec = spec_for(("heads", "mlp"), ctx, (64, 25600))
+    assert spec == P("model", None)
+
+
+def test_multipod_dp_spans_pod_and_data():
+    ctx = _ctx({"pod": 2, "data": 16, "model": 16})
+    spec = spec_for(("act_batch", None), ctx, (256, 4096))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_elastic_relowering_same_rules_any_mesh():
+    """The same logical axes produce valid specs at any mesh size — the
+    elastic re-mesh path never edits model code."""
+    for shape in ({"data": 2, "model": 2}, {"data": 8, "model": 4},
+                  {"pod": 2, "data": 4, "model": 8}):
+        ctx = _ctx(shape)
+        spec = spec_for(("embed", "heads", None), ctx, (1024, 64, 128))
+        assert len(spec) == 3
+
+
+def test_opt_rules_shard_kv_seq():
+    ctx = _ctx({"data": 16, "model": 16}, rules="opt")
+    spec = spec_for(("layers", "act_batch", "act_kv_seq", "act_kv_heads",
+                     None), ctx, (40, 128, 32768, 8, 128))
+    assert spec[2] == "model"    # sequence dim takes tp
+    assert spec[3] is None       # kv heads yield (axis already used)
