@@ -24,12 +24,17 @@ def _pr_graph(g: COOGraph) -> COOGraph:
 def pagerank(g: COOGraph, damping: float = 0.85, iters: int = 30,
              part: Partition | None = None,
              cfg: engine.EngineConfig = engine.EngineConfig(),
-             num_shards: int = 16, rpvo_max: int = 1):
+             num_shards: int = 16, rpvo_max: int = 1,
+             mesh=None, axis_names=("data", "model")):
     """Returns (scores (n,) float64, partition)."""
     if part is None:
         part = build_partition(
             _pr_graph(g),
             PartitionConfig(num_shards=num_shards, rpvo_max=rpvo_max),
         )
-    val = engine.run_pagerank_stacked(part, damping, iters, cfg)
+    if mesh is None:
+        val = engine.run_pagerank_stacked(part, damping, iters, cfg)
+    else:
+        val = engine.run_pagerank_sharded(
+            part, damping, iters, mesh, axis_names, cfg)
     return engine.vertex_values(part, val).astype(np.float64), part

@@ -28,6 +28,12 @@ class Semiring:
     relax: typing.Callable                # (src_val, w) -> msg
     improved: typing.Callable             # (new, old) -> bool  (the predicate)
     segment: str                          # 'min' | 'sum' — inbox reduction kind
+    # static relax selector for the fused Pallas kernel — the relax must be
+    # expressible inside a grid cell: 'add_w' (min-plus), 'add_one' (BFS
+    # level), 'mul_w' (plus-times).  Construct ``relax`` from RELAX_FNS
+    # (as the built-ins below do) so the two can never disagree; None
+    # means "no kernel form" and the fused path refuses to run.
+    relax_kind: str | None = None
 
     def segment_combine(self, data, segment_ids, num_segments):
         """Inbox reduction. Empty segments get the combine identity."""
@@ -39,14 +45,25 @@ class Semiring:
         raise ValueError(self.segment)
 
 
+# the relax vocabulary expressible inside the fused Pallas kernel — the
+# single source for both the jnp path (via Semiring.relax) and the kernel
+# (via Semiring.relax_kind; see kernels.fused_relax_reduce._relax)
+RELAX_FNS = {
+    "add_w": lambda v, w: v + w,       # min-plus (SSSP)
+    "add_one": lambda v, w: v + 1.0,   # BFS level relax (weight ignored)
+    "mul_w": lambda v, w: v * w,       # plus-times (PageRank)
+}
+
+
 # BFS: level relaxation. msg = src_level + 1 (weights forced to 1).
 BFS = Semiring(
     name="bfs",
     identity=jnp.inf,
     combine=jnp.minimum,
-    relax=lambda v, w: v + 1.0,
+    relax=RELAX_FNS["add_one"],
     improved=lambda new, old: new < old,
     segment="min",
+    relax_kind="add_one",
 )
 
 # SSSP: min-plus.
@@ -54,9 +71,10 @@ SSSP = Semiring(
     name="sssp",
     identity=jnp.inf,
     combine=jnp.minimum,
-    relax=lambda v, w: v + w,
+    relax=RELAX_FNS["add_w"],
     improved=lambda new, old: new < old,
     segment="min",
+    relax_kind="add_w",
 )
 
 # PageRank: plus-times; edge weight is pre-folded to 1/out_deg(src).
@@ -64,9 +82,10 @@ PAGERANK = Semiring(
     name="pagerank",
     identity=0.0,
     combine=lambda a, b: a + b,
-    relax=lambda v, w: v * w,
+    relax=RELAX_FNS["mul_w"],
     improved=lambda new, old: jnp.full(new.shape, True),
     segment="sum",
+    relax_kind="mul_w",
 )
 
 SEMIRINGS = {s.name: s for s in (BFS, SSSP, PAGERANK)}

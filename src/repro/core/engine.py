@@ -19,6 +19,14 @@ Two execution paths share the same per-round math:
   - termination detection    → ``psum`` of the any-changed flag
     (the paper assumes a hardware idle signal; the collective is ours).
 
+With ``EngineConfig.use_pallas`` the per-round relax phase — frontier
+gather, semiring relax, active masking, and the inbox segment reduction —
+dispatches through the fused ``kernels.fused_relax_reduce`` Pallas kernel:
+one VMEM-resident pass, no ``(S, E_max)`` HBM intermediates, and grid
+cells over frontier-dead edge chunks are skipped entirely (the TPU form of
+the paper's diffusion pruning).  Without the flag the same math runs as
+separate jnp ops — the oracle path.
+
 Per-round counters reproduce the paper's Fig-6 statistics: messages
 (actions delivered), actions whose predicate fired (work performed), and
 diffusions pruned.
@@ -44,8 +52,23 @@ class EngineConfig:
     collapse: str = "eager"      # 'eager' | 'deferred' (min-semirings only)
     exchange: str = "dense"      # 'dense' | 'compact' (targeted messages)
     max_iters: int = 4096
-    use_pallas: bool = False     # use the Pallas segment-reduce kernel
+    use_pallas: bool = False     # route the relax phase through Pallas
+    # 'fused'  — one VMEM-resident gather+relax+mask+reduce kernel with
+    #            frontier chunk skip (the hot path; default)
+    # 'reduce' — jnp gather/relax/mask + the standalone segment-reduce
+    #            kernel (the pre-fusion composition, kept for comparison)
+    pallas_mode: str = "fused"
+    # False skips the Fig-6 message counter (an O(E) boolean reduction per
+    # round on the fused path); RunStats then reports zero messages/pruned
     track_stats: bool = True
+
+    def __post_init__(self):
+        if self.collapse not in ("eager", "deferred"):
+            raise ValueError(f"collapse={self.collapse!r}")
+        if self.exchange not in ("dense", "compact"):
+            raise ValueError(f"exchange={self.exchange!r}")
+        if self.pallas_mode not in ("fused", "reduce"):
+            raise ValueError(f"pallas_mode={self.pallas_mode!r}")
 
 
 class DeviceArrays(typing.NamedTuple):
@@ -95,28 +118,95 @@ class RunStats(typing.NamedTuple):
     diffusions: jax.Array        # slots that diffused (entered the frontier)
 
 
-def _segment_combine(sem: Semiring, data, ids, num_segments, use_pallas):
-    if use_pallas:
-        from repro.kernels import ops as kops
-        return kops.segment_combine(data, ids, num_segments, kind=sem.segment)
-    return sem.segment_combine(data, ids, num_segments)
-
-
 # --------------------------------------------------------------------------
-# shared per-round math. `gather(x_local) -> flat global`, `exchange(partial)
-# -> inbox` differ between stacked and sharded paths.
+# shared per-round math. The relax phase (gather sources, build messages,
+# partial-reduce the inbox) has two implementations with identical
+# semantics: a fused Pallas kernel (use_pallas) and separate jnp ops.
 # --------------------------------------------------------------------------
 
-def _relax_phase(sem, arrays_s, gval, gchg, total_slots, use_pallas):
-    """Per-shard: read sources, build messages, partial-reduce the inbox."""
+def _fused_relax(sem: Semiring, edge_src, edge_w, edge_mask, edge_dst,
+                 gval, gchg, num_segments, count_messages=True):
+    """Relax phase through the fused Pallas kernel. Edge arrays may be any
+    shape (flattened internally); returns ((num_segments,) partial, count
+    of delivered messages)."""
+    if sem.relax_kind is None:
+        raise ValueError(
+            f"semiring {sem.name!r} has no kernel relax form "
+            "(relax_kind=None); construct it from actions.RELAX_FNS or "
+            "run with use_pallas=False")
+    from repro.kernels import ops as kops
+    # the Fig-6 message count rides along for free: it is a reduction of
+    # the same gather that builds the kernel's frontier chunk bitmap
+    partial, count = kops.fused_relax_reduce(
+        gval, gchg, edge_src.reshape(-1), edge_w.reshape(-1),
+        edge_mask.reshape(-1), edge_dst.reshape(-1), num_segments,
+        relax_kind=sem.relax_kind, kind=sem.segment)
+    if not count_messages:
+        count = jnp.zeros((), jnp.int32)
+    return partial, count
+
+
+def _shard_relax(sem: Semiring, arrays_s, gval, gchg, num_segments,
+                 cfg: EngineConfig, compact: bool):
+    """Per-shard relax phase: read sources, build messages, partial-reduce
+    the inbox. Returns ((num_segments,) partial, message count)."""
+    ids = arrays_s.edge_dst_compact if compact else arrays_s.edge_dst_flat
+    if cfg.use_pallas and cfg.pallas_mode == "fused":
+        return _fused_relax(sem, arrays_s.edge_src_root_flat, arrays_s.edge_w,
+                            arrays_s.edge_mask, ids, gval, gchg, num_segments,
+                            count_messages=cfg.track_stats)
     src_val = jnp.take(gval, arrays_s.edge_src_root_flat, axis=0)
-    active = arrays_s.edge_mask & jnp.take(gchg, arrays_s.edge_src_root_flat, axis=0)
+    active = arrays_s.edge_mask & jnp.take(gchg, arrays_s.edge_src_root_flat,
+                                           axis=0)
     msg = jnp.where(active, sem.relax(src_val, arrays_s.edge_w),
                     jnp.asarray(sem.identity, src_val.dtype))
-    partial = _segment_combine(
-        sem, msg, arrays_s.edge_dst_flat, total_slots, use_pallas
-    )
-    return partial, active
+    if cfg.use_pallas:   # 'reduce': XLA relax ops + Pallas segment reduce
+        from repro.kernels import ops as kops
+        partial = kops.segment_combine(msg, ids, num_segments,
+                                       kind=sem.segment)
+    else:
+        partial = sem.segment_combine(msg, ids, num_segments)
+    count = active.sum() if cfg.track_stats else jnp.zeros((), jnp.int32)
+    return partial, count
+
+
+def _stacked_dense_inbox(sem: Semiring, arrays, cfg: EngineConfig,
+                         gval, gchg, total):
+    """Stacked dense relax: the reduced (total,) global inbox + msg count.
+
+    Fused path: all shards' edges address the same global slot space, so
+    the whole stack collapses in ONE kernel launch (the kernel's in-place
+    block accumulation replaces the (S, total) partial + axis-0 reduce)."""
+    if cfg.use_pallas and cfg.pallas_mode == "fused":
+        return _fused_relax(sem, arrays.edge_src_root_flat, arrays.edge_w,
+                            arrays.edge_mask, arrays.edge_dst_flat,
+                            gval, gchg, total,
+                            count_messages=cfg.track_stats)
+    partial, counts = jax.vmap(
+        lambda a: _shard_relax(sem, a, gval, gchg, total, cfg, False)
+    )(arrays)
+    return _reduce_axis0(sem, partial), counts.sum()
+
+
+def _stacked_compact_partial(sem: Semiring, arrays, cfg: EngineConfig, S,
+                             P_t, gval, gchg):
+    """Stacked compact relax: (S_src, S_tgt, P_t) partials + msg count.
+
+    Fused path: source shards get disjoint id windows of width S*P_t, so
+    one kernel launch over the flattened edge stack produces every
+    per-source partial (compact slot meaning depends on the source shard,
+    hence the offsets — contributions must NOT merge across sources)."""
+    if cfg.use_pallas and cfg.pallas_mode == "fused":
+        offs = (jnp.arange(S, dtype=jnp.int32) * (S * P_t))[:, None]
+        ids = arrays.edge_dst_compact + offs
+        flat, count = _fused_relax(
+            sem, arrays.edge_src_root_flat, arrays.edge_w, arrays.edge_mask,
+            ids, gval, gchg, S * S * P_t, count_messages=cfg.track_stats)
+        return flat.reshape(S, S, P_t), count
+    partial, counts = jax.vmap(
+        lambda a: _shard_relax(sem, a, gval, gchg, S * P_t, cfg, True)
+    )(arrays)
+    return partial.reshape(S, S, P_t), counts.sum()
 
 
 def _reduce_axis0(sem: Semiring, x):
@@ -141,23 +231,30 @@ def _scatter_inbox(sem, recv_t, slot_map_t, R_max):
     return out[:R_max]
 
 
-def _compact_collapse(sem, cand, arrays_s_rz_local, rz_sib_idx, rz_sib_mask,
+def _compact_collapse(sem, cand, rz_local, rz_sib_idx, rz_sib_mask,
                       gather_fn, R_max, R_rz_max):
     """Collapse only rhizome slots: compact-gather them, all-gather the
-    small table, combine siblings, scatter back (min-set is safe because
-    collapsed ≼ cand under the semiring order)."""
+    small table, combine siblings, scatter back.  min semirings min-set
+    (collapsed ≼ cand under the semiring order, so ``cand`` may be any
+    combined candidate); sum semirings overwrite each rhizome slot with
+    the sibling total (each sibling's own partial is included in the sum,
+    so set — never add — keeps it exact), which requires ``cand`` to be
+    bare inbox partials — summing combined val+inbox candidates would
+    double-count every sibling's val (hence the min-only fixpoint
+    runners; only the PageRank rounds pass sum semirings here)."""
     cand_pad = jnp.concatenate(
         [cand, jnp.full(cand.shape[:-1] + (1,), sem.identity, cand.dtype)],
         axis=-1)
-    compact = jnp.take_along_axis(cand_pad, arrays_s_rz_local, axis=-1)
+    compact = jnp.take_along_axis(cand_pad, rz_local, axis=-1)
     g = gather_fn(compact)                       # (S*R_rz_max,) flat
     sib = jnp.take(g, rz_sib_idx, axis=0)
     sib = jnp.where(rz_sib_mask, sib, jnp.asarray(sem.identity, sib.dtype))
     collapsed = _reduce_axis0(sem, jnp.moveaxis(sib, -1, 0))
-    upd = cand_pad.at[
-        tuple(jnp.indices(arrays_s_rz_local.shape)[:-1])
-        + (arrays_s_rz_local,)].min(collapsed) if sem.segment == "min" else None
-    assert sem.segment == "min", "compact collapse requires a min semiring"
+    idx = tuple(jnp.indices(rz_local.shape)[:-1]) + (rz_local,)
+    if sem.segment == "min":
+        upd = cand_pad.at[idx].min(collapsed)
+    else:
+        upd = cand_pad.at[idx].set(collapsed)
     return upd[..., :R_max]
 
 
@@ -170,18 +267,9 @@ def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg):
     if cfg.exchange == "compact":
         P_t = arrays.inbox_slot_map.shape[-1]
         R_rz_max = arrays.rz_local.shape[-1]
-
-        def relax_c(a):
-            src_val = jnp.take(gval, a.edge_src_root_flat, axis=0)
-            active = a.edge_mask & jnp.take(gchg, a.edge_src_root_flat, axis=0)
-            msg = jnp.where(active, sem.relax(src_val, a.edge_w),
-                            jnp.asarray(sem.identity, src_val.dtype))
-            partial = _segment_combine(sem, msg, a.edge_dst_compact,
-                                       S * P_t, cfg.use_pallas)
-            return partial.reshape(S, P_t), active
-
-        partial, active = jax.vmap(relax_c)(arrays)   # (S_src, S_tgt, P_t)
-        recv = jnp.swapaxes(partial, 0, 1)            # (S_tgt, S_src, P_t)
+        partial, msg_count = _stacked_compact_partial(
+            sem, arrays, cfg, S, P_t, gval, gchg)   # (S_src, S_tgt, P_t)
+        recv = jnp.swapaxes(partial, 0, 1)          # (S_tgt, S_src, P_t)
         inbox = jax.vmap(lambda r, m: _scatter_inbox(sem, r, m, R_max))(
             recv, arrays.inbox_slot_map)
         cand = sem.combine(val, inbox)
@@ -191,20 +279,17 @@ def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg):
                 arrays.rz_sibling_mask, lambda c: c.reshape(-1),
                 R_max, R_rz_max)
         new_chg = sem.improved(cand, val) & arrays.slot_valid
-        return cand, new_chg, active
+        return cand, new_chg, msg_count
 
     total = S * R_max
-    partial, active = jax.vmap(
-        lambda g, c, a: _relax_phase(sem, a, g, c, total, cfg.use_pallas),
-        in_axes=(None, None, 0),
-    )(gval, gchg, arrays)
-    inbox = _reduce_axis0(sem, partial).reshape(S, R_max)
-    cand = sem.combine(val, inbox)
+    inbox_flat, msg_count = _stacked_dense_inbox(
+        sem, arrays, cfg, gval, gchg, total)
+    cand = sem.combine(val, inbox_flat.reshape(S, R_max))
     if cfg.collapse == "eager":
         cand = _collapse(sem, cand.reshape(-1), arrays.sibling_flat,
                          arrays.sibling_mask)
     new_chg = sem.improved(cand, val) & arrays.slot_valid
-    return cand, new_chg, active
+    return cand, new_chg, msg_count
 
 
 def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
@@ -212,25 +297,27 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
     """Single-device stacked execution. ``init_val``: (S, R_max) float32.
     ``init_changed`` (optional bool (S, R_max)) seeds the first frontier —
     used by incremental recompute to re-diffuse only mutation sites."""
+    if sem.segment != "min":
+        raise ValueError(
+            "run_stacked drives monotone min-semiring fixpoints; the "
+            "collapse of a combined candidate is only sound there — use "
+            "run_pagerank_stacked for counted sum-semiring rounds")
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
 
     def body(carry):
         val, chg, it, stats = carry
-        new_val, new_chg, active = _fixpoint_round_stacked(
+        new_val, new_chg, msg_count = _fixpoint_round_stacked(
             sem, arrays, cfg, S, R_max, val, chg
         )
-        if cfg.collapse == "deferred":
-            # read-side collapse next round; converged means consistent
-            new_val = _collapse(sem, new_val.reshape(-1), arrays.sibling_flat,
-                                arrays.sibling_mask) if False else new_val
+        work = new_chg.sum()
         stats = RunStats(
             iterations=stats.iterations + 1,
-            messages=stats.messages + active.sum(),
-            work_actions=stats.work_actions + new_chg.sum(),
+            messages=stats.messages + msg_count,
+            work_actions=stats.work_actions + work,
             pruned_actions=stats.pruned_actions
-            + active.sum() - jnp.minimum(new_chg.sum(), active.sum()),
-            diffusions=stats.diffusions + new_chg.sum(),
+            + msg_count - jnp.minimum(work, msg_count),
+            diffusions=stats.diffusions + work,
         )
         return new_val, new_chg, it + 1, stats
 
@@ -245,8 +332,6 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
             jnp.asarray(init_val),
             jnp.full_like(jnp.asarray(init_val), sem.identity)
         ) & arrays.slot_valid
-        if sem.segment == "sum":
-            init_chg = arrays.slot_valid
     zero = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
     stats0 = RunStats(zero, zero, zero, zero, zero)
     val, chg, it, stats = lax.while_loop(
@@ -262,13 +347,45 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
 # PageRank-style counted-iteration apps
 # --------------------------------------------------------------------------
 
+def _pagerank_round_stacked(sem, arrays, cfg, S, R_max, base, damping, val,
+                            chg):
+    """One stacked PageRank round: relax → exchange → rhizome-collapse(+)
+    → damping update. Shared by run_pagerank_stacked and the engine
+    benchmark so BENCH numbers measure the shipped hot path."""
+    gval = val.reshape(-1)
+    gchg = chg.reshape(-1)
+    if cfg.exchange == "compact":
+        P_t = arrays.inbox_slot_map.shape[-1]
+        R_rz_max = arrays.rz_local.shape[-1]
+        partial, msg_count = _stacked_compact_partial(
+            sem, arrays, cfg, S, P_t, gval, gchg)
+        recv = jnp.swapaxes(partial, 0, 1)
+        inbox = jax.vmap(lambda r, m: _scatter_inbox(sem, r, m, R_max))(
+            recv, arrays.inbox_slot_map)
+        # rhizome-collapse(+) over the compact table: each rhizome slot
+        # becomes the sum of its sibling inboxes == total in-flow
+        total_in = _compact_collapse(
+            sem, inbox, arrays.rz_local, arrays.rz_sibling_idx,
+            arrays.rz_sibling_mask, lambda c: c.reshape(-1),
+            R_max, R_rz_max)
+    else:
+        total = S * R_max
+        inbox_flat, msg_count = _stacked_dense_inbox(
+            sem, arrays, cfg, gval, gchg, total)
+        inbox = inbox_flat.reshape(S, R_max)
+        # rhizome-collapse(+): sum of sibling inboxes == total in-flow
+        total_in = _collapse(sem, inbox.reshape(-1), arrays.sibling_flat,
+                             arrays.sibling_mask)
+    new_val = jnp.where(arrays.slot_valid, base + damping * total_in, 0.0)
+    return new_val, msg_count
+
+
 def run_pagerank_stacked(part: Partition, damping: float, iters: int,
                          cfg: EngineConfig = EngineConfig()):
     from repro.core.actions import PAGERANK as sem
 
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
-    total = S * R_max
     base = (1.0 - damping) / part.n
 
     # initial score 1/n on every replica (consistent view)
@@ -276,17 +393,9 @@ def run_pagerank_stacked(part: Partition, damping: float, iters: int,
     chg = arrays.slot_valid  # PR predicate is #t — always diffuse
 
     def body(_, val):
-        gval = val.reshape(-1)
-        gchg = chg.reshape(-1)
-        partial, _ = jax.vmap(
-            lambda g, c, a: _relax_phase(sem, a, g, c, total, cfg.use_pallas),
-            in_axes=(None, None, 0),
-        )(gval, gchg, arrays)
-        inbox = _reduce_axis0(sem, partial).reshape(S, R_max)
-        # rhizome-collapse(+): sum of sibling inboxes == total in-flow
-        total_in = _collapse(sem, inbox.reshape(-1), arrays.sibling_flat,
-                             arrays.sibling_mask)
-        return jnp.where(arrays.slot_valid, base + damping * total_in, 0.0)
+        new_val, _ = _pagerank_round_stacked(
+            sem, arrays, cfg, S, R_max, base, damping, val, chg)
+        return new_val
 
     val = lax.fori_loop(0, iters, body, val0)
     return val
@@ -306,6 +415,10 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
     """Builds the shard_map diffusive fixpoint as a jit-able fn of
     (DeviceArrays, val) — usable with concrete arrays (run_sharded) or
     ShapeDtypeStructs (AOT dry-run lowering)."""
+    if sem.segment != "min":
+        raise ValueError(
+            "make_sharded_fn drives monotone min-semiring fixpoints; use "
+            "make_sharded_pagerank_fn for counted sum-semiring rounds")
     axis_names = _axis(axis_names)
     total = S * R_max
     spec = P(axis_names)
@@ -328,15 +441,8 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
             gval, gchg = gather(val), gather(chg)
             if cfg.exchange == "compact":
                 P_t = arrays_s.inbox_slot_map.shape[-1]
-                src_val = jnp.take(gval, arrays_s.edge_src_root_flat, axis=0)
-                active = arrays_s.edge_mask & jnp.take(
-                    gchg, arrays_s.edge_src_root_flat, axis=0)
-                msg = jnp.where(active,
-                                sem.relax(src_val, arrays_s.edge_w),
-                                jnp.asarray(sem.identity, src_val.dtype))
-                partial = _segment_combine(
-                    sem, msg, arrays_s.edge_dst_compact, S * P_t,
-                    cfg.use_pallas)
+                partial, msg_count = _shard_relax(
+                    sem, arrays_s, gval, gchg, S * P_t, cfg, True)
                 # targeted exchange: only (target, distinct-slot) messages
                 recv = lax.all_to_all(
                     partial.reshape(S, P_t), axis_names,
@@ -349,13 +455,11 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
                     cand = _compact_collapse(
                         sem, cand, arrays_s.rz_local,
                         arrays_s.rz_sibling_idx, arrays_s.rz_sibling_mask,
-                        lambda c: lax.all_gather(c, axis_names, tiled=True),
-                        R_max, R_rz_max)
+                        gather, R_max, R_rz_max)
                 new_chg = sem.improved(cand, val) & arrays_s.slot_valid
-                return cand, new_chg, active
-            partial, active = _relax_phase(
-                sem, arrays_s, gval, gchg, total, cfg.use_pallas
-            )
+                return cand, new_chg, msg_count
+            partial, msg_count = _shard_relax(
+                sem, arrays_s, gval, gchg, total, cfg, False)
             # inbox exchange: row t of `partial` belongs to shard t
             recv = lax.all_to_all(
                 partial.reshape(S, R_max), axis_names,
@@ -367,19 +471,20 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
                 cand = _collapse(sem, gather(cand), arrays_s.sibling_flat,
                                  arrays_s.sibling_mask)
             new_chg = sem.improved(cand, val) & arrays_s.slot_valid
-            return cand, new_chg, active
+            return cand, new_chg, msg_count
 
         def body(carry):
             val, chg, it, stats = carry
-            new_val, new_chg, active = round_fn(val, chg)
+            new_val, new_chg, msg_count = round_fn(val, chg)
+            msgs = lax.psum(msg_count, axis_names)
+            work = lax.psum(new_chg.sum(), axis_names)
             stats = RunStats(
                 iterations=stats.iterations + 1,
-                messages=stats.messages + lax.psum(active.sum(), axis_names),
-                work_actions=stats.work_actions
-                + lax.psum(new_chg.sum(), axis_names),
-                pruned_actions=stats.pruned_actions,
-                diffusions=stats.diffusions
-                + lax.psum(new_chg.sum(), axis_names),
+                messages=stats.messages + msgs,
+                work_actions=stats.work_actions + work,
+                pruned_actions=stats.pruned_actions
+                + msgs - jnp.minimum(work, msgs),
+                diffusions=stats.diffusions + work,
             )
             return new_val, new_chg, it + 1, stats
 
@@ -424,6 +529,80 @@ def run_sharded(sem: Semiring, part: Partition, init_val: np.ndarray,
     val, stats = fn(arrays_dev, val_dev)
     stats = jax.tree.map(lambda x: x[0], stats)
     return val, stats
+
+
+def make_sharded_pagerank_fn(S: int, R_max: int, n: int, damping: float,
+                             iters: int, mesh: Mesh,
+                             axis_names=("data", "model"),
+                             cfg: EngineConfig = EngineConfig()):
+    """shard_map PageRank: counted rounds of relax → exchange →
+    rhizome-collapse(+) → damping update, dense or compact exchange, with
+    the same fused-kernel hot path as the fixpoint apps."""
+    from repro.core.actions import PAGERANK as sem
+
+    axis_names = _axis(axis_names)
+    total = S * R_max
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (DeviceArrays(*([spec] * len(DeviceArrays._fields))),)
+    base = (1.0 - damping) / n
+
+    def shard_fn(arrays_l: DeviceArrays):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        chg = arrays_s.slot_valid  # PR predicate is #t — always diffuse
+
+        def gather(x):
+            return lax.all_gather(x, axis_names, tiled=True)
+
+        def body(_, val):
+            gval, gchg = gather(val), gather(chg)
+            if cfg.exchange == "compact":
+                P_t = arrays_s.inbox_slot_map.shape[-1]
+                partial, _ = _shard_relax(
+                    sem, arrays_s, gval, gchg, S * P_t, cfg, True)
+                recv = lax.all_to_all(
+                    partial.reshape(S, P_t), axis_names,
+                    split_axis=0, concat_axis=0, tiled=True)
+                inbox = _scatter_inbox(sem, recv, arrays_s.inbox_slot_map,
+                                       R_max)
+                total_in = _compact_collapse(
+                    sem, inbox, arrays_s.rz_local, arrays_s.rz_sibling_idx,
+                    arrays_s.rz_sibling_mask, gather, R_max,
+                    arrays_s.rz_local.shape[-1])
+            else:
+                partial, _ = _shard_relax(
+                    sem, arrays_s, gval, gchg, total, cfg, False)
+                recv = lax.all_to_all(
+                    partial.reshape(S, R_max), axis_names,
+                    split_axis=0, concat_axis=0, tiled=True)
+                inbox = _reduce_axis0(sem, recv.reshape(S, R_max))
+                total_in = _collapse(sem, gather(inbox),
+                                     arrays_s.sibling_flat,
+                                     arrays_s.sibling_mask)
+            return jnp.where(arrays_s.slot_valid,
+                             base + damping * total_in, 0.0)
+
+        val0 = jnp.where(arrays_s.slot_valid, 1.0 / n, 0.0)
+        val = lax.fori_loop(0, iters, body, val0)
+        return val[None]
+
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=spec,
+        check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
+
+
+def run_pagerank_sharded(part: Partition, damping: float, iters: int,
+                         mesh: Mesh, axis_names=("data", "model"),
+                         cfg: EngineConfig = EngineConfig()):
+    """shard_map PageRank execution; see ``run_sharded`` for layout."""
+    fn, sharding = make_sharded_pagerank_fn(
+        part.S, part.R_max, part.n, damping, iters, mesh, axis_names, cfg)
+    arrays = DeviceArrays.from_partition(part)
+    arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
+    return fn(arrays_dev)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,278 @@
+"""Pallas TPU kernel: fused frontier-aware relax + blocked segment reduce.
+
+One engine round used to run as four separate XLA/Pallas ops, each
+materializing an ``(S, E_max)`` HBM intermediate:
+
+    src_val = gval[edge_src]                  # dense gather     (HBM f32)
+    active  = edge_mask & gchg[edge_src]      # frontier mask    (HBM bool)
+    msg     = where(active, relax(src_val, w), identity)   #     (HBM f32)
+    inbox   = segment_reduce(msg, edge_dst)   # Pallas kernel
+
+This kernel fuses the whole pipeline into one VMEM-resident pass: the
+vertex value table is pinned in VMEM and the gather, semiring relax,
+frontier masking, and blocked semiring reduction all happen inside the
+grid cell — no per-edge float array ever round-trips HBM.  The
+frontier mask is folded into the value table before launch (inactive
+sources read as the absorbing identity: ``relax(identity, w) ==
+identity`` for every supported semiring), so the cell needs a single
+VMEM gather.
+
+Blocking follows ``rhizome_segment_reduce``: the edge axis is tiled into
+``EBLK`` chunks, the segment axis into ``SBLK`` blocks; cell (i, j)
+builds an (EBLK x SBLK) hit mask and reduces over edges (one-hot MXU
+matmul for ``sum``, masked VPU min for ``min``); output block *i* is
+revisited across all *j* and accumulated in place.
+
+Two levels of scalar-prefetched grid-cell skipping (the TPU form of the
+paper's diffusion pruning — work stays proportional to the frontier):
+
+1. **Sorted-range skip** — edges are sorted by destination, so chunk *j*
+   covers segment ids ``[chunk_lo[j], chunk_hi[j]]``; cells whose segment
+   block does not intersect are skipped (static sparsity of the CSR sort).
+2. **Frontier chunk skip** — ``chunk_active[j]`` records whether ANY edge
+   in chunk *j* has a changed (diffusing) source this round.  On late
+   BFS/SSSP rounds the frontier is a tiny fraction of the graph, so most
+   chunks are dead and their grid cells are skipped *entirely* across all
+   segment blocks — the paper's "stale diffusions are subsumed" pruning,
+   realized as predicated grid cells.  The bitmap is an O(E/EBLK) scalar
+   vector computed from ``gchg`` by a fused reduction; it is the only
+   per-round edge-proportional traffic besides the kernel's own block DMAs.
+
+``fused_grid_cells`` mirrors the two skip predicates on the host so
+benchmarks/tests can count exactly how many grid cells execute (see
+``benchmarks/engine_bench.py``: the fused path must execute strictly
+fewer cells than range-skip alone once the frontier thins).
+
+Semiring relax is selected statically via ``relax_kind``
+(``Semiring.relax_kind``, single-sourced with the jnp path through
+``actions.RELAX_FNS``): 'add_w' (min-plus / SSSP), 'add_one' (BFS level
+relax; the weight is ignored), 'mul_w' (plus-times / PageRank).
+Validated against ``ref.fused_relax_reduce_ref`` in interpret mode (CPU);
+the compiled path targets TPU VMEM via BlockSpecs.
+
+**Scale constraint**: the whole padded value table rides into VMEM per
+grid cell (``full_spec``), so on real hardware the kernel is limited to
+partitions whose slot table fits alongside the edge blocks (~16 MB VMEM
+⇒ roughly 3M f32 slots). Paper-scale graphs (R22+) need the value table
+tiled with per-cell async DMA + double buffering — tracked as a ROADMAP
+open item; interpret-mode CI does not exercise the limit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.actions import RELAX_FNS
+
+EBLK = 512   # edge-axis tile
+SBLK = 256   # segment-axis tile (lane-aligned)
+
+RELAX_KINDS = tuple(RELAX_FNS)
+
+# pairings for which the combine identity absorbs under relax —
+# relax(identity, w) == identity — the property the frontier masking
+# relies on (inactive sources are folded into the value table as the
+# identity and must never contribute)
+ABSORBING_PAIRS = frozenset(
+    {("add_w", "min"), ("add_one", "min"), ("mul_w", "sum")})
+
+
+def _relax(relax_kind: str, src_val, w):
+    return RELAX_FNS[relax_kind](src_val, w)
+
+
+def _kernel(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
+            ids_ref, src_ref, w_ref, mask_ref, gval_ref,
+            out_ref, *, relax_kind, kind):
+    i = pl.program_id(0)  # segment block
+    j = pl.program_id(1)  # edge chunk
+
+    identity = jnp.inf if kind == "min" else 0.0
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full((SBLK,), identity, out_ref.dtype)
+
+    seg0 = i * SBLK
+    # level 1: sorted-edges range skip — chunk j covers [chunk_lo, chunk_hi]
+    intersects = (chunk_hi_ref[j] >= seg0) & (chunk_lo_ref[j] < seg0 + SBLK)
+    # level 2: frontier skip — any changed source in this edge chunk?
+    live = intersects & (chunk_act_ref[j] > 0)
+
+    @pl.when(live)
+    def _compute():
+        src = src_ref[...]                       # (EBLK,) int32
+        # fused frontier gather: the VMEM-resident value table is
+        # pre-masked so frontier-inactive sources read as the absorbing
+        # identity — relax(identity, w) == identity for every semiring
+        # here (inf+w=inf, 0*w=0), so no per-edge gchg gather is needed
+        src_val = jnp.take(gval_ref[...], src)
+        msg = _relax(relax_kind, src_val, w_ref[...])
+        msg = jnp.where(mask_ref[...] > 0, msg,
+                        jnp.asarray(identity, msg.dtype))
+
+        local = ids_ref[...] - seg0
+        cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
+        hit = local[:, None] == cols             # (EBLK, SBLK)
+        if kind == "sum":
+            # one-hot matmul -> MXU systolic reduction
+            contrib = jnp.dot(
+                hit.astype(msg.dtype).T, msg,
+                preferred_element_type=jnp.float32,
+            ).astype(out_ref.dtype)
+            out_ref[...] += contrib
+        else:
+            padded = jnp.where(hit, msg[:, None],
+                               jnp.asarray(identity, msg.dtype))
+            contrib = jnp.min(padded, axis=0)    # VPU reduction over edges
+            out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
+def _chunk_tables(ids_p, src_p, mask_i, gchg_i):
+    """Scalar-prefetch tables: per-chunk [lo, hi] id range + frontier bit.
+    Also returns the total active-edge count (the Fig-6 message counter) —
+    a free reduction of the gather the bitmap needs anyway."""
+    e_pad = ids_p.shape[0]
+    idc = ids_p.reshape(e_pad // EBLK, EBLK)
+    valid = mask_i.reshape(e_pad // EBLK, EBLK) > 0
+    chunk_lo = jnp.where(valid, idc, jnp.iinfo(jnp.int32).max).min(axis=1)
+    chunk_hi = jnp.where(valid, idc, -1).max(axis=1)
+    # "any active source" bitmap: gchg gather fused into a per-chunk any()
+    src_act = jnp.where(valid, jnp.take(gchg_i, src_p.reshape(valid.shape)), 0)
+    chunk_act = src_act.max(axis=1).astype(jnp.int32)
+    return chunk_lo, chunk_hi, chunk_act, src_act.sum()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count"))
+def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
+                              edge_dst, num_segments: int, relax_kind: str,
+                              kind: str, interpret: bool = True,
+                              with_count: bool = False):
+    """Fused gather/relax/mask/segment-reduce.
+
+    gval: (V,) f32 vertex (replica-slot) values; gchg: (V,) bool changed
+    flags (the frontier); edge_src/edge_dst: (E,) int32 into [0, V) /
+    [0, num_segments); edge_w: (E,) f32; edge_mask: (E,) bool (False on
+    padding). Returns the (num_segments,) inbox partial — empty segments
+    hold the combine identity — or, ``with_count=True``, a (partial,
+    active-edge count) pair; the count is a byproduct of the frontier
+    bitmap gather, not an extra pass. Edges should be sorted by
+    ``edge_dst`` for the range skip to bite; correctness never depends
+    on the sort.
+    """
+    assert relax_kind in RELAX_KINDS, relax_kind
+    if (relax_kind, kind) not in ABSORBING_PAIRS:
+        raise ValueError(
+            f"non-absorbing relax/combine pairing {(relax_kind, kind)}: "
+            "frontier masking requires relax(identity, w) == identity "
+            f"(supported: {sorted(ABSORBING_PAIRS)})")
+    e = edge_src.shape[0]
+    e_pad = -(-e // EBLK) * EBLK
+    s_pad = -(-num_segments // SBLK) * SBLK
+    v = gval.shape[0]
+    v_pad = -(-max(v, 1) // 128) * 128
+    identity = jnp.inf if kind == "min" else 0.0
+
+    # frontier masking folded into the value table (absorbing identity):
+    # relax(identity, w) == identity for all supported semirings, so an
+    # inactive source can never contribute — bit-identical to the oracle's
+    # explicit where(active, ...) mask, one fewer VMEM gather per cell.
+    gval_m = jnp.where(gchg, gval, jnp.asarray(identity, gval.dtype))
+    gval_p = jnp.full((v_pad,), identity, gval.dtype).at[:v].set(gval_m)
+    gchg_p = jnp.zeros((v_pad,), jnp.int32).at[:v].set(
+        gchg.astype(jnp.int32))
+    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_dst.astype(jnp.int32))
+    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_src.astype(jnp.int32))
+    w_p = jnp.zeros((e_pad,), edge_w.dtype).at[:e].set(edge_w)
+    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_mask.astype(jnp.int32))
+
+    chunk_lo, chunk_hi, chunk_act, msg_count = _chunk_tables(
+        ids_p, src_p, mask_i, gchg_p)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
+    full_spec = pl.BlockSpec((v_pad,), lambda i, j, lo, hi, act: (0,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, relax_kind=relax_kind, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      full_spec],
+            out_specs=pl.BlockSpec((SBLK,), lambda i, j, lo, hi, act: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_pad,), gval.dtype),
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act,
+      ids_p, src_p, w_p, mask_i, gval_p)
+    if with_count:
+        return out[:num_segments], msg_count
+    return out[:num_segments]
+
+
+def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
+                     num_segments: int) -> dict:
+    """Host-side mirror of both launch shapes for the dense exchange.
+
+    ``fused_live``/``total_fused`` mirror THIS kernel's single flattened
+    launch (edge_mask-aware per-chunk ranges + frontier bitmap);
+    ``range_live``/``total_unfused`` mirror the unfused composition's S
+    vmapped per-shard ``segment_combine_pallas`` launches, whose validity
+    rule is positional (every in-shard slot counts, so engine padding
+    edges carrying id 0 widen chunk ranges) and which has no frontier
+    skip.  Edge arrays are (S, E_max) host arrays — or 1-D for a single
+    flat launch; ``gchg`` is the (V,) frontier.
+    """
+    edge_dst = np.atleast_2d(np.asarray(edge_dst))
+    edge_mask = np.atleast_2d(np.asarray(edge_mask))
+    edge_src = np.atleast_2d(np.asarray(edge_src))
+    gchg = np.asarray(gchg).reshape(-1)
+    S, E_max = edge_dst.shape
+    s_pad = -(-num_segments // SBLK) * SBLK
+    seg0 = np.arange(s_pad // SBLK)[:, None] * SBLK        # (n_i, 1)
+
+    # fused: one launch over the flattened edge stack
+    e = S * E_max
+    e_pad = -(-e // EBLK) * EBLK
+    ids = np.zeros(e_pad, np.int64)
+    ids[:e] = edge_dst.reshape(-1)
+    msk = np.zeros(e_pad, bool)
+    msk[:e] = edge_mask.reshape(-1)
+    act = np.zeros(e_pad, bool)
+    act[:e] = edge_mask.reshape(-1) & gchg[edge_src.reshape(-1)]
+    idc, mkc, acc = (x.reshape(e_pad // EBLK, EBLK) for x in (ids, msk, act))
+    lo = np.where(mkc, idc, np.iinfo(np.int64).max).min(axis=1)
+    hi = np.where(mkc, idc, -1).max(axis=1)
+    intersects = (hi[None, :] >= seg0) & (lo[None, :] < seg0 + SBLK)
+    fused_live = int((intersects & acc.any(axis=1)[None, :]).sum())
+    total_fused = int(intersects.size)
+
+    # unfused: S per-shard launches, positional validity, range skip only
+    ep = -(-E_max // EBLK) * EBLK
+    ids_s = np.zeros((S, ep), np.int64)
+    ids_s[:, :E_max] = edge_dst
+    valid = np.zeros(ep, bool)
+    valid[:E_max] = True
+    idc2 = ids_s.reshape(S, ep // EBLK, EBLK)
+    v2 = valid.reshape(ep // EBLK, EBLK)[None, :, :]
+    lo2 = np.where(v2, idc2, np.iinfo(np.int64).max).min(axis=-1)
+    hi2 = np.where(v2, idc2, -1).max(axis=-1)                # (S, n_j)
+    inter2 = (hi2[:, None, :] >= seg0[None, :, :]) \
+        & (lo2[:, None, :] < seg0[None, :, :] + SBLK)        # (S, n_i, n_j)
+    return {
+        "total_fused": total_fused,
+        "total_unfused": int(inter2.size),
+        "range_live": int(inter2.sum()),
+        "fused_live": fused_live,
+    }

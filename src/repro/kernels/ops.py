@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.fused_relax_reduce import fused_relax_reduce_pallas
 from repro.kernels.rhizome_segment_reduce import segment_combine_pallas
 
 
@@ -19,4 +20,15 @@ def segment_combine(data, segment_ids, num_segments: int, kind: str):
     """Semiring segment reduction (min | sum) over edge messages."""
     return segment_combine_pallas(
         data, segment_ids, num_segments, kind, interpret=_interpret()
+    )
+
+
+def fused_relax_reduce(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                       num_segments: int, relax_kind: str, kind: str):
+    """Fused frontier gather + semiring relax + mask + segment reduction —
+    the whole per-round relax phase in one VMEM-resident Pallas pass.
+    Returns ((num_segments,) partial, active-edge message count)."""
+    return fused_relax_reduce_pallas(
+        gval, gchg, edge_src, edge_w, edge_mask, edge_dst, num_segments,
+        relax_kind, kind, interpret=_interpret(), with_count=True
     )

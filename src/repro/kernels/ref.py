@@ -23,6 +23,21 @@ def segment_combine_ref(data, segment_ids, num_segments: int, kind: str):
     raise ValueError(kind)
 
 
+def fused_relax_reduce_ref(gval, gchg, edge_src, edge_w, edge_mask,
+                           edge_dst, num_segments: int, relax_kind: str,
+                           kind: str):
+    """Oracle for the fused frontier relax+reduce kernel: the unfused
+    gather / relax / frontier-mask / segment-combine pipeline, with every
+    intermediate materialized. Shapes as in ``fused_relax_reduce_pallas``."""
+    from repro.core.actions import RELAX_FNS
+    src_val = jnp.take(gval, edge_src, axis=0)
+    active = edge_mask & jnp.take(gchg, edge_src, axis=0)
+    msg = RELAX_FNS[relax_kind](src_val, edge_w)
+    identity = jnp.inf if kind == "min" else 0.0
+    msg = jnp.where(active, msg, jnp.asarray(identity, msg.dtype))
+    return segment_combine_ref(msg, edge_dst, num_segments, kind)
+
+
 def frontier_relax_ref(values, src_flat, weights, mask, kind: str):
     """Gather + relax: msg_e = values[src_e] (+ w_e | * w_e), masked to the
     semiring identity. values: (V,), src_flat/weights/mask: (E,)."""

@@ -1,6 +1,8 @@
 """Data pipeline: determinism, resumability, host sharding, straggler path."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import TokenPipeline

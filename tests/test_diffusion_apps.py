@@ -105,6 +105,20 @@ def test_deferred_collapse_same_fixpoint():
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+def test_deferred_collapse_matches_eager_exactly():
+    """Regression for the removed dead deferred-collapse branch in
+    run_stacked: 'deferred' must produce the identical fixpoint to 'eager'
+    (collapse timing changes cost, not the monotone fixpoint)."""
+    g = generators.ba_skewed(300, m_per=4, seed=7).with_random_weights(seed=7)
+    root = int(np.argmax(g.out_degrees()))
+    for app in (bfs, sssp):
+        eager, _, _ = app(g, root, num_shards=8, rpvo_max=8,
+                          cfg=engine.EngineConfig(collapse="eager"))
+        deferred, _, _ = app(g, root, num_shards=8, rpvo_max=8,
+                             cfg=engine.EngineConfig(collapse="deferred"))
+        np.testing.assert_array_equal(deferred, eager)
+
+
 def test_fig6_style_stats_monotone_pruning():
     """Most delivered actions fail their predicate (paper Fig 6: only
     ~3-35% of actions perform work)."""

@@ -65,7 +65,10 @@ CHILD = textwrap.dedent("""
 def test_sharded_eight_devices_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu present, backend autodetect
+    # stalls on (unreachable) TPU metadata; these meshes are CPU
+    # host devices by construction (xla_force_host_platform_device_count)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", CHILD], env=env, capture_output=True, text=True,
         timeout=420,
@@ -89,9 +92,70 @@ def test_sharded_compact_exchange_subprocess():
     under real 8-device collectives."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu present, backend autodetect
+    # stalls on (unreachable) TPU metadata; these meshes are CPU
+    # host devices by construction (xla_force_host_platform_device_count)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", CHILD_COMPACT], env=env, capture_output=True,
         text=True, timeout=420)
     assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
     assert "SHARDED_OK" in out.stdout
+
+
+CHILD_PALLAS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.apps import bfs, pagerank, sssp
+    from repro.core import engine
+    from repro.graph import generators, reference
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    g = generators.ba_skewed(260, m_per=4, seed=9).with_random_weights(seed=9)
+    root = int(np.argmax(g.out_degrees()))
+    want = reference.bfs_levels(g, root)
+
+    for exch in ("dense", "compact"):
+        cfg = engine.EngineConfig(exchange=exch, use_pallas=True)
+        # fused kernel under real 8-device shard_map == stacked fused run
+        sh, sh_stats, _ = bfs(g, root, num_shards=8, rpvo_max=4,
+                              mesh=mesh, cfg=cfg)
+        st, st_stats, _ = bfs(g, root, num_shards=8, rpvo_max=4, cfg=cfg)
+        np.testing.assert_array_equal(sh, want)
+        np.testing.assert_array_equal(sh, st)
+        assert int(sh_stats.messages) == int(st_stats.messages)
+        assert int(sh_stats.pruned_actions) == int(st_stats.pruned_actions)
+        d_sh, _, _ = sssp(g, root, num_shards=8, rpvo_max=4,
+                          mesh=mesh, cfg=cfg)
+        d_st, _, _ = sssp(g, root, num_shards=8, rpvo_max=4, cfg=cfg)
+        np.testing.assert_array_equal(d_sh, d_st)
+        np.testing.assert_allclose(d_sh, reference.sssp_dijkstra(g, root),
+                                   rtol=1e-5, atol=1e-5)
+        # sharded PageRank (sum semiring; compact now supported) vs oracle
+        pr_sh, _ = pagerank(g, iters=12, num_shards=8, rpvo_max=4,
+                            mesh=mesh, cfg=cfg)
+        pr_st, _ = pagerank(g, iters=12, num_shards=8, rpvo_max=4, cfg=cfg)
+        np.testing.assert_allclose(pr_sh, reference.pagerank(g, iters=12),
+                                   rtol=1e-4, atol=1e-7)
+        np.testing.assert_allclose(pr_sh, pr_st, rtol=1e-5, atol=1e-9)
+    print("SHARDED_PALLAS_OK")
+""")
+
+
+def test_sharded_fused_pallas_subprocess():
+    """The fused relax+reduce kernel inside shard_map over 8 real host
+    devices: BFS and PageRank, dense and compact, vs the stacked run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # pin the child to CPU: with libtpu present, backend autodetect
+    # stalls on (unreachable) TPU metadata; these meshes are CPU
+    # host devices by construction (xla_force_host_platform_device_count)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", CHILD_PALLAS], env=env, capture_output=True,
+        text=True, timeout=420)
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "SHARDED_PALLAS_OK" in out.stdout

@@ -3,6 +3,8 @@ import operator
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lco import AndGate, Future, and_gate_tree

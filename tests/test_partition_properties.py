@@ -1,5 +1,8 @@
 """Property-based partition invariants (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import PartitionConfig, build_partition

@@ -47,7 +47,10 @@ CHILD = textwrap.dedent("""
 def test_pipeline_matches_sequential_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu present, backend autodetect
+    # stalls on (unreachable) TPU metadata; these meshes are CPU
+    # host devices by construction (xla_force_host_platform_device_count)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", CHILD], env=env,
                          capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
