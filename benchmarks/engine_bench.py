@@ -25,6 +25,7 @@ import argparse
 import json
 import time
 
+import common  # noqa: F401  (pins JAX_PLATFORMS=cpu before jax loads)
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,255 @@
+"""Multi-query serving benchmark: lane batching vs a serial query loop
+(ISSUE 2).
+
+Three measurements on one shared rhizome-partitioned RMAT graph:
+
+* **serial**  — a 16-query mixed BFS/SSSP workload run one query at a
+  time through the laned runner with Q=1 (compiled once, reused), the
+  per-query baseline a naive serving loop would pay;
+* **batched** — the same 16 queries as 16 lanes of ONE laned fixpoint
+  (one compiled round advances every live query; converged lanes ride
+  along inert).  The acceptance bar: aggregate queries/s must beat the
+  serial loop;
+* **server**  — ``QueryServer`` continuous batching over a deeper queue
+  (3x lanes): requests join lanes freed mid-flight, giving per-query
+  latency percentiles and lane-occupancy, the serving analog of the
+  paper's always-busy compute cells.
+
+Also emits the per-round OR-frontier grid-cell counts for the fused
+laned kernel (a grid cell executes iff its edge chunk is live in at
+least one lane), extending the BENCH_engine perf trajectory.
+
+Usage:  PYTHONPATH=src python benchmarks/query_bench.py [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import common  # noqa: F401  (pins JAX_PLATFORMS=cpu before jax loads)
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators
+from repro.kernels.fused_relax_reduce import fused_grid_cells
+from repro.query import QueryServer
+from repro.query.lanes import (
+    _lane_round_stacked, init_lane_values, make_stacked_lanes_fn,
+)
+
+
+def _mixed_queries(g, n_queries, seed=0):
+    rng = np.random.default_rng(seed)
+    deg = np.argsort(-g.out_degrees())
+    pool = deg[: max(4 * n_queries, 64)]
+    roots = rng.choice(pool, size=n_queries, replace=False)
+    return [("bfs" if i % 2 == 0 else "sssp", int(r))
+            for i, r in enumerate(roots)]
+
+
+def _timed_run(fn, init, unitw, chg, repeats):
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(init, unitw, chg)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def bench_batch_vs_serial(part, queries, cfg, repeats=3):
+    fn = make_stacked_lanes_fn(part, cfg)
+    slot_valid = jnp.asarray(part.slot_vertex >= 0)
+
+    def prep(qs):
+        init, unitw = init_lane_values(part, qs)
+        init = jnp.asarray(init)
+        chg = actions.SSSP.improved(init, jnp.full_like(init, jnp.inf)) \
+            & slot_valid[..., None]
+        return init, jnp.asarray(unitw), chg
+
+    # batched: all queries as lanes of one fixpoint
+    init, unitw, chg = prep(queries)
+    fn(init, unitw, chg)[0].block_until_ready()      # compile Q=K
+    (val_b, stats_b), wall_batch = _timed_run(fn, init, unitw, chg, repeats)
+
+    # serial: one compiled Q=1 runner reused across the workload
+    solo = [prep([qr]) for qr in queries]
+    fn(*solo[0])[0].block_until_ready()              # compile Q=1
+    wall_serial = np.inf
+    serial_rounds = 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        serial_rounds = 0
+        for args in solo:
+            _, st = fn(*args)
+            serial_rounds += int(st.rounds[0])
+        wall_serial = min(wall_serial, time.perf_counter() - t0)
+
+    k = len(queries)
+    rounds_q = np.asarray(stats_b.rounds)
+    return {
+        "queries": k,
+        "serial": {"wall_s": wall_serial,
+                   "queries_per_s": k / wall_serial,
+                   "rounds_total": serial_rounds},
+        "batched": {"wall_s": wall_batch,
+                    "queries_per_s": k / wall_batch,
+                    "rounds_total": int(rounds_q.max()),
+                    "rounds_per_query": rounds_q.tolist(),
+                    "messages_per_query":
+                        np.asarray(stats_b.messages).tolist()},
+        "batched_speedup": wall_serial / wall_batch,
+        "batched_beats_serial": wall_batch < wall_serial,
+    }
+
+
+def bench_grid_cells(part, queries, cfg, max_rounds=64):
+    """Round-by-round OR-frontier grid-cell counts for the laned fused
+    kernel: cells live in >=1 lane vs the sum of per-lane counts a
+    serial fused loop would execute."""
+    arrays = engine.DeviceArrays.from_partition(part)
+    init, unitw = init_lane_values(part, queries)
+    val = jnp.asarray(init)
+    slot_valid = jnp.asarray(part.slot_vertex >= 0)
+    chg = actions.SSSP.improved(val, jnp.full_like(val, jnp.inf)) \
+        & slot_valid[..., None]
+    unitw = jnp.asarray(unitw)
+    total = part.S * part.R_max
+    rounds = []
+    for _ in range(max_rounds):
+        chg_h = np.asarray(chg)
+        if not chg_h.any():
+            break
+        or_frontier = chg_h.reshape(-1, chg_h.shape[-1]).any(axis=1)
+        cells_or = fused_grid_cells(
+            part.edge_dst_flat, part.edge_mask, part.edge_src_root_flat,
+            or_frontier, total)["fused_live"]
+        cells_serial = sum(
+            fused_grid_cells(
+                part.edge_dst_flat, part.edge_mask,
+                part.edge_src_root_flat,
+                chg_h.reshape(-1, chg_h.shape[-1])[:, q], total)
+            ["fused_live"]
+            for q in range(chg_h.shape[-1])
+            if chg_h[..., q].any())
+        rounds.append({"grid_cells_or_batched": cells_or,
+                       "grid_cells_serial_sum": cells_serial,
+                       "live_lanes":
+                           int(chg_h.reshape(-1, chg_h.shape[-1])
+                               .any(axis=0).sum())})
+        val, chg, _ = _lane_round_stacked(
+            actions.SSSP, arrays, cfg, part.S, part.R_max, unitw, val, chg)
+    return {
+        "per_round": rounds,
+        "grid_cells_or_total": sum(r["grid_cells_or_batched"]
+                                   for r in rounds),
+        "grid_cells_serial_total": sum(r["grid_cells_serial_sum"]
+                                       for r in rounds),
+    }
+
+
+def bench_server(part, queries, n_lanes, cfg):
+    srv = QueryServer(part, n_lanes=n_lanes, ppr_lanes=0, cfg=cfg)
+    t0 = time.perf_counter()
+    for kind, root in queries:
+        srv.submit(kind, root)
+    results = srv.run()
+    wall = time.perf_counter() - t0
+    lat = np.array([r.latency_s for r in results.values()])
+    rounds = np.array([r.rounds for r in results.values()])
+    return {
+        "queries": len(queries),
+        "lanes": n_lanes,
+        "wall_s": wall,
+        "queries_per_s": len(queries) / wall,
+        "ticks": srv.tick,
+        "lane_occupancy": srv.occupancy(),
+        "latency_s": {
+            "p50": float(np.percentile(lat, 50)),
+            "p90": float(np.percentile(lat, 90)),
+            "p99": float(np.percentile(lat, 99)),
+            "max": float(lat.max()),
+        },
+        "rounds_per_query": {
+            "p50": float(np.percentile(rounds, 50)),
+            "max": int(rounds.max()),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_query.json")
+    ap.add_argument("--scale", type=int, default=10,
+                    help="RMAT scale (n = 2**scale)")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--rpvo-max", type=int, default=4)
+    ap.add_argument("--lanes", type=int, default=16)
+    ap.add_argument("--server-queue", type=int, default=48)
+    args = ap.parse_args()
+
+    g = generators.rmat(args.scale, edge_factor=args.edge_factor, seed=7) \
+        .with_random_weights(seed=7)
+    part = build_partition(
+        g, PartitionConfig(num_shards=args.shards, rpvo_max=args.rpvo_max))
+    workload = _mixed_queries(g, args.lanes, seed=1)
+    deep_queue = _mixed_queries(g, args.server_queue, seed=2)
+
+    report = {
+        "bench": "query_serving",
+        "graph": {"kind": "rmat", "scale": args.scale,
+                  "edge_factor": args.edge_factor, "n": g.n,
+                  "num_edges": g.num_edges},
+        "config": {"shards": args.shards, "rpvo_max": args.rpvo_max,
+                   "lanes": args.lanes,
+                   "backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu"},
+        "notes": (
+            "serial = one query at a time through the same compiled Q=1 "
+            "laned runner; batched = the workload as lanes of one "
+            "fixpoint. Grid-cell counts mirror the laned fused kernel's "
+            "OR-frontier chunk skip vs the sum a serial fused loop "
+            "executes. The fused variant is reported under CPU interpret "
+            "mode, where kernel Python overhead dominates; the batching "
+            "ratio is the portable signal."),
+        "variants": {},
+    }
+
+    for label, cfg in (("jnp", engine.EngineConfig()),
+                       ("fused", engine.EngineConfig(use_pallas=True))):
+        entry = bench_batch_vs_serial(part, workload, cfg,
+                                      repeats=3 if label == "jnp" else 1)
+        print(f"{label:6s} serial={entry['serial']['wall_s']:.3f}s "
+              f"batched={entry['batched']['wall_s']:.3f}s "
+              f"speedup={entry['batched_speedup']:.2f}x "
+              f"({entry['batched']['queries_per_s']:.1f} q/s)")
+        report["variants"][label] = entry
+
+    report["grid_cells"] = bench_grid_cells(
+        part, workload, engine.EngineConfig(use_pallas=True))
+    gc = report["grid_cells"]
+    print(f"grid cells: batched-OR={gc['grid_cells_or_total']} "
+          f"serial-sum={gc['grid_cells_serial_total']}")
+
+    report["server"] = bench_server(part, deep_queue, args.lanes,
+                                    engine.EngineConfig())
+    sv = report["server"]
+    print(f"server {sv['queries']} queries / {sv['lanes']} lanes: "
+          f"{sv['queries_per_s']:.1f} q/s occupancy={sv['lane_occupancy']:.2f} "
+          f"p50={sv['latency_s']['p50']*1e3:.1f}ms "
+          f"p99={sv['latency_s']['p99']*1e3:.1f}ms")
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -71,6 +71,50 @@ def pagerank(g: COOGraph, damping: float = 0.85, iters: int = 30) -> np.ndarray:
     return score
 
 
+def connected_components(g: COOGraph) -> np.ndarray:
+    """Weakly connected components: per-vertex label = min vertex id in
+    the component (edges treated as undirected). Plain numpy BFS."""
+    indptr, indices, _ = COOGraph(
+        g.n, np.concatenate([g.src, g.dst]),
+        np.concatenate([g.dst, g.src]), None).csr()
+    label = np.full(g.n, -1, dtype=np.int64)
+    for v in range(g.n):
+        if label[v] >= 0:
+            continue
+        label[v] = v            # v is the smallest unvisited id -> the label
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            for w in indices[indptr[u] : indptr[u + 1]]:
+                if label[w] < 0:
+                    label[w] = v
+                    stack.append(int(w))
+    return label
+
+
+def personalized_pagerank(g: COOGraph, seed: int, damping: float = 0.85,
+                          tol: float = 1e-10,
+                          max_iters: int = 1000) -> np.ndarray:
+    """Personalized PageRank to tolerance: score = (1-d) * e_seed +
+    d * A^T (score / outdeg), dangling mass not redistributed (the same
+    per-iteration semantics as ``pagerank`` above)."""
+    out_deg = g.out_degrees().astype(np.float64)
+    score = np.zeros(g.n, dtype=np.float64)
+    score[seed] = 1.0
+    base = np.zeros(g.n, dtype=np.float64)
+    base[seed] = 1.0 - damping
+    for _ in range(max_iters):
+        contrib = np.where(out_deg > 0, score / np.maximum(out_deg, 1), 0.0)
+        incoming = np.zeros(g.n, dtype=np.float64)
+        np.add.at(incoming, g.dst, contrib[g.src])
+        new = base + damping * incoming
+        delta = np.abs(new - score).max()
+        score = new
+        if delta <= tol:
+            break
+    return score
+
+
 def bfs_frontier_trace(g: COOGraph, root: int) -> list[np.ndarray]:
     """List of per-round frontiers (vertex id arrays). Round k's frontier
     diffuses along its out-edges in round k+1 — the message trace the

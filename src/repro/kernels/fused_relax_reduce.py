@@ -133,6 +133,60 @@ def _kernel(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
             out_ref[...] = jnp.minimum(out_ref[...], contrib)
 
 
+def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
+                  ids_ref, src_ref, w_ref, mask_ref, unitw_ref, gval_ref,
+                  out_ref, *, relax_kind, kind):
+    """Lane-batched kernel body: the value table carries a trailing query
+    axis ``Q`` and every edge relaxes all lanes at once.  ``unitw_ref``
+    (Q,) selects, per lane, whether 'add_w' reads the edge weight or the
+    constant 1.0 — BFS lanes are SSSP lanes over unit weights, so one
+    launch serves a mixed BFS/SSSP batch with bit-identical per-lane math.
+    The frontier chunk skip uses the OR across lanes (``chunk_act``): a
+    grid cell is skipped only when its edge chunk is dead in EVERY lane."""
+    i = pl.program_id(0)  # segment block
+    j = pl.program_id(1)  # edge chunk
+
+    identity = jnp.inf if kind == "min" else 0.0
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    seg0 = i * SBLK
+    intersects = (chunk_hi_ref[j] >= seg0) & (chunk_lo_ref[j] < seg0 + SBLK)
+    live = intersects & (chunk_act_ref[j] > 0)
+
+    @pl.when(live)
+    def _compute():
+        src = src_ref[...]                       # (EBLK,) int32
+        src_val = jnp.take(gval_ref[...], src, axis=0)   # (EBLK, Q)
+        w = w_ref[...]
+        if relax_kind == "add_w":
+            w_eff = jnp.where(unitw_ref[...][None, :] > 0,
+                              jnp.asarray(1.0, w.dtype), w[:, None])
+            msg = src_val + w_eff
+        else:                                    # 'mul_w'
+            msg = src_val * w[:, None]
+        msg = jnp.where(mask_ref[...][:, None] > 0, msg,
+                        jnp.asarray(identity, msg.dtype))
+
+        local = ids_ref[...] - seg0
+        cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
+        hit = local[:, None] == cols             # (EBLK, SBLK)
+        if kind == "sum":
+            # one-hot matmul -> (SBLK, Q) MXU systolic reduction
+            contrib = jnp.dot(
+                hit.astype(msg.dtype).T, msg,
+                preferred_element_type=jnp.float32,
+            ).astype(out_ref.dtype)
+            out_ref[...] += contrib
+        else:
+            padded = jnp.where(hit[:, :, None], msg[:, None, :],
+                               jnp.asarray(identity, msg.dtype))
+            contrib = jnp.min(padded, axis=0)    # (SBLK, Q) VPU reduction
+            out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
 def _chunk_tables(ids_p, src_p, mask_i, gchg_i):
     """Scalar-prefetch tables: per-chunk [lo, hi] id range + frontier bit.
     Also returns the total active-edge count (the Fig-6 message counter) —
@@ -218,6 +272,104 @@ def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
       ids_p, src_p, w_p, mask_i, gval_p)
     if with_count:
         return out[:num_segments], msg_count
+    return out[:num_segments]
+
+
+def _chunk_tables_lanes(ids_p, src_p, mask_i, gchg_iq):
+    """Laned scalar-prefetch tables. ``gchg_iq``: (v_pad, Q) int32 per-lane
+    frontier. The chunk-skip bit is the OR across lanes — a chunk is dead
+    only when no lane has an active source in it; the per-lane active-edge
+    counts (the Fig-6 message counters, one per query) ride along."""
+    e_pad = ids_p.shape[0]
+    idc = ids_p.reshape(e_pad // EBLK, EBLK)
+    valid = mask_i.reshape(e_pad // EBLK, EBLK) > 0
+    chunk_lo = jnp.where(valid, idc, jnp.iinfo(jnp.int32).max).min(axis=1)
+    chunk_hi = jnp.where(valid, idc, -1).max(axis=1)
+    src_act = jnp.where(
+        valid[..., None],
+        jnp.take(gchg_iq, src_p.reshape(valid.shape), axis=0), 0)
+    chunk_act = src_act.max(axis=(1, 2)).astype(jnp.int32)
+    return chunk_lo, chunk_hi, chunk_act, src_act.sum(axis=(0, 1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count"))
+def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
+                                    edge_mask, edge_dst, num_segments: int,
+                                    relax_kind: str, kind: str,
+                                    interpret: bool = True,
+                                    with_count: bool = False):
+    """Lane-batched fused gather/relax/mask/segment-reduce (ISSUE 2).
+
+    The single-query kernel grown a trailing query-lane axis ``Q``:
+    ``gval``/``gchg`` are (V, Q) — per-lane values and per-lane frontiers
+    over one shared edge structure — and the result is the (num_segments,
+    Q) per-lane inbox partial (plus, with ``with_count=True``, the (Q,)
+    per-lane active-edge counts).  ``lane_unitw`` (Q,) only matters for
+    ``relax_kind='add_w'``: lanes with a nonzero flag relax with the
+    constant weight 1.0 (BFS levels) instead of the edge weight (SSSP), so
+    one launch serves a mixed BFS/SSSP batch.  A converged lane has an
+    all-False ``gchg`` column: its sources read as the absorbing identity,
+    so it contributes nothing while live lanes keep the round busy — and
+    the chunk-skip bitmap is the OR across lanes, so a grid cell is
+    skipped only when its edge chunk is frontier-dead in *every* lane.
+
+    Same VMEM scale constraint as the single-query kernel, times Q: the
+    whole (v_pad, Q) table rides into every grid cell.  The trailing lane
+    axis is not padded to the 128-lane TPU tile — fine under interpret
+    mode (this container); real-TPU lane padding is a ROADMAP open item.
+    """
+    assert relax_kind in ("add_w", "mul_w"), relax_kind
+    if (relax_kind, kind) not in ABSORBING_PAIRS:
+        raise ValueError(
+            f"non-absorbing relax/combine pairing {(relax_kind, kind)}: "
+            "frontier masking requires relax(identity, w) == identity "
+            f"(supported: {sorted(ABSORBING_PAIRS)})")
+    v, q = gval.shape
+    e = edge_src.shape[0]
+    e_pad = -(-e // EBLK) * EBLK
+    s_pad = -(-num_segments // SBLK) * SBLK
+    v_pad = -(-max(v, 1) // 128) * 128
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_m = jnp.where(gchg, gval, jnp.asarray(identity, gval.dtype))
+    gval_p = jnp.full((v_pad, q), identity, gval.dtype).at[:v].set(gval_m)
+    gchg_p = jnp.zeros((v_pad, q), jnp.int32).at[:v].set(
+        gchg.astype(jnp.int32))
+    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_dst.astype(jnp.int32))
+    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_src.astype(jnp.int32))
+    w_p = jnp.zeros((e_pad,), edge_w.dtype).at[:e].set(edge_w)
+    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_mask.astype(jnp.int32))
+    unitw = jnp.asarray(lane_unitw, jnp.int32).reshape(q)
+
+    chunk_lo, chunk_hi, chunk_act, msg_counts = _chunk_tables_lanes(
+        ids_p, src_p, mask_i, gchg_p)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
+    lane_spec = pl.BlockSpec((q,), lambda i, j, lo, hi, act: (0,))
+    full_spec = pl.BlockSpec((v_pad, q), lambda i, j, lo, hi, act: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel_lanes, relax_kind=relax_kind, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      lane_spec, full_spec],
+            out_specs=pl.BlockSpec((SBLK, q),
+                                   lambda i, j, lo, hi, act: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_pad, q), gval.dtype),
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act,
+      ids_p, src_p, w_p, mask_i, unitw, gval_p)
+    if with_count:
+        return out[:num_segments], msg_counts
     return out[:num_segments]
 
 

@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.fused_relax_reduce import fused_relax_reduce_pallas
+from repro.kernels.fused_relax_reduce import (
+    fused_relax_reduce_lanes_pallas, fused_relax_reduce_pallas,
+)
 from repro.kernels.rhizome_segment_reduce import segment_combine_pallas
 
 
@@ -31,4 +33,17 @@ def fused_relax_reduce(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
     return fused_relax_reduce_pallas(
         gval, gchg, edge_src, edge_w, edge_mask, edge_dst, num_segments,
         relax_kind, kind, interpret=_interpret(), with_count=True
+    )
+
+
+def fused_relax_reduce_lanes(gval, gchg, lane_unitw, edge_src, edge_w,
+                             edge_mask, edge_dst, num_segments: int,
+                             relax_kind: str, kind: str):
+    """Lane-batched fused relax phase: per-lane (V, Q) values/frontiers
+    over one shared edge structure, one launch for all queries.  Returns
+    ((num_segments, Q) partial, (Q,) per-lane active-edge counts)."""
+    return fused_relax_reduce_lanes_pallas(
+        gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst,
+        num_segments, relax_kind, kind, interpret=_interpret(),
+        with_count=True
     )

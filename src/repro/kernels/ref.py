@@ -38,6 +38,33 @@ def fused_relax_reduce_ref(gval, gchg, edge_src, edge_w, edge_mask,
     return segment_combine_ref(msg, edge_dst, num_segments, kind)
 
 
+def fused_relax_reduce_lanes_ref(gval, gchg, lane_unitw, edge_src, edge_w,
+                                 edge_mask, edge_dst, num_segments: int,
+                                 relax_kind: str, kind: str):
+    """Oracle for the lane-batched fused kernel: per-lane gather / relax /
+    frontier-mask / segment-combine with every (E, Q) intermediate
+    materialized.  ``lane_unitw`` (Q,) swaps the edge weight for 1.0 per
+    lane under 'add_w' (BFS lanes inside an SSSP launch)."""
+    src_val = jnp.take(gval, edge_src, axis=0)            # (E, Q)
+    active = edge_mask[:, None] & jnp.take(gchg, edge_src, axis=0)
+    if relax_kind == "add_w":
+        w_eff = jnp.where(jnp.asarray(lane_unitw)[None, :] > 0,
+                          jnp.asarray(1.0, edge_w.dtype), edge_w[:, None])
+        msg = src_val + w_eff
+    elif relax_kind == "mul_w":
+        msg = src_val * edge_w[:, None]
+    else:
+        raise ValueError(relax_kind)
+    identity = jnp.inf if kind == "min" else 0.0
+    msg = jnp.where(active, msg, jnp.asarray(identity, msg.dtype))
+    init = jnp.full((num_segments, gval.shape[1]), identity, msg.dtype)
+    if kind == "min":
+        return init.at[edge_dst].min(msg)
+    if kind == "sum":
+        return init.at[edge_dst].add(msg)
+    raise ValueError(kind)
+
+
 def frontier_relax_ref(values, src_flat, weights, mask, kind: str):
     """Gather + relax: msg_e = values[src_e] (+ w_e | * w_e), masked to the
     semiring identity. values: (V,), src_flat/weights/mask: (E,)."""

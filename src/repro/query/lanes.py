@@ -1,0 +1,468 @@
+"""Lane-batched multi-query fixpoint execution (ISSUE 2 tentpole).
+
+The paper's runtime keeps every compute cell busy by letting actions spawn
+fine-grain work; serving heavy traffic means the unit of load is *many
+concurrent source-rooted queries* over one shared rhizome-partitioned
+graph.  Here the engine's value table grows a trailing **query-lane axis
+Q**: values are ``(S, R_max, Q)``, the ``changed`` frontier is per-lane,
+and one relax round advances every live query at once — the batching
+answer to per-query underutilization in vertex-centric systems (iPregel;
+Yan et al.), amortizing message/synchronization cost across queries.
+
+Per-lane convergence is free: a lane whose frontier column is all-False
+reads as the absorbing identity inside the relax, so it stops relaxing
+while the round keeps running for live lanes; the fused kernel's frontier
+chunk-skip bitmap becomes the OR across lanes (a grid cell is skipped
+only when its edge chunk is dead in *every* lane — see
+``kernels.fused_relax_reduce.fused_relax_reduce_lanes_pallas``).
+
+One compiled round serves a **mixed BFS/SSSP batch**: all min-semiring
+queries relax with 'add_w', and the per-lane ``lane_unitw`` flag swaps
+the edge weight for the constant 1.0 (BFS levels are SSSP distances over
+unit weights — the same float op, so a batched lane is bit-identical to
+its solo ``engine.run_stacked`` run).  Sum-semiring lanes (personalized
+PageRank, per-lane seed/damping) run as counted ``make_ppr_round`` rounds
+with a per-lane tolerance-based convergence mask.
+
+Laned execution is dense-exchange / eager-collapse only (the compact
+targeted exchange stays single-query; ROADMAP open item).
+"""
+from __future__ import annotations
+
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import actions, engine
+from repro.core.actions import Semiring
+from repro.core.engine import DeviceArrays, EngineConfig
+from repro.core.partition import Partition
+
+
+UNREACHED = np.iinfo(np.int32).max
+
+
+def decode_min_values(vv: np.ndarray, kind: str) -> np.ndarray:
+    """Decode a min-lane's per-vertex values for its query kind: 'bfs' ->
+    int64 levels with the UNREACHED sentinel, 'reachability' -> bool,
+    'sssp' -> float64 distances (inf where unreachable).  The single
+    decoding point for batched apps and the QueryServer."""
+    if kind == "bfs":
+        out = np.where(np.isfinite(vv), vv, 0).astype(np.int64)
+        out[~np.isfinite(vv)] = UNREACHED
+        return out
+    if kind == "reachability":
+        return np.isfinite(vv)
+    if kind == "sssp":
+        return vv.astype(np.float64)
+    raise ValueError(f"unknown min-lane query kind {kind!r}")
+
+
+class LaneStats(typing.NamedTuple):
+    """Per-lane (Q,) counters — the Fig-6 statistics, one per query."""
+
+    rounds: jax.Array        # rounds in which the lane was live
+    messages: jax.Array      # actions delivered (active edges) per lane
+    work_actions: jax.Array  # predicate-true slot updates per lane
+
+
+def _check_cfg(cfg: EngineConfig):
+    if cfg.exchange != "dense":
+        raise ValueError(
+            "lane-batched runners support exchange='dense' only (the "
+            "compact targeted exchange is single-query; ROADMAP)")
+    if cfg.collapse != "eager":
+        raise ValueError("lane-batched runners support collapse='eager' only")
+    if cfg.use_pallas and cfg.pallas_mode != "fused":
+        raise ValueError(
+            "lane-batched Pallas execution is fused-only (the pre-fusion "
+            "'reduce' composition has no laned form)")
+
+
+def _check_min(sem: Semiring):
+    # the laned round relaxes with 'add_w' + the per-lane unitw flag, so a
+    # semiring whose own relax differs (e.g. BFS 'add_one') must not be
+    # accepted and silently re-relaxed with edge weights — BFS lanes are
+    # expressed as lane_unitw=1 under the SSSP semiring instead
+    if sem.segment != "min" or sem.relax_kind != "add_w":
+        raise ValueError(
+            "laned runners drive min-semiring 'add_w' fixpoints (express "
+            "BFS lanes with lane_unitw=1, not the 'add_one' semiring); "
+            "sum semirings run as make_ppr_round counted rounds")
+
+
+# --------------------------------------------------------------------------
+# shared laned per-round math (dense exchange)
+# --------------------------------------------------------------------------
+
+def _lane_relax_dense(cfg: EngineConfig, edge_src, edge_w, edge_mask,
+                      edge_dst, gval, gchg, lane_unitw, num_segments,
+                      relax_kind, kind):
+    """Laned relax phase over one edge set: gather per-lane sources, relax
+    all lanes, partial-reduce per lane.  ``gval``/``gchg``: (V, Q).
+    Returns ((num_segments, Q) partial, (Q,) per-lane message counts)."""
+    src = edge_src.reshape(-1)
+    ids = edge_dst.reshape(-1)
+    w = edge_w.reshape(-1)
+    mask = edge_mask.reshape(-1)
+    q = gval.shape[-1]
+    identity = jnp.inf if kind == "min" else 0.0
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        partial, counts = kops.fused_relax_reduce_lanes(
+            gval, gchg, lane_unitw, src, w, mask, ids, num_segments,
+            relax_kind=relax_kind, kind=kind)
+        if not cfg.track_stats:
+            counts = jnp.zeros((q,), jnp.int32)
+        return partial, counts
+    src_val = jnp.take(gval, src, axis=0)                  # (E, Q)
+    active = mask[:, None] & jnp.take(gchg, src, axis=0)
+    if relax_kind == "add_w":
+        w_eff = jnp.where(lane_unitw[None, :] > 0,
+                          jnp.asarray(1.0, w.dtype), w[:, None])
+        msg = src_val + w_eff
+    else:                                                  # 'mul_w'
+        msg = src_val * w[:, None]
+    msg = jnp.where(active, msg, jnp.asarray(identity, msg.dtype))
+    init = jnp.full((num_segments, q), identity, msg.dtype)
+    partial = (init.at[ids].min(msg) if kind == "min"
+               else init.at[ids].add(msg))
+    counts = (active.sum(axis=0, dtype=jnp.int32) if cfg.track_stats
+              else jnp.zeros((q,), jnp.int32))
+    return partial, counts
+
+
+def _collapse_lanes(sem: Semiring, gx, sibling_flat, sibling_mask):
+    """Laned rhizome collapse: ``gx`` (V, Q); sibling tables index the
+    leading axis, the lane axis rides along."""
+    sib = jnp.take(gx, sibling_flat, axis=0)       # (..., K, Q)
+    sib = jnp.where(sibling_mask[..., None], sib,
+                    jnp.asarray(sem.identity, sib.dtype))
+    return (jnp.min(sib, axis=-2) if sem.segment == "min"
+            else jnp.sum(sib, axis=-2))
+
+
+def _lane_round_stacked(sem, arrays, cfg, S, R_max, lane_unitw, val, chg):
+    """One stacked dense laned fixpoint round: relax -> inbox combine ->
+    rhizome collapse -> per-lane predicate.  val/chg: (S, R_max, Q)."""
+    q = val.shape[-1]
+    total = S * R_max
+    gval = val.reshape(total, q)
+    gchg = chg.reshape(total, q)
+    inbox, counts = _lane_relax_dense(
+        cfg, arrays.edge_src_root_flat, arrays.edge_w, arrays.edge_mask,
+        arrays.edge_dst_flat, gval, gchg, lane_unitw, total, "add_w", "min")
+    cand = sem.combine(val, inbox.reshape(S, R_max, q))
+    cand = _collapse_lanes(sem, cand.reshape(total, q),
+                           arrays.sibling_flat, arrays.sibling_mask)
+    new_chg = sem.improved(cand, val) & arrays.slot_valid[..., None]
+    return cand, new_chg, counts
+
+
+# --------------------------------------------------------------------------
+# stacked laned fixpoint runner (BFS / SSSP / reachability / CC lanes)
+# --------------------------------------------------------------------------
+
+def make_stacked_lanes_fn(part: Partition,
+                          cfg: EngineConfig = EngineConfig(),
+                          sem: Semiring = actions.SSSP):
+    """Builds the stacked laned fixpoint as a jitted fn of ((S, R_max, Q)
+    init values, (Q,) lane_unitw, (S, R_max, Q) init changed) ->
+    (values, LaneStats).  Q is encoded in the argument shapes, so one
+    returned fn serves any lane count (jit specializes per Q).  Hold on
+    to the returned fn to amortize tracing across calls — the serving
+    loop and ``benchmarks/query_bench.py`` compile it once."""
+    _check_cfg(cfg)
+    _check_min(sem)
+    arrays = DeviceArrays.from_partition(part)
+    S, R_max = part.S, part.R_max
+
+    @jax.jit
+    def fn(init_val, lane_unitw, init_chg):
+        q = init_val.shape[-1]
+
+        def body(carry):
+            val, chg, it, stats = carry
+            live = chg.reshape(-1, q).any(axis=0)
+            new_val, new_chg, counts = _lane_round_stacked(
+                sem, arrays, cfg, S, R_max, lane_unitw, val, chg)
+            stats = LaneStats(
+                rounds=stats.rounds + live.astype(jnp.int32),
+                messages=stats.messages + counts,
+                work_actions=stats.work_actions
+                + new_chg.sum(axis=(0, 1), dtype=jnp.int32),
+            )
+            return new_val, new_chg, it + 1, stats
+
+        def cond(carry):
+            _, chg, it, _ = carry
+            return jnp.any(chg) & (it < cfg.max_iters)
+
+        zero_q = jnp.zeros((q,), jnp.int32)
+        stats0 = LaneStats(zero_q, zero_q, zero_q)
+        val, chg, it, stats = lax.while_loop(
+            cond, body,
+            (init_val, init_chg, jnp.zeros((), jnp.int32), stats0))
+        return val, stats
+
+    return fn
+
+
+def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
+                      cfg: EngineConfig = EngineConfig(),
+                      init_changed=None, sem: Semiring = actions.SSSP):
+    """Single-device lane-batched execution. ``init_val``: (S, R_max, Q)
+    float32 — one query per lane; ``lane_unitw`` (Q,) marks BFS-style
+    lanes (relax with weight 1.0).  A lane converges when no slot of its
+    column improves; the round keeps running while any lane is live.
+    Returns ((S, R_max, Q) values, per-lane ``LaneStats``)."""
+    init_val = jnp.asarray(init_val, jnp.float32)
+    if init_val.ndim != 3:
+        raise ValueError(f"init_val must be (S, R_max, Q); got "
+                         f"{init_val.shape}")
+    q = init_val.shape[-1]
+    lane_unitw = (jnp.zeros((q,), jnp.int32) if lane_unitw is None
+                  else jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+    fn = make_stacked_lanes_fn(part, cfg, sem)
+    slot_valid = jnp.asarray(part.slot_vertex >= 0)
+    if init_changed is not None:
+        init_chg = jnp.asarray(init_changed) & slot_valid[..., None]
+    else:
+        init_chg = sem.improved(
+            init_val, jnp.full_like(init_val, sem.identity)
+        ) & slot_valid[..., None]
+    return fn(init_val, lane_unitw, init_chg)
+
+
+# --------------------------------------------------------------------------
+# sharded laned fixpoint (shard_map over a real mesh)
+# --------------------------------------------------------------------------
+
+def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
+                          axis_names=("data", "model"),
+                          cfg: EngineConfig = EngineConfig(),
+                          sem: Semiring = actions.SSSP):
+    """shard_map laned fixpoint as a jit-able fn of (DeviceArrays,
+    (S, R_max, Q) val, (Q,) lane_unitw) -> (val, LaneStats).  Same
+    collective plan as ``engine.make_sharded_fn`` with the lane axis
+    riding along: value/changed all_gather, (S, R_max, Q) inbox
+    all_to_all, sibling collapse over the gathered table, per-lane
+    psum'd liveness for the termination test."""
+    _check_cfg(cfg)
+    _check_min(sem)
+    axis_names = engine._axis(axis_names)
+    total = S * R_max
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (
+        DeviceArrays(*([spec] * len(DeviceArrays._fields))),
+        spec,
+        P(),                                   # lane_unitw: replicated
+    )
+
+    def shard_fn(arrays_l: DeviceArrays, val_l, lane_unitw):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        val = val_l[0]                         # (R_max, Q)
+
+        def gather(x):
+            return lax.all_gather(x, axis_names, tiled=True)
+
+        def round_fn(val, chg):
+            gval, gchg = gather(val), gather(chg)      # (S*R_max, Q)
+            partial, counts = _lane_relax_dense(
+                cfg, arrays_s.edge_src_root_flat, arrays_s.edge_w,
+                arrays_s.edge_mask, arrays_s.edge_dst_flat,
+                gval, gchg, lane_unitw, total, "add_w", "min")
+            recv = lax.all_to_all(
+                partial.reshape(S, R_max, Q), axis_names,
+                split_axis=0, concat_axis=0, tiled=True)
+            inbox = jnp.min(recv.reshape(S, R_max, Q), axis=0)
+            cand = sem.combine(val, inbox)
+            cand = _collapse_lanes(sem, gather(cand),
+                                   arrays_s.sibling_flat,
+                                   arrays_s.sibling_mask)
+            new_chg = sem.improved(cand, val) & arrays_s.slot_valid[..., None]
+            return cand, new_chg, counts
+
+        def body(carry):
+            val, chg, it, stats = carry
+            live = lax.psum(
+                chg.reshape(-1, Q).any(axis=0).astype(jnp.int32),
+                axis_names) > 0
+            new_val, new_chg, counts = round_fn(val, chg)
+            stats = LaneStats(
+                rounds=stats.rounds + live.astype(jnp.int32),
+                messages=stats.messages + lax.psum(counts, axis_names),
+                work_actions=stats.work_actions + lax.psum(
+                    new_chg.sum(axis=0, dtype=jnp.int32), axis_names),
+            )
+            return new_val, new_chg, it + 1, stats
+
+        def cond(carry):
+            _, chg, it, _ = carry
+            anyc = lax.psum(chg.any().astype(jnp.int32), axis_names)
+            return (anyc > 0) & (it < cfg.max_iters)
+
+        init_chg = (
+            sem.improved(val, jnp.full_like(val, sem.identity))
+            & arrays_s.slot_valid[..., None]
+        )
+        zero_q = jnp.zeros((Q,), jnp.int32)
+        stats0 = LaneStats(zero_q, zero_q, zero_q)
+        val, chg, it, stats = lax.while_loop(
+            cond, body, (val, init_chg, jnp.zeros((), jnp.int32), stats0))
+        return val[None], jax.tree.map(lambda x: x[None], stats)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(spec, LaneStats(*([spec] * 3))),
+        check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
+
+
+def run_sharded_lanes(part: Partition, init_val, lane_unitw=None,
+                      mesh: Mesh = None, axis_names=("data", "model"),
+                      cfg: EngineConfig = EngineConfig(),
+                      sem: Semiring = actions.SSSP):
+    """shard_map laned execution; layout as in ``engine.run_sharded``."""
+    init_val = jnp.asarray(init_val, jnp.float32)
+    q = init_val.shape[-1]
+    lane_unitw = (np.zeros((q,), np.int32) if lane_unitw is None
+                  else np.asarray(lane_unitw, np.int32).reshape(q))
+    fn, sharding = make_sharded_lanes_fn(
+        part.S, part.R_max, q, mesh, axis_names, cfg, sem)
+    arrays = DeviceArrays.from_partition(part)
+    arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
+    val_dev = jax.device_put(init_val, sharding)
+    val, stats = fn(arrays_dev, val_dev, jnp.asarray(lane_unitw))
+    stats = jax.tree.map(lambda x: x[0], stats)
+    return val, stats
+
+
+# --------------------------------------------------------------------------
+# personalized-PageRank lanes (sum semiring, per-lane seed/damping)
+# --------------------------------------------------------------------------
+
+def make_ppr_round(part: Partition, cfg: EngineConfig = EngineConfig(),
+                   arrays: DeviceArrays | None = None):
+    """Builds the jitted laned PPR round: (val, base, damping, live) ->
+    (new_val, (Q,) max-abs delta, (Q,) message counts).  Pass ``arrays``
+    to share one device copy of the static graph tables with other
+    round fns over the same partition (the QueryServer does).
+
+    One round is relax(mul_w) -> dense exchange -> rhizome-collapse(+)
+    over the inbox -> per-lane damping update ``base + d_q * total_in``;
+    ``base`` is the per-lane personalization table ((1-d_q) at the seed's
+    replicas — see ``ppr_base_table``).  ``live`` (Q,) freezes converged
+    lanes: their frontier column is masked off (they cost no messages)
+    and their values are carried through unchanged, so a lane evicted by
+    the server stays bit-stable while other lanes keep iterating."""
+    _check_cfg(cfg)
+    if arrays is None:
+        arrays = DeviceArrays.from_partition(part)
+    S, R_max = part.S, part.R_max
+    sem = actions.PAGERANK
+    total = S * R_max
+
+    def round_fn(val, base, damping, live):
+        q = val.shape[-1]
+        gchg = (arrays.slot_valid[..., None] & live[None, None, :]) \
+            .reshape(total, q)
+        inbox, counts = _lane_relax_dense(
+            cfg, arrays.edge_src_root_flat, arrays.edge_w,
+            arrays.edge_mask, arrays.edge_dst_flat,
+            val.reshape(total, q), gchg, jnp.zeros((q,), jnp.int32),
+            total, "mul_w", "sum")
+        total_in = _collapse_lanes(
+            sem, inbox, arrays.sibling_flat, arrays.sibling_mask)
+        new = jnp.where(arrays.slot_valid[..., None],
+                        base + damping[None, None, :] * total_in, 0.0)
+        new = jnp.where(live[None, None, :], new, val)
+        delta = jnp.abs(new - val).max(axis=(0, 1))
+        return new, delta, counts
+
+    return jax.jit(round_fn)
+
+
+def run_ppr_lanes(part: Partition, seeds, dampings,
+                  cfg: EngineConfig = EngineConfig(), tol: float = 1e-6,
+                  max_rounds: int = 256):
+    """Lane-batched personalized PageRank to tolerance.  ``seeds``: one
+    personalization vertex per lane; ``dampings``: per-lane damping
+    (scalar broadcasts).  A lane converges when its max-abs score delta
+    drops to ``tol``; live lanes keep the shared round busy.  Returns
+    ((S, R_max, Q) scores, per-lane ``LaneStats``)."""
+    q = len(seeds)
+    dampings = np.broadcast_to(np.asarray(dampings, np.float32), (q,)).copy()
+    base = ppr_base_table(part, seeds, dampings)
+    val0 = np.stack(
+        [engine.init_values(part, actions.PAGERANK, {int(s): 1.0})
+         for s in seeds], axis=-1).astype(np.float32)
+    round_fn = make_ppr_round(part, cfg)
+
+    def body(carry):
+        val, live, it, stats = carry
+        new_val, delta, counts = round_fn(
+            val, jnp.asarray(base), jnp.asarray(dampings), live)
+        stats = LaneStats(
+            rounds=stats.rounds + live.astype(jnp.int32),
+            messages=stats.messages + counts,
+            work_actions=stats.work_actions + live.astype(jnp.int32)
+            * jnp.sum(jnp.asarray(part.slot_vertex >= 0), dtype=jnp.int32),
+        )
+        return new_val, live & (delta > tol), it + 1, stats
+
+    def cond(carry):
+        _, live, it, _ = carry
+        return jnp.any(live) & (it < max_rounds)
+
+    zero_q = jnp.zeros((q,), jnp.int32)
+    val, live, it, stats = lax.while_loop(
+        cond, body,
+        (jnp.asarray(val0), jnp.ones((q,), bool), jnp.zeros((), jnp.int32),
+         LaneStats(zero_q, zero_q, zero_q)))
+    return val, stats
+
+
+# --------------------------------------------------------------------------
+# lane state builders (also used by the QueryServer's masked injection)
+# --------------------------------------------------------------------------
+
+def init_lane_values(part: Partition, queries) -> tuple[np.ndarray,
+                                                        np.ndarray]:
+    """Builds ((S, R_max, Q) init values, (Q,) lane_unitw) for a batch of
+    min-semiring queries.  ``queries``: list of ("bfs" | "sssp",
+    sources) where sources is a vertex, a list of vertices (multi-source:
+    all seeded at 0), or a {vertex: value} dict."""
+    vals, unitw = [], []
+    for kind, sources in queries:
+        if kind not in ("bfs", "sssp"):
+            raise ValueError(f"unknown min-lane query kind {kind!r}")
+        if isinstance(sources, dict):
+            src = {int(v): float(x) for v, x in sources.items()}
+        elif isinstance(sources, (list, tuple, np.ndarray)):
+            src = {int(v): 0.0 for v in sources}
+        else:
+            src = {int(sources): 0.0}
+        vals.append(engine.init_values(part, actions.SSSP, src))
+        unitw.append(1 if kind == "bfs" else 0)
+    return (np.stack(vals, axis=-1).astype(np.float32),
+            np.asarray(unitw, np.int32))
+
+
+def ppr_base_table(part: Partition, seeds, dampings) -> np.ndarray:
+    """(S, R_max, Q) per-lane personalization base: (1 - d_q) at every
+    replica of lane q's seed vertex (consistent view), 0 elsewhere."""
+    q = len(seeds)
+    dampings = np.broadcast_to(np.asarray(dampings, np.float32), (q,))
+    cols = [engine.init_values(part, actions.PAGERANK,
+                               {int(s): float(1.0 - d)})
+            for s, d in zip(seeds, dampings)]
+    return np.stack(cols, axis=-1).astype(np.float32)

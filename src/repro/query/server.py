@@ -1,0 +1,293 @@
+"""Continuous-batching graph query server (ISSUE 2 tentpole).
+
+The graph-query analog of ``serve.scheduler.ContinuousBatcher``: a pool
+of ``Q`` query lanes shares one compiled round step per semiring class
+(a min-pool for BFS / SSSP / reachability, a sum-pool for personalized
+PageRank).  Requests join free lanes mid-flight via masked state
+injection — the new lane's (S, R_max) column of values and frontier is
+written into the batched tables between rounds — and are evicted the
+round they converge, so a nearby-source BFS never waits on a
+diameter-spanning SSSP (no head-of-line blocking: the serving analog of
+the paper's always-busy compute cells).
+
+A freed lane is inert by construction: its ``changed`` column is
+all-False, so it reads as the absorbing identity inside the shared relax
+and contributes nothing until the next injection overwrites it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actions, engine
+from repro.core.engine import EngineConfig
+from repro.core.partition import Partition
+from repro.query import lanes as L
+
+MIN_KINDS = ("bfs", "sssp", "reachability")
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One source-rooted query over the served graph.
+
+    kind: 'bfs' | 'sssp' | 'reachability' (min-pool) or 'ppr' (sum-pool).
+    sources: vertex id, list of vertices (multi-source), or {vertex:
+    initial value} dict; for 'ppr' a single personalization seed vertex.
+    """
+
+    qid: int
+    kind: str
+    sources: object
+    damping: float = 0.85        # ppr only
+    tol: float = 1e-6            # ppr only
+
+    def __post_init__(self):
+        if self.kind not in MIN_KINDS + ("ppr",):
+            raise ValueError(f"unknown query kind {self.kind!r}")
+        if self.kind == "ppr" \
+                and np.asarray(self.sources).reshape(-1).size != 1:
+            raise ValueError(
+                "ppr takes a single personalization seed vertex; "
+                "multi-seed personalization is not supported")
+
+
+@dataclasses.dataclass
+class QueryResult:
+    qid: int
+    kind: str
+    values: np.ndarray           # (n,) levels / distances / bool / scores
+    rounds: int                  # rounds the lane was live
+    messages: int                # actions delivered for this query
+    lane: int                    # lane the query ran in
+    admitted_tick: int
+    completed_tick: int
+    latency_s: float             # submit -> completion (includes queue wait)
+
+
+class _MinPool:
+    """Min-semiring lane pool: one compiled laned fixpoint round."""
+
+    def __init__(self, part: Partition, n_lanes: int, cfg: EngineConfig,
+                 arrays: engine.DeviceArrays):
+        self.part, self.n = part, n_lanes
+        S, R_max = part.S, part.R_max
+        self.val = jnp.full((S, R_max, n_lanes), jnp.inf, jnp.float32)
+        self.chg = jnp.zeros((S, R_max, n_lanes), bool)
+        self.unitw = np.zeros(n_lanes, np.int32)
+        self.reqs: list[QueryRequest | None] = [None] * n_lanes
+
+        def round_fn(val, chg, unitw):
+            return L._lane_round_stacked(
+                actions.SSSP, arrays, cfg, S, R_max, unitw, val, chg)
+
+        import jax
+        self._round = jax.jit(round_fn)
+
+    def inject(self, lane: int, req: QueryRequest):
+        init, unitw = L.init_lane_values(
+            self.part, [("bfs" if req.kind == "reachability" else req.kind,
+                         req.sources)])
+        col = jnp.asarray(init[..., 0])
+        chg_col = (actions.SSSP.improved(col, jnp.full_like(col, jnp.inf))
+                   & jnp.asarray(self.part.slot_vertex >= 0))
+        self.val = self.val.at[:, :, lane].set(col)
+        self.chg = self.chg.at[:, :, lane].set(chg_col)
+        self.unitw[lane] = int(unitw[0])
+        self.reqs[lane] = req
+
+    def live(self) -> np.ndarray:
+        # reduce to (Q,) on device; never ship the whole changed table
+        return np.asarray(jnp.any(self.chg, axis=(0, 1)))
+
+    def step(self) -> np.ndarray:
+        """One shared round; returns (Q,) per-lane message counts."""
+        self.val, self.chg, counts = self._round(
+            self.val, self.chg, jnp.asarray(self.unitw))
+        return np.asarray(counts)
+
+    def extract(self, lane: int) -> np.ndarray:
+        vv = engine.vertex_values(self.part, self.val[:, :, lane])
+        return L.decode_min_values(vv, self.reqs[lane].kind)
+
+
+class _PprPool:
+    """Sum-semiring lane pool: per-lane seed/damping counted rounds with
+    tolerance-based convergence."""
+
+    def __init__(self, part: Partition, n_lanes: int, cfg: EngineConfig,
+                 arrays: engine.DeviceArrays):
+        self.part, self.n = part, n_lanes
+        S, R_max = part.S, part.R_max
+        self.val = jnp.zeros((S, R_max, n_lanes), jnp.float32)
+        # device-resident like `val`: only an injection touches it, so the
+        # per-tick round must not re-upload a table-sized host array
+        self.base = jnp.zeros((S, R_max, n_lanes), jnp.float32)
+        self.damping = np.zeros(n_lanes, np.float32)
+        self.tol = np.full(n_lanes, 1e-6, np.float32)
+        self.live_mask = np.zeros(n_lanes, bool)
+        self.reqs: list[QueryRequest | None] = [None] * n_lanes
+        self._round = L.make_ppr_round(part, cfg, arrays=arrays)
+
+    def inject(self, lane: int, req: QueryRequest):
+        srcs = np.asarray(req.sources).reshape(-1)
+        if srcs.size != 1:
+            raise ValueError(
+                f"ppr takes a single personalization seed; got "
+                f"{srcs.size} sources")
+        seed = int(srcs[0])
+        self.base = self.base.at[:, :, lane].set(jnp.asarray(
+            L.ppr_base_table(self.part, [seed], [req.damping])[..., 0]))
+        col = engine.init_values(self.part, actions.PAGERANK, {seed: 1.0})
+        self.val = self.val.at[:, :, lane].set(jnp.asarray(col))
+        self.damping[lane] = req.damping
+        self.tol[lane] = req.tol
+        self.live_mask[lane] = True
+        self.reqs[lane] = req
+
+    def live(self) -> np.ndarray:
+        return self.live_mask.copy()
+
+    def step(self) -> np.ndarray:
+        self.val, delta, counts = self._round(
+            self.val, self.base, jnp.asarray(self.damping),
+            jnp.asarray(self.live_mask))
+        self.live_mask &= np.asarray(delta) > self.tol
+        return np.asarray(counts)
+
+    def extract(self, lane: int) -> np.ndarray:
+        return engine.vertex_values(
+            self.part, self.val[:, :, lane]).astype(np.float64)
+
+
+class QueryServer:
+    """Continuous batcher over query lanes sharing one compiled round.
+
+    ``step()`` is one global round tick: admit queued requests into free
+    lanes, advance each pool one laned round, retire converged lanes.
+    ``run()`` drains the queue.  Occupancy / round / message counters are
+    kept per lane for the serving metrics in ``benchmarks/query_bench.py``.
+    """
+
+    def __init__(self, part: Partition, n_lanes: int = 8,
+                 cfg: EngineConfig = EngineConfig(),
+                 ppr_lanes: int | None = None):
+        self.part = part
+        # one device copy of the static graph tables, shared by both pools
+        arrays = engine.DeviceArrays.from_partition(part)
+        self.min_pool = _MinPool(part, n_lanes, cfg, arrays)
+        self.ppr_pool = _PprPool(
+            part, n_lanes if ppr_lanes is None else ppr_lanes, cfg, arrays)
+        self.queue: list[QueryRequest] = []
+        self.results: dict[int, QueryResult] = {}
+        self.tick = 0
+        self._next_qid = 0
+        self._lane_rounds = {}       # (pool, lane) -> rounds live
+        self._lane_msgs = {}
+        self._submit_time = {}       # qid -> wall time at submit
+        self._admit_tick = {}
+        self._pools_used: set[int] = set()
+        self.occupancy_trace: list[int] = []   # live lanes per tick
+
+    # ------------------------------------------------------------- submit
+    def submit(self, kind: str, sources, damping: float = 0.85,
+               tol: float = 1e-6, qid: int | None = None) -> int:
+        pool = self.ppr_pool if kind == "ppr" else self.min_pool
+        if kind in MIN_KINDS + ("ppr",) and pool.n == 0:
+            raise ValueError(
+                f"no lanes for kind {kind!r}: the request could never be "
+                "admitted (server built with 0 lanes in its pool)")
+        if qid is None:
+            qid = self._next_qid
+        self._next_qid = max(self._next_qid, qid) + 1
+        self.queue.append(QueryRequest(qid=qid, kind=kind, sources=sources,
+                                       damping=damping, tol=tol))
+        self._submit_time[qid] = time.perf_counter()
+        return qid
+
+    # -------------------------------------------------------------- admit
+    def _admit(self) -> list[int]:
+        admitted = []
+        for pool, kinds in ((self.min_pool, MIN_KINDS),
+                            (self.ppr_pool, ("ppr",))):
+            for lane in range(pool.n):
+                if pool.reqs[lane] is not None or not self.queue:
+                    continue
+                nxt = next((i for i, r in enumerate(self.queue)
+                            if r.kind in kinds), None)
+                if nxt is None:
+                    break
+                req = self.queue.pop(nxt)
+                pool.inject(lane, req)
+                self._pools_used.add(id(pool))
+                key = (id(pool), lane)
+                self._lane_rounds[key] = 0
+                self._lane_msgs[key] = 0
+                self._admit_tick[key] = self.tick
+                admitted.append(req.qid)
+        return admitted
+
+    # --------------------------------------------------------------- step
+    def _step_pool(self, pool):
+        occupied = [lane for lane in range(pool.n)
+                    if pool.reqs[lane] is not None]
+        if not occupied:
+            return 0
+        live_before = pool.live()
+        if not any(live_before[lane] for lane in occupied):
+            # occupied-but-converged lanes (e.g. empty-frontier queries)
+            # still retire below; nothing to relax
+            counts = np.zeros(pool.n, np.int64)
+        else:
+            counts = pool.step()
+        live_after = pool.live()
+        n_live = 0
+        for lane in occupied:
+            key = (id(pool), lane)
+            if live_before[lane]:
+                self._lane_rounds[key] += 1
+                self._lane_msgs[key] += int(counts[lane])
+                n_live += 1
+            if not live_after[lane]:           # converged -> evict now
+                req = pool.reqs[lane]
+                self.results[req.qid] = QueryResult(
+                    qid=req.qid, kind=req.kind, values=pool.extract(lane),
+                    rounds=self._lane_rounds[key],
+                    messages=self._lane_msgs[key], lane=lane,
+                    admitted_tick=self._admit_tick[key],
+                    completed_tick=self.tick,
+                    latency_s=time.perf_counter()
+                    - self._submit_time[req.qid],
+                )
+                pool.reqs[lane] = None         # lane freed immediately
+        return n_live
+
+    def step(self) -> bool:
+        """One global round tick. Returns False when fully drained."""
+        self._admit()
+        n_live = self._step_pool(self.min_pool) \
+            + self._step_pool(self.ppr_pool)
+        self.occupancy_trace.append(n_live)
+        self.tick += 1
+        return bool(n_live or self.queue
+                    or any(r is not None for r in self.min_pool.reqs)
+                    or any(r is not None for r in self.ppr_pool.reqs))
+
+    def run(self, max_ticks: int = 10000) -> dict[int, QueryResult]:
+        for _ in range(max_ticks):
+            if not self.step():
+                break
+        return self.results
+
+    # ------------------------------------------------------------ metrics
+    def occupancy(self) -> float:
+        """Mean live lanes per tick over the capacity of the pools that
+        actually served requests (serving utilization)."""
+        if not self.occupancy_trace:
+            return 0.0
+        cap = sum(pool.n for pool in (self.min_pool, self.ppr_pool)
+                  if id(pool) in self._pools_used)
+        return float(np.mean(self.occupancy_trace)) / max(cap, 1)

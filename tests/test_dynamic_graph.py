@@ -52,3 +52,46 @@ def test_delete_edges_full_recompute():
     lv1, _ = dg.bfs_full(0)
     assert lv1[5] == 5 and lv1[6] == UNREACHED
     np.testing.assert_array_equal(lv1, reference.bfs_levels(dg.g, 0))
+
+
+# --------------------------------------------------------------------------
+# the same mutation paths through the fused Pallas hot path (ISSUE 2):
+# delete_edges regenerates the static edge arrays — the kernel's prefetch
+# tables must be rebuilt consistently — and the warm-start's sparse seeded
+# frontier must not be dropped by the chunk-skip bitmap
+# --------------------------------------------------------------------------
+
+def test_delete_edges_full_recompute_use_pallas():
+    from repro.core import engine
+    cfg = engine.EngineConfig(use_pallas=True)
+    n = 14
+    src = np.arange(n - 1, dtype=np.int32)
+    g = COOGraph(n, src, (src + 1).astype(np.int32), None)
+    dg = DynamicGraph.build(g, PartitionConfig(num_shards=4, rpvo_max=1))
+    lv0, _ = dg.bfs_full(0, cfg=cfg)
+    np.testing.assert_array_equal(lv0, reference.bfs_levels(dg.g, 0))
+    dg.delete_edges([7], [8])
+    lv1, stats = dg.bfs_full(0, cfg=cfg)
+    assert lv1[7] == 7 and lv1[8] == UNREACHED
+    np.testing.assert_array_equal(lv1, reference.bfs_levels(dg.g, 0))
+    assert int(stats.messages) > 0
+
+
+def test_incremental_insert_warm_start_use_pallas():
+    from repro.core import engine
+    cfg = engine.EngineConfig(use_pallas=True)
+    g = generators.erdos_renyi(250, avg_degree=3.0, seed=5)
+    root = int(np.argmax(g.out_degrees()))
+    dg = DynamicGraph.build(g, PartitionConfig(num_shards=8, rpvo_max=4))
+    lv0, stats_full = dg.bfs_full(root, cfg=cfg)
+    np.testing.assert_array_equal(lv0, reference.bfs_levels(g, root))
+
+    reached = np.nonzero(lv0 != UNREACHED)[0]
+    rng = np.random.default_rng(1)
+    src = rng.choice(reached, size=8)
+    dst = rng.integers(0, g.n, size=8).astype(np.int32)
+    seeds = dg.insert_edges(src, dst)
+    lv1, stats_inc = dg.bfs_incremental_insert(seeds, cfg=cfg)
+    np.testing.assert_array_equal(lv1, reference.bfs_levels(dg.g, root))
+    # the warm start re-diffuses only the mutation sites
+    assert int(stats_inc.messages) < int(stats_full.messages)
