@@ -17,7 +17,11 @@ Three measurements on one shared rhizome-partitioned RMAT graph:
 
 Also emits the per-round OR-frontier grid-cell counts for the fused
 laned kernel (a grid cell executes iff its edge chunk is live in at
-least one lane), extending the BENCH_engine perf trajectory.
+least one lane), and the **compact-vs-dense laned exchange volume**
+(ISSUE 3): the same lane batch run on the §Perf compact targeted
+exchange ships strictly fewer entries per live lane than the dense
+(S, R_max, Q) inbox — ``LaneStats.exchanged`` records the per-lane
+totals, and the values are asserted bit-identical.
 
 Usage:  PYTHONPATH=src python benchmarks/query_bench.py [--out PATH]
 """
@@ -154,6 +158,49 @@ def bench_grid_cells(part, queries, cfg, max_rounds=64):
     }
 
 
+def bench_exchange_volume(part, queries, use_pallas=False):
+    """Compact targeted vs dense laned exchange on one lane batch: per-
+    lane exchanged-entry totals (entries shipped through the inter-shard
+    exchange while the lane was live), bit-identity of the results, and
+    the volume-reduction ratio — the paper's §Perf message reduction
+    measured on the lane axis."""
+    slot_valid = jnp.asarray(part.slot_vertex >= 0)
+    init_np, unitw_np = init_lane_values(part, queries)
+    init = jnp.asarray(init_np)
+    chg = actions.SSSP.improved(init, jnp.full_like(init, jnp.inf)) \
+        & slot_valid[..., None]
+    unitw = jnp.asarray(unitw_np)
+    out, vals = {}, {}
+    for label, cfg in (
+            ("dense", engine.EngineConfig(use_pallas=use_pallas)),
+            ("compact", engine.EngineConfig(use_pallas=use_pallas,
+                                            exchange="compact"))):
+        fn = make_stacked_lanes_fn(part, cfg)
+        val, stats = fn(init, unitw, chg)
+        val.block_until_ready()
+        t0 = time.perf_counter()
+        val, stats = fn(init, unitw, chg)
+        val.block_until_ready()
+        wall = time.perf_counter() - t0
+        vals[label] = np.asarray(val)
+        ex = np.asarray(stats.exchanged)
+        out[label] = {
+            "wall_s": wall,
+            "exchanged_total": int(ex.sum()),
+            "exchanged_per_lane": ex.tolist(),
+            "messages_total": int(np.asarray(stats.messages).sum()),
+        }
+    identical = bool(np.array_equal(vals["dense"], vals["compact"]))
+    assert identical, "compact laned exchange diverged from dense"
+    out["values_bit_identical"] = identical
+    out["volume_ratio_dense_over_compact"] = (
+        out["dense"]["exchanged_total"]
+        / max(out["compact"]["exchanged_total"], 1))
+    out["partition"] = {"R_max": part.R_max, "P_t": part.P_t,
+                        "shards": part.S}
+    return out
+
+
 def bench_server(part, queries, n_lanes, cfg):
     srv = QueryServer(part, n_lanes=n_lanes, ppr_lanes=0, cfg=cfg)
     t0 = time.perf_counter()
@@ -237,6 +284,13 @@ def main():
     gc = report["grid_cells"]
     print(f"grid cells: batched-OR={gc['grid_cells_or_total']} "
           f"serial-sum={gc['grid_cells_serial_total']}")
+
+    report["exchange_volume"] = bench_exchange_volume(part, workload)
+    ev = report["exchange_volume"]
+    print(f"laned exchange volume: dense={ev['dense']['exchanged_total']} "
+          f"compact={ev['compact']['exchanged_total']} "
+          f"({ev['volume_ratio_dense_over_compact']:.2f}x reduction, "
+          f"bit-identical={ev['values_bit_identical']})")
 
     report["server"] = bench_server(part, deep_queue, args.lanes,
                                     engine.EngineConfig())

@@ -76,6 +76,20 @@ assert (results[0] == reference.bfs_levels(g, int(deg[0]))).all()
 print(f"lane batch ok: {len(queries)} queries, per-lane rounds="
       f"{np.asarray(lane_stats.rounds).tolist()}")
 
+# the same batch on the compact *targeted* exchange (§Perf): only
+# (target, distinct-slot) contributions travel — bit-identical results,
+# strictly fewer exchanged entries per lane
+from repro.core.engine import EngineConfig
+
+res_c, stats_c, _ = batched_queries(
+    g, queries, part=part, cfg=EngineConfig(exchange="compact"))
+assert all((a == b).all() for a, b in zip(results, res_c))
+dense_vol = int(np.asarray(lane_stats.exchanged).sum())
+compact_vol = int(np.asarray(stats_c.exchanged).sum())
+assert compact_vol < dense_vol
+print(f"compact targeted exchange ok: bit-identical, "
+      f"{dense_vol / compact_vol:.1f}x less exchange volume")
+
 srv = QueryServer(part, n_lanes=2)   # 2 lanes << 5 queries: continuous batching
 qids = [srv.submit(kind, root) for kind, root in queries]
 qids.append(srv.submit("reachability", int(deg[4])))

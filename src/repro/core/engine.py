@@ -7,6 +7,13 @@ drain: diffusions generated in round k are evaluated in round k+1 against
 the newest vertex state, so stale diffusions are *subsumed* exactly as the
 paper's lazy-diffuse pruning does.
 
+The per-round math — relax, dense or §Perf compact targeted exchange,
+rhizome collapse — lives in the unified lane-generic exchange layer
+(``repro.exchange``); this module is the *driver*: it owns the fixpoint
+loops, termination collectives, and Fig-6 stats bookkeeping for the
+single-query (unlaned) table layout.  ``repro.query.lanes`` drives the
+same exchange layer with a trailing query-lane axis.
+
 Two execution paths share the same per-round math:
 
 * ``run_stacked``  — arrays stacked ``(S, …)`` on one device; collectives
@@ -19,12 +26,11 @@ Two execution paths share the same per-round math:
   - termination detection    → ``psum`` of the any-changed flag
     (the paper assumes a hardware idle signal; the collective is ours).
 
-With ``EngineConfig.use_pallas`` the per-round relax phase — frontier
-gather, semiring relax, active masking, and the inbox segment reduction —
-dispatches through the fused ``kernels.fused_relax_reduce`` Pallas kernel:
-one VMEM-resident pass, no ``(S, E_max)`` HBM intermediates, and grid
-cells over frontier-dead edge chunks are skipped entirely (the TPU form of
-the paper's diffusion pruning).  Without the flag the same math runs as
+With ``EngineConfig.use_pallas`` the per-round relax phase dispatches
+through the fused ``kernels.fused_relax_reduce`` Pallas kernel: one
+VMEM-resident pass, no ``(S, E_max)`` HBM intermediates, and grid cells
+over frontier-dead edge chunks are skipped entirely (the TPU form of the
+paper's diffusion pruning).  Without the flag the same math runs as
 separate jnp ops — the oracle path.
 
 Per-round counters reproduce the paper's Fig-6 statistics: messages
@@ -34,7 +40,6 @@ diffusions pruned.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import typing
 
 import jax
@@ -43,6 +48,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import exchange
 from repro.core.actions import Semiring
 from repro.core.partition import Partition
 
@@ -93,6 +99,12 @@ class DeviceArrays(typing.NamedTuple):
     rz_sibling_mask: jax.Array     # (S, R_rz_max, K) bool
 
     @classmethod
+    def specs(cls, spec) -> "DeviceArrays":
+        """Per-field shard_map spec tree (every field shares ``spec``) —
+        the in_specs entry for every sharded runner over these tables."""
+        return cls(*([spec] * len(cls._fields)))
+
+    @classmethod
     def from_partition(cls, part: Partition) -> "DeviceArrays":
         return cls(
             edge_src_root_flat=jnp.asarray(part.edge_src_root_flat, jnp.int32),
@@ -119,178 +131,25 @@ class RunStats(typing.NamedTuple):
 
 
 # --------------------------------------------------------------------------
-# shared per-round math. The relax phase (gather sources, build messages,
-# partial-reduce the inbox) has two implementations with identical
-# semantics: a fused Pallas kernel (use_pallas) and separate jnp ops.
+# per-round math: unified exchange-layer compositions (kept under their
+# historic names — benchmarks and kernel-parity tests drive the rounds
+# directly to measure exactly what the runners ship)
 # --------------------------------------------------------------------------
 
-def _fused_relax(sem: Semiring, edge_src, edge_w, edge_mask, edge_dst,
-                 gval, gchg, num_segments, count_messages=True):
-    """Relax phase through the fused Pallas kernel. Edge arrays may be any
-    shape (flattened internally); returns ((num_segments,) partial, count
-    of delivered messages)."""
-    if sem.relax_kind is None:
-        raise ValueError(
-            f"semiring {sem.name!r} has no kernel relax form "
-            "(relax_kind=None); construct it from actions.RELAX_FNS or "
-            "run with use_pallas=False")
-    from repro.kernels import ops as kops
-    # the Fig-6 message count rides along for free: it is a reduction of
-    # the same gather that builds the kernel's frontier chunk bitmap
-    partial, count = kops.fused_relax_reduce(
-        gval, gchg, edge_src.reshape(-1), edge_w.reshape(-1),
-        edge_mask.reshape(-1), edge_dst.reshape(-1), num_segments,
-        relax_kind=sem.relax_kind, kind=sem.segment)
-    if not count_messages:
-        count = jnp.zeros((), jnp.int32)
-    return partial, count
+def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg):
+    return exchange.fixpoint_round_stacked(
+        sem, arrays, cfg, S, R_max, val, chg)
 
 
-def _shard_relax(sem: Semiring, arrays_s, gval, gchg, num_segments,
-                 cfg: EngineConfig, compact: bool):
-    """Per-shard relax phase: read sources, build messages, partial-reduce
-    the inbox. Returns ((num_segments,) partial, message count)."""
-    ids = arrays_s.edge_dst_compact if compact else arrays_s.edge_dst_flat
-    if cfg.use_pallas and cfg.pallas_mode == "fused":
-        return _fused_relax(sem, arrays_s.edge_src_root_flat, arrays_s.edge_w,
-                            arrays_s.edge_mask, ids, gval, gchg, num_segments,
-                            count_messages=cfg.track_stats)
-    src_val = jnp.take(gval, arrays_s.edge_src_root_flat, axis=0)
-    active = arrays_s.edge_mask & jnp.take(gchg, arrays_s.edge_src_root_flat,
-                                           axis=0)
-    msg = jnp.where(active, sem.relax(src_val, arrays_s.edge_w),
-                    jnp.asarray(sem.identity, src_val.dtype))
-    if cfg.use_pallas:   # 'reduce': XLA relax ops + Pallas segment reduce
-        from repro.kernels import ops as kops
-        partial = kops.segment_combine(msg, ids, num_segments,
-                                       kind=sem.segment)
-    else:
-        partial = sem.segment_combine(msg, ids, num_segments)
-    count = active.sum() if cfg.track_stats else jnp.zeros((), jnp.int32)
-    return partial, count
-
-
-def _stacked_dense_inbox(sem: Semiring, arrays, cfg: EngineConfig,
-                         gval, gchg, total):
-    """Stacked dense relax: the reduced (total,) global inbox + msg count.
-
-    Fused path: all shards' edges address the same global slot space, so
-    the whole stack collapses in ONE kernel launch (the kernel's in-place
-    block accumulation replaces the (S, total) partial + axis-0 reduce)."""
-    if cfg.use_pallas and cfg.pallas_mode == "fused":
-        return _fused_relax(sem, arrays.edge_src_root_flat, arrays.edge_w,
-                            arrays.edge_mask, arrays.edge_dst_flat,
-                            gval, gchg, total,
-                            count_messages=cfg.track_stats)
-    partial, counts = jax.vmap(
-        lambda a: _shard_relax(sem, a, gval, gchg, total, cfg, False)
-    )(arrays)
-    return _reduce_axis0(sem, partial), counts.sum()
-
-
-def _stacked_compact_partial(sem: Semiring, arrays, cfg: EngineConfig, S,
-                             P_t, gval, gchg):
-    """Stacked compact relax: (S_src, S_tgt, P_t) partials + msg count.
-
-    Fused path: source shards get disjoint id windows of width S*P_t, so
-    one kernel launch over the flattened edge stack produces every
-    per-source partial (compact slot meaning depends on the source shard,
-    hence the offsets — contributions must NOT merge across sources)."""
-    if cfg.use_pallas and cfg.pallas_mode == "fused":
-        offs = (jnp.arange(S, dtype=jnp.int32) * (S * P_t))[:, None]
-        ids = arrays.edge_dst_compact + offs
-        flat, count = _fused_relax(
-            sem, arrays.edge_src_root_flat, arrays.edge_w, arrays.edge_mask,
-            ids, gval, gchg, S * S * P_t, count_messages=cfg.track_stats)
-        return flat.reshape(S, S, P_t), count
-    partial, counts = jax.vmap(
-        lambda a: _shard_relax(sem, a, gval, gchg, S * P_t, cfg, True)
-    )(arrays)
-    return partial.reshape(S, S, P_t), counts.sum()
-
-
-def _reduce_axis0(sem: Semiring, x):
-    return jnp.min(x, axis=0) if sem.segment == "min" else jnp.sum(x, axis=0)
-
-
-def _collapse(sem, gx, sibling_flat, sibling_mask):
-    """Rhizome collapse: AND-gate over all replicas of each slot's vertex."""
-    sib = jnp.take(gx, sibling_flat, axis=0)
-    sib = jnp.where(sibling_mask, sib, jnp.asarray(sem.identity, sib.dtype))
-    return _reduce_axis0(sem, jnp.moveaxis(sib, -1, 0))
-
-
-def _scatter_inbox(sem, recv_t, slot_map_t, R_max):
-    """recv_t: (S_src, P_t) contributions; slot_map_t: (S_src, P_t) local
-    slots (R_max = pad). Scatter-combine into (R_max,)."""
-    init = jnp.full((R_max + 1,), sem.identity, recv_t.dtype)
-    if sem.segment == "min":
-        out = init.at[slot_map_t.reshape(-1)].min(recv_t.reshape(-1))
-    else:
-        out = init.at[slot_map_t.reshape(-1)].add(recv_t.reshape(-1))
-    return out[:R_max]
-
-
-def _compact_collapse(sem, cand, rz_local, rz_sib_idx, rz_sib_mask,
-                      gather_fn, R_max, R_rz_max):
-    """Collapse only rhizome slots: compact-gather them, all-gather the
-    small table, combine siblings, scatter back.  min semirings min-set
-    (collapsed ≼ cand under the semiring order, so ``cand`` may be any
-    combined candidate); sum semirings overwrite each rhizome slot with
-    the sibling total (each sibling's own partial is included in the sum,
-    so set — never add — keeps it exact), which requires ``cand`` to be
-    bare inbox partials — summing combined val+inbox candidates would
-    double-count every sibling's val (hence the min-only fixpoint
-    runners; only the PageRank rounds pass sum semirings here)."""
-    cand_pad = jnp.concatenate(
-        [cand, jnp.full(cand.shape[:-1] + (1,), sem.identity, cand.dtype)],
-        axis=-1)
-    compact = jnp.take_along_axis(cand_pad, rz_local, axis=-1)
-    g = gather_fn(compact)                       # (S*R_rz_max,) flat
-    sib = jnp.take(g, rz_sib_idx, axis=0)
-    sib = jnp.where(rz_sib_mask, sib, jnp.asarray(sem.identity, sib.dtype))
-    collapsed = _reduce_axis0(sem, jnp.moveaxis(sib, -1, 0))
-    idx = tuple(jnp.indices(rz_local.shape)[:-1]) + (rz_local,)
-    if sem.segment == "min":
-        upd = cand_pad.at[idx].min(collapsed)
-    else:
-        upd = cand_pad.at[idx].set(collapsed)
-    return upd[..., :R_max]
+def _pagerank_round_stacked(sem, arrays, cfg, S, R_max, base, damping, val,
+                            chg):
+    return exchange.pagerank_round_stacked(
+        sem, arrays, cfg, S, R_max, base, damping, val, chg)
 
 
 # --------------------------------------------------------------------------
 # fixpoint apps (BFS / SSSP)
 # --------------------------------------------------------------------------
-
-def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg):
-    gval, gchg = val.reshape(-1), chg.reshape(-1)
-    if cfg.exchange == "compact":
-        P_t = arrays.inbox_slot_map.shape[-1]
-        R_rz_max = arrays.rz_local.shape[-1]
-        partial, msg_count = _stacked_compact_partial(
-            sem, arrays, cfg, S, P_t, gval, gchg)   # (S_src, S_tgt, P_t)
-        recv = jnp.swapaxes(partial, 0, 1)          # (S_tgt, S_src, P_t)
-        inbox = jax.vmap(lambda r, m: _scatter_inbox(sem, r, m, R_max))(
-            recv, arrays.inbox_slot_map)
-        cand = sem.combine(val, inbox)
-        if cfg.collapse == "eager":
-            cand = _compact_collapse(
-                sem, cand, arrays.rz_local, arrays.rz_sibling_idx,
-                arrays.rz_sibling_mask, lambda c: c.reshape(-1),
-                R_max, R_rz_max)
-        new_chg = sem.improved(cand, val) & arrays.slot_valid
-        return cand, new_chg, msg_count
-
-    total = S * R_max
-    inbox_flat, msg_count = _stacked_dense_inbox(
-        sem, arrays, cfg, gval, gchg, total)
-    cand = sem.combine(val, inbox_flat.reshape(S, R_max))
-    if cfg.collapse == "eager":
-        cand = _collapse(sem, cand.reshape(-1), arrays.sibling_flat,
-                         arrays.sibling_mask)
-    new_chg = sem.improved(cand, val) & arrays.slot_valid
-    return cand, new_chg, msg_count
-
 
 def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
                 cfg: EngineConfig = EngineConfig(), init_changed=None):
@@ -307,7 +166,7 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
 
     def body(carry):
         val, chg, it, stats = carry
-        new_val, new_chg, msg_count = _fixpoint_round_stacked(
+        new_val, new_chg, msg_count = exchange.fixpoint_round_stacked(
             sem, arrays, cfg, S, R_max, val, chg
         )
         work = new_chg.sum()
@@ -338,47 +197,14 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
         cond, body, (jnp.asarray(init_val), init_chg, zero, stats0)
     )
     if cfg.collapse == "deferred":
-        val = _collapse(sem, val.reshape(-1), arrays.sibling_flat,
-                        arrays.sibling_mask)
+        val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
+                                arrays.sibling_mask)
     return val, stats
 
 
 # --------------------------------------------------------------------------
 # PageRank-style counted-iteration apps
 # --------------------------------------------------------------------------
-
-def _pagerank_round_stacked(sem, arrays, cfg, S, R_max, base, damping, val,
-                            chg):
-    """One stacked PageRank round: relax → exchange → rhizome-collapse(+)
-    → damping update. Shared by run_pagerank_stacked and the engine
-    benchmark so BENCH numbers measure the shipped hot path."""
-    gval = val.reshape(-1)
-    gchg = chg.reshape(-1)
-    if cfg.exchange == "compact":
-        P_t = arrays.inbox_slot_map.shape[-1]
-        R_rz_max = arrays.rz_local.shape[-1]
-        partial, msg_count = _stacked_compact_partial(
-            sem, arrays, cfg, S, P_t, gval, gchg)
-        recv = jnp.swapaxes(partial, 0, 1)
-        inbox = jax.vmap(lambda r, m: _scatter_inbox(sem, r, m, R_max))(
-            recv, arrays.inbox_slot_map)
-        # rhizome-collapse(+) over the compact table: each rhizome slot
-        # becomes the sum of its sibling inboxes == total in-flow
-        total_in = _compact_collapse(
-            sem, inbox, arrays.rz_local, arrays.rz_sibling_idx,
-            arrays.rz_sibling_mask, lambda c: c.reshape(-1),
-            R_max, R_rz_max)
-    else:
-        total = S * R_max
-        inbox_flat, msg_count = _stacked_dense_inbox(
-            sem, arrays, cfg, gval, gchg, total)
-        inbox = inbox_flat.reshape(S, R_max)
-        # rhizome-collapse(+): sum of sibling inboxes == total in-flow
-        total_in = _collapse(sem, inbox.reshape(-1), arrays.sibling_flat,
-                             arrays.sibling_mask)
-    new_val = jnp.where(arrays.slot_valid, base + damping * total_in, 0.0)
-    return new_val, msg_count
-
 
 def run_pagerank_stacked(part: Partition, damping: float, iters: int,
                          cfg: EngineConfig = EngineConfig()):
@@ -393,7 +219,7 @@ def run_pagerank_stacked(part: Partition, damping: float, iters: int,
     chg = arrays.slot_valid  # PR predicate is #t — always diffuse
 
     def body(_, val):
-        new_val, _ = _pagerank_round_stacked(
+        new_val, _ = exchange.pagerank_round_stacked(
             sem, arrays, cfg, S, R_max, base, damping, val, chg)
         return new_val
 
@@ -405,10 +231,6 @@ def run_pagerank_stacked(part: Partition, damping: float, iters: int,
 # sharded execution (shard_map over a real mesh)
 # --------------------------------------------------------------------------
 
-def _axis(axis_names):
-    return axis_names if isinstance(axis_names, tuple) else (axis_names,)
-
-
 def make_sharded_fn(sem: Semiring, S: int, R_max: int,
                     mesh: Mesh, axis_names=("data", "model"),
                     cfg: EngineConfig = EngineConfig()):
@@ -419,13 +241,12 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
         raise ValueError(
             "make_sharded_fn drives monotone min-semiring fixpoints; use "
             "make_sharded_pagerank_fn for counted sum-semiring rounds")
-    axis_names = _axis(axis_names)
-    total = S * R_max
+    axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
 
     in_specs = (
-        DeviceArrays(*([spec] * len(DeviceArrays._fields))),
+        DeviceArrays.specs(spec),
         spec,
     )
 
@@ -433,45 +254,8 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
         # strip leading local shard dim of size 1
         arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
         val = val_l[0]
-
-        def gather(x):
-            return lax.all_gather(x, axis_names, tiled=True)
-
-        def round_fn(val, chg):
-            gval, gchg = gather(val), gather(chg)
-            if cfg.exchange == "compact":
-                P_t = arrays_s.inbox_slot_map.shape[-1]
-                partial, msg_count = _shard_relax(
-                    sem, arrays_s, gval, gchg, S * P_t, cfg, True)
-                # targeted exchange: only (target, distinct-slot) messages
-                recv = lax.all_to_all(
-                    partial.reshape(S, P_t), axis_names,
-                    split_axis=0, concat_axis=0, tiled=True)
-                inbox = _scatter_inbox(sem, recv, arrays_s.inbox_slot_map,
-                                       R_max)
-                cand = sem.combine(val, inbox)
-                if cfg.collapse == "eager":
-                    R_rz_max = arrays_s.rz_local.shape[-1]
-                    cand = _compact_collapse(
-                        sem, cand, arrays_s.rz_local,
-                        arrays_s.rz_sibling_idx, arrays_s.rz_sibling_mask,
-                        gather, R_max, R_rz_max)
-                new_chg = sem.improved(cand, val) & arrays_s.slot_valid
-                return cand, new_chg, msg_count
-            partial, msg_count = _shard_relax(
-                sem, arrays_s, gval, gchg, total, cfg, False)
-            # inbox exchange: row t of `partial` belongs to shard t
-            recv = lax.all_to_all(
-                partial.reshape(S, R_max), axis_names,
-                split_axis=0, concat_axis=0, tiled=True,
-            )
-            inbox = _reduce_axis0(sem, recv.reshape(S, R_max))
-            cand = sem.combine(val, inbox)
-            if cfg.collapse == "eager":
-                cand = _collapse(sem, gather(cand), arrays_s.sibling_flat,
-                                 arrays_s.sibling_mask)
-            new_chg = sem.improved(cand, val) & arrays_s.slot_valid
-            return cand, new_chg, msg_count
+        round_fn = exchange.make_shard_fixpoint_round(
+            sem, arrays_s, cfg, S, R_max, axis_names)
 
         def body(carry):
             val, chg, it, stats = carry
@@ -503,8 +287,9 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
             cond, body, (val, init_chg, zero, stats0)
         )
         if cfg.collapse == "deferred":
-            val = _collapse(sem, lax.all_gather(val, axis_names, tiled=True),
-                            arrays_s.sibling_flat, arrays_s.sibling_mask)
+            val = exchange.collapse(
+                sem, lax.all_gather(val, axis_names, tiled=True),
+                arrays_s.sibling_flat, arrays_s.sibling_mask)
         return val[None], jax.tree.map(lambda x: x[None], stats)
 
     fn = shard_map(
@@ -540,12 +325,11 @@ def make_sharded_pagerank_fn(S: int, R_max: int, n: int, damping: float,
     the same fused-kernel hot path as the fixpoint apps."""
     from repro.core.actions import PAGERANK as sem
 
-    axis_names = _axis(axis_names)
-    total = S * R_max
+    axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
 
-    in_specs = (DeviceArrays(*([spec] * len(DeviceArrays._fields))),)
+    in_specs = (DeviceArrays.specs(spec),)
     base = (1.0 - damping) / n
 
     def shard_fn(arrays_l: DeviceArrays):
@@ -556,30 +340,9 @@ def make_sharded_pagerank_fn(S: int, R_max: int, n: int, damping: float,
             return lax.all_gather(x, axis_names, tiled=True)
 
         def body(_, val):
-            gval, gchg = gather(val), gather(chg)
-            if cfg.exchange == "compact":
-                P_t = arrays_s.inbox_slot_map.shape[-1]
-                partial, _ = _shard_relax(
-                    sem, arrays_s, gval, gchg, S * P_t, cfg, True)
-                recv = lax.all_to_all(
-                    partial.reshape(S, P_t), axis_names,
-                    split_axis=0, concat_axis=0, tiled=True)
-                inbox = _scatter_inbox(sem, recv, arrays_s.inbox_slot_map,
-                                       R_max)
-                total_in = _compact_collapse(
-                    sem, inbox, arrays_s.rz_local, arrays_s.rz_sibling_idx,
-                    arrays_s.rz_sibling_mask, gather, R_max,
-                    arrays_s.rz_local.shape[-1])
-            else:
-                partial, _ = _shard_relax(
-                    sem, arrays_s, gval, gchg, total, cfg, False)
-                recv = lax.all_to_all(
-                    partial.reshape(S, R_max), axis_names,
-                    split_axis=0, concat_axis=0, tiled=True)
-                inbox = _reduce_axis0(sem, recv.reshape(S, R_max))
-                total_in = _collapse(sem, gather(inbox),
-                                     arrays_s.sibling_flat,
-                                     arrays_s.sibling_mask)
+            total_in, _ = exchange.shard_total_in(
+                sem, arrays_s, cfg, S, R_max, axis_names,
+                gather(val), gather(chg))
             return jnp.where(arrays_s.slot_valid,
                              base + damping * total_in, 0.0)
 

@@ -1,0 +1,32 @@
+"""Unified lane-generic exchange layer (ISSUE 3 tentpole).
+
+One implementation of the engine's per-round machinery — relax, inter-shard
+exchange (dense inbox or §Perf compact targeted), and rhizome collapse —
+parameterized over an *optional trailing query-lane axis Q*.  Every runner
+(`core.engine.run_stacked` / `run_sharded`, `query.lanes.run_stacked_lanes`
+/ `make_sharded_lanes_fn`, the PageRank/PPR rounds) dispatches through the
+round compositions here instead of carrying its own hand-specialized copy.
+
+Shapes: value/frontier tables are ``(V,)`` (single query) or ``(V, Q)``
+(lane-batched); the primitives detect the lane axis from rank, so the same
+code path serves both and a converged lane — an all-False frontier column —
+reads as the absorbing identity and contributes no messages.
+"""
+from repro.exchange.primitives import (
+    collapse, compact_collapse, exchange_volume, reduce_axis0, relax,
+    scatter_inbox, stacked_compact_partial, stacked_dense_inbox,
+)
+from repro.exchange.rounds import (
+    axis_tuple, fixpoint_round_stacked, make_shard_fixpoint_round,
+    pagerank_round_stacked, shard_collapse, shard_inbox, shard_total_in,
+    stacked_collapse, stacked_inbox, stacked_total_in,
+)
+
+__all__ = [
+    "axis_tuple", "collapse", "compact_collapse", "exchange_volume",
+    "fixpoint_round_stacked", "make_shard_fixpoint_round",
+    "pagerank_round_stacked", "reduce_axis0", "relax", "scatter_inbox",
+    "shard_collapse", "shard_inbox", "shard_total_in", "stacked_collapse",
+    "stacked_compact_partial", "stacked_dense_inbox", "stacked_inbox",
+    "stacked_total_in",
+]

@@ -1,0 +1,197 @@
+"""Round compositions over the lane-generic exchange primitives.
+
+One relax → exchange → rhizome-collapse composition per execution layout
+(stacked / shard_map) and per app class (monotone fixpoint / counted
+PageRank-style rounds), each serving both the unlaned ``(V,)`` and the
+lane-batched ``(V, Q)`` table layouts.  ``core.engine`` and
+``query.lanes`` are thin drivers over these — the while/fori loop,
+termination collective, and stats bookkeeping live there; the per-round
+math lives here, once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.actions import Semiring
+from repro.exchange.primitives import (
+    collapse, compact_collapse, reduce_axis0, relax, scatter_inbox,
+    stacked_compact_partial, stacked_dense_inbox,
+)
+
+
+def axis_tuple(axis_names):
+    return axis_names if isinstance(axis_names, tuple) else (axis_names,)
+
+
+def _flat(table):
+    """Collapse the leading (shard, slot) dims; trailing Q rides."""
+    return table.reshape((-1,) + table.shape[2:])
+
+
+# --------------------------------------------------------------------------
+# stacked layout: all shards resident as a leading S axis on one device
+# --------------------------------------------------------------------------
+
+def stacked_inbox(sem: Semiring, arrays, cfg, S: int, R_max: int,
+                  gval, gchg, lane_unitw=None):
+    """Relax + exchange on the stacked layout.
+
+    Dense: one reduced global inbox.  Compact (§Perf targeted): per-source
+    (target, distinct-slot) partials, axis-swapped in place of the real
+    ``all_to_all``, scatter-combined per target.  Returns the
+    ((S, R_max[, Q]) inbox, message count — scalar or (Q,))."""
+    if cfg.exchange == "compact":
+        P_t = arrays.inbox_slot_map.shape[-1]
+        partial, counts = stacked_compact_partial(
+            sem, arrays, cfg, S, P_t, gval, gchg, lane_unitw)
+        recv = jnp.swapaxes(partial, 0, 1)       # (S_tgt, S_src, P_t[, Q])
+        inbox = jax.vmap(lambda r, m: scatter_inbox(sem, r, m, R_max))(
+            recv, arrays.inbox_slot_map)
+        return inbox, counts
+    flat, counts = stacked_dense_inbox(
+        sem, arrays, cfg, gval, gchg, S * R_max, lane_unitw)
+    return flat.reshape((S, R_max) + flat.shape[1:]), counts
+
+
+def stacked_collapse(sem: Semiring, arrays, cfg, table):
+    """Eager rhizome collapse of a stacked (S, R_max[, Q]) table — dense
+    sibling collapse, or the compact rhizome-only gather/scatter."""
+    if cfg.exchange == "compact":
+        R_max = table.shape[1]
+        return compact_collapse(
+            sem, table, arrays.rz_local, arrays.rz_sibling_idx,
+            arrays.rz_sibling_mask, _flat, R_max,
+            arrays.rz_local.shape[-1])
+    out = collapse(sem, _flat(table), arrays.sibling_flat,
+                   arrays.sibling_mask)
+    return out
+
+
+def fixpoint_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
+                           val, chg, lane_unitw=None):
+    """One stacked fixpoint round: relax → exchange → combine → eager
+    rhizome collapse → predicate.  ``val``/``chg``: (S, R_max) or
+    (S, R_max, Q).  Returns (new val, new changed, message count)."""
+    laned = val.ndim == 3
+    gval, gchg = _flat(val), _flat(chg)
+    inbox, counts = stacked_inbox(
+        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw)
+    cand = sem.combine(val, inbox)
+    if cfg.collapse == "eager":
+        cand = stacked_collapse(sem, arrays, cfg, cand)
+    slot = arrays.slot_valid[..., None] if laned else arrays.slot_valid
+    new_chg = sem.improved(cand, val) & slot
+    return cand, new_chg, counts
+
+
+def stacked_total_in(sem: Semiring, arrays, cfg, S: int, R_max: int,
+                     gval, gchg, lane_unitw=None):
+    """Relax → exchange → rhizome-collapse(⊕) of the *bare inbox* — the
+    total in-flow per slot that counted (PageRank-style) rounds consume.
+    The collapse sees inbox partials, never combined candidates, so the
+    sum-semiring sibling-total overwrite is exact."""
+    inbox, counts = stacked_inbox(
+        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw)
+    return stacked_collapse(sem, arrays, cfg, inbox), counts
+
+
+def pagerank_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
+                           base, damping, val, chg):
+    """One stacked PageRank round: relax → exchange → rhizome-collapse(+)
+    → damping update.  Shared by run_pagerank_stacked and the engine
+    benchmark so BENCH numbers measure the shipped hot path."""
+    total_in, counts = stacked_total_in(
+        sem, arrays, cfg, S, R_max, _flat(val), _flat(chg))
+    new_val = jnp.where(arrays.slot_valid, base + damping * total_in, 0.0)
+    return new_val, counts
+
+
+# --------------------------------------------------------------------------
+# shard_map layout: one shard per device, real collectives
+# --------------------------------------------------------------------------
+
+def shard_inbox(sem: Semiring, arrays_s, cfg, S: int, R_max: int,
+                axis_names, gval, gchg, lane_unitw=None):
+    """Per-shard relax + real inbox exchange.
+
+    Dense: (S, R_max[, Q]) partial → ``all_to_all`` → axis-0 reduce.
+    Compact: only (target, distinct-slot) contributions travel — the
+    (S, P_t[, Q]) targeted tables ride the ``all_to_all`` and scatter
+    into local slots.  Returns ((R_max[, Q]) inbox, message count)."""
+    if cfg.exchange == "compact":
+        P_t = arrays_s.inbox_slot_map.shape[-1]
+        partial, counts = relax(
+            sem, cfg, arrays_s.edge_src_root_flat, arrays_s.edge_w,
+            arrays_s.edge_mask, arrays_s.edge_dst_compact, gval, gchg,
+            S * P_t, lane_unitw)
+        recv = lax.all_to_all(
+            partial.reshape((S, P_t) + partial.shape[1:]), axis_names,
+            split_axis=0, concat_axis=0, tiled=True)
+        inbox = scatter_inbox(sem, recv, arrays_s.inbox_slot_map, R_max)
+        return inbox, counts
+    partial, counts = relax(
+        sem, cfg, arrays_s.edge_src_root_flat, arrays_s.edge_w,
+        arrays_s.edge_mask, arrays_s.edge_dst_flat, gval, gchg,
+        S * R_max, lane_unitw)
+    # inbox exchange: row t of `partial` belongs to shard t
+    recv = lax.all_to_all(
+        partial.reshape((S, R_max) + partial.shape[1:]), axis_names,
+        split_axis=0, concat_axis=0, tiled=True)
+    return reduce_axis0(sem, recv), counts
+
+
+def shard_collapse(sem: Semiring, arrays_s, cfg, table, gather, R_max: int):
+    """Eager rhizome collapse of a per-shard (R_max[, Q]) table; ``gather``
+    is the tiled ``all_gather`` over the mesh axes."""
+    if cfg.exchange == "compact":
+        return compact_collapse(
+            sem, table, arrays_s.rz_local, arrays_s.rz_sibling_idx,
+            arrays_s.rz_sibling_mask, gather, R_max,
+            arrays_s.rz_local.shape[-1])
+    return collapse(sem, gather(table), arrays_s.sibling_flat,
+                    arrays_s.sibling_mask)
+
+
+def make_shard_fixpoint_round(sem: Semiring, arrays_s, cfg, S: int,
+                              R_max: int, axis_names, lane_unitw=None):
+    """Builds the per-shard fixpoint round body (runs inside shard_map):
+    (val, chg) → (new val, new changed, message count), with the same
+    collective plan for unlaned (R_max,) and laned (R_max, Q) tables —
+    value/changed ``all_gather`` (the diffusion fan-out), inbox
+    ``all_to_all``, sibling collapse over the gathered table."""
+    axis_names = axis_tuple(axis_names)
+
+    def gather(x):
+        return lax.all_gather(x, axis_names, tiled=True)
+
+    def round_fn(val, chg):
+        laned = val.ndim == 2
+        gval, gchg = gather(val), gather(chg)
+        inbox, counts = shard_inbox(
+            sem, arrays_s, cfg, S, R_max, axis_names, gval, gchg,
+            lane_unitw)
+        cand = sem.combine(val, inbox)
+        if cfg.collapse == "eager":
+            cand = shard_collapse(sem, arrays_s, cfg, cand, gather, R_max)
+        slot = arrays_s.slot_valid[..., None] if laned \
+            else arrays_s.slot_valid
+        new_chg = sem.improved(cand, val) & slot
+        return cand, new_chg, counts
+
+    return round_fn
+
+
+def shard_total_in(sem: Semiring, arrays_s, cfg, S: int, R_max: int,
+                   axis_names, gval, gchg, lane_unitw=None):
+    """Sharded relax → exchange → rhizome-collapse(⊕) of the bare inbox
+    (see ``stacked_total_in``)."""
+    axis_names = axis_tuple(axis_names)
+
+    def gather(x):
+        return lax.all_gather(x, axis_names, tiled=True)
+
+    inbox, counts = shard_inbox(
+        sem, arrays_s, cfg, S, R_max, axis_names, gval, gchg, lane_unitw)
+    return shard_collapse(sem, arrays_s, cfg, inbox, gather, R_max), counts

@@ -181,9 +181,16 @@ def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
             ).astype(out_ref.dtype)
             out_ref[...] += contrib
         else:
-            padded = jnp.where(hit[:, :, None], msg[:, None, :],
-                               jnp.asarray(identity, msg.dtype))
-            contrib = jnp.min(padded, axis=0)    # (SBLK, Q) VPU reduction
+            # statically unrolled per-lane loop: peak in-cell memory stays
+            # (EBLK, SBLK) regardless of Q — a broadcast hit[:, :, None]
+            # against msg would materialize an (EBLK, SBLK, Q) intermediate
+            # per grid cell, which cannot fit VMEM for real batch widths
+            contribs = []
+            for lq in range(msg.shape[1]):
+                padded = jnp.where(hit, msg[:, lq][:, None],
+                                   jnp.asarray(identity, msg.dtype))
+                contribs.append(jnp.min(padded, axis=0))  # (SBLK,) VPU
+            contrib = jnp.stack(contribs, axis=-1)        # (SBLK, Q)
             out_ref[...] = jnp.minimum(out_ref[...], contrib)
 
 

@@ -1,13 +1,14 @@
 from repro.query.lanes import (
     LaneStats, init_lane_values, make_ppr_round, make_sharded_lanes_fn,
-    make_stacked_lanes_fn, ppr_base_table, run_ppr_lanes, run_sharded_lanes,
-    run_stacked_lanes,
+    make_sharded_min_round, make_sharded_ppr_round, make_stacked_lanes_fn,
+    ppr_base_table, run_ppr_lanes, run_sharded_lanes, run_stacked_lanes,
 )
 from repro.query.server import QueryRequest, QueryResult, QueryServer
 
 __all__ = [
     "LaneStats", "QueryRequest", "QueryResult", "QueryServer",
     "init_lane_values", "make_ppr_round", "make_sharded_lanes_fn",
-    "make_stacked_lanes_fn", "ppr_base_table", "run_ppr_lanes",
-    "run_sharded_lanes", "run_stacked_lanes",
+    "make_sharded_min_round", "make_sharded_ppr_round",
+    "make_stacked_lanes_fn", "ppr_base_table",
+    "run_ppr_lanes", "run_sharded_lanes", "run_stacked_lanes",
 ]

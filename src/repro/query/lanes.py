@@ -1,4 +1,5 @@
-"""Lane-batched multi-query fixpoint execution (ISSUE 2 tentpole).
+"""Lane-batched multi-query fixpoint execution (ISSUE 2 tentpole; the
+round machinery now lives in the unified exchange layer — ISSUE 3).
 
 The paper's runtime keeps every compute cell busy by letting actions spawn
 fine-grain work; serving heavy traffic means the unit of load is *many
@@ -24,8 +25,11 @@ its solo ``engine.run_stacked`` run).  Sum-semiring lanes (personalized
 PageRank, per-lane seed/damping) run as counted ``make_ppr_round`` rounds
 with a per-lane tolerance-based convergence mask.
 
-Laned execution is dense-exchange / eager-collapse only (the compact
-targeted exchange stays single-query; ROADMAP open item).
+Both exchanges serve the lane axis: ``exchange='dense'`` ships the full
+(S, R_max, Q) inbox, ``exchange='compact'`` ships only the §Perf
+(target, distinct-slot) targeted tables with Q riding as a trailing dim —
+converged lanes contribute the absorbing identity and add no message
+volume (``LaneStats.exchanged`` accounts the per-lane difference).
 """
 from __future__ import annotations
 
@@ -37,6 +41,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import exchange
 from repro.core import actions, engine
 from repro.core.actions import Semiring
 from repro.core.engine import DeviceArrays, EngineConfig
@@ -63,18 +68,22 @@ def decode_min_values(vv: np.ndarray, kind: str) -> np.ndarray:
 
 
 class LaneStats(typing.NamedTuple):
-    """Per-lane (Q,) counters — the Fig-6 statistics, one per query."""
+    """Per-lane (Q,) counters — the Fig-6 statistics, one per query, plus
+    the §Perf exchange-volume accounting (entries shipped through the
+    inter-shard exchange while the lane was live; compact < dense)."""
 
     rounds: jax.Array        # rounds in which the lane was live
     messages: jax.Array      # actions delivered (active edges) per lane
     work_actions: jax.Array  # predicate-true slot updates per lane
+    exchanged: jax.Array     # exchange entries shipped while live per lane
+
+
+def _zero_stats(q: int) -> LaneStats:
+    zero_q = jnp.zeros((q,), jnp.int32)
+    return LaneStats(zero_q, zero_q, zero_q, zero_q)
 
 
 def _check_cfg(cfg: EngineConfig):
-    if cfg.exchange != "dense":
-        raise ValueError(
-            "lane-batched runners support exchange='dense' only (the "
-            "compact targeted exchange is single-query; ROADMAP)")
     if cfg.collapse != "eager":
         raise ValueError("lane-batched runners support collapse='eager' only")
     if cfg.use_pallas and cfg.pallas_mode != "fused":
@@ -95,72 +104,15 @@ def _check_min(sem: Semiring):
             "sum semirings run as make_ppr_round counted rounds")
 
 
-# --------------------------------------------------------------------------
-# shared laned per-round math (dense exchange)
-# --------------------------------------------------------------------------
-
-def _lane_relax_dense(cfg: EngineConfig, edge_src, edge_w, edge_mask,
-                      edge_dst, gval, gchg, lane_unitw, num_segments,
-                      relax_kind, kind):
-    """Laned relax phase over one edge set: gather per-lane sources, relax
-    all lanes, partial-reduce per lane.  ``gval``/``gchg``: (V, Q).
-    Returns ((num_segments, Q) partial, (Q,) per-lane message counts)."""
-    src = edge_src.reshape(-1)
-    ids = edge_dst.reshape(-1)
-    w = edge_w.reshape(-1)
-    mask = edge_mask.reshape(-1)
-    q = gval.shape[-1]
-    identity = jnp.inf if kind == "min" else 0.0
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-        partial, counts = kops.fused_relax_reduce_lanes(
-            gval, gchg, lane_unitw, src, w, mask, ids, num_segments,
-            relax_kind=relax_kind, kind=kind)
-        if not cfg.track_stats:
-            counts = jnp.zeros((q,), jnp.int32)
-        return partial, counts
-    src_val = jnp.take(gval, src, axis=0)                  # (E, Q)
-    active = mask[:, None] & jnp.take(gchg, src, axis=0)
-    if relax_kind == "add_w":
-        w_eff = jnp.where(lane_unitw[None, :] > 0,
-                          jnp.asarray(1.0, w.dtype), w[:, None])
-        msg = src_val + w_eff
-    else:                                                  # 'mul_w'
-        msg = src_val * w[:, None]
-    msg = jnp.where(active, msg, jnp.asarray(identity, msg.dtype))
-    init = jnp.full((num_segments, q), identity, msg.dtype)
-    partial = (init.at[ids].min(msg) if kind == "min"
-               else init.at[ids].add(msg))
-    counts = (active.sum(axis=0, dtype=jnp.int32) if cfg.track_stats
-              else jnp.zeros((q,), jnp.int32))
-    return partial, counts
-
-
-def _collapse_lanes(sem: Semiring, gx, sibling_flat, sibling_mask):
-    """Laned rhizome collapse: ``gx`` (V, Q); sibling tables index the
-    leading axis, the lane axis rides along."""
-    sib = jnp.take(gx, sibling_flat, axis=0)       # (..., K, Q)
-    sib = jnp.where(sibling_mask[..., None], sib,
-                    jnp.asarray(sem.identity, sib.dtype))
-    return (jnp.min(sib, axis=-2) if sem.segment == "min"
-            else jnp.sum(sib, axis=-2))
+def _volume(part: Partition, cfg: EngineConfig) -> int:
+    return exchange.exchange_volume(part.S, part.R_max, part.P_t, cfg)
 
 
 def _lane_round_stacked(sem, arrays, cfg, S, R_max, lane_unitw, val, chg):
-    """One stacked dense laned fixpoint round: relax -> inbox combine ->
-    rhizome collapse -> per-lane predicate.  val/chg: (S, R_max, Q)."""
-    q = val.shape[-1]
-    total = S * R_max
-    gval = val.reshape(total, q)
-    gchg = chg.reshape(total, q)
-    inbox, counts = _lane_relax_dense(
-        cfg, arrays.edge_src_root_flat, arrays.edge_w, arrays.edge_mask,
-        arrays.edge_dst_flat, gval, gchg, lane_unitw, total, "add_w", "min")
-    cand = sem.combine(val, inbox.reshape(S, R_max, q))
-    cand = _collapse_lanes(sem, cand.reshape(total, q),
-                           arrays.sibling_flat, arrays.sibling_mask)
-    new_chg = sem.improved(cand, val) & arrays.slot_valid[..., None]
-    return cand, new_chg, counts
+    """One stacked laned fixpoint round — the unified exchange-layer
+    composition (dense or compact) with the lane axis riding along."""
+    return exchange.fixpoint_round_stacked(
+        sem, arrays, cfg, S, R_max, val, chg, lane_unitw=lane_unitw)
 
 
 # --------------------------------------------------------------------------
@@ -180,6 +132,7 @@ def make_stacked_lanes_fn(part: Partition,
     _check_min(sem)
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
+    vol = _volume(part, cfg)
 
     @jax.jit
     def fn(init_val, lane_unitw, init_chg):
@@ -195,6 +148,7 @@ def make_stacked_lanes_fn(part: Partition,
                 messages=stats.messages + counts,
                 work_actions=stats.work_actions
                 + new_chg.sum(axis=(0, 1), dtype=jnp.int32),
+                exchanged=stats.exchanged + live.astype(jnp.int32) * vol,
             )
             return new_val, new_chg, it + 1, stats
 
@@ -202,11 +156,9 @@ def make_stacked_lanes_fn(part: Partition,
             _, chg, it, _ = carry
             return jnp.any(chg) & (it < cfg.max_iters)
 
-        zero_q = jnp.zeros((q,), jnp.int32)
-        stats0 = LaneStats(zero_q, zero_q, zero_q)
         val, chg, it, stats = lax.while_loop(
             cond, body,
-            (init_val, init_chg, jnp.zeros((), jnp.int32), stats0))
+            (init_val, init_chg, jnp.zeros((), jnp.int32), _zero_stats(q)))
         return val, stats
 
     return fn
@@ -249,18 +201,19 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
     """shard_map laned fixpoint as a jit-able fn of (DeviceArrays,
     (S, R_max, Q) val, (Q,) lane_unitw) -> (val, LaneStats).  Same
     collective plan as ``engine.make_sharded_fn`` with the lane axis
-    riding along: value/changed all_gather, (S, R_max, Q) inbox
-    all_to_all, sibling collapse over the gathered table, per-lane
-    psum'd liveness for the termination test."""
+    riding along (``exchange.make_shard_fixpoint_round``): value/changed
+    all_gather, inbox all_to_all — the full (S, R_max, Q) table under
+    ``exchange='dense'``, only the (S, P_t, Q) targeted compact tables
+    under ``exchange='compact'`` — sibling collapse over the gathered
+    table, per-lane psum'd liveness for the termination test."""
     _check_cfg(cfg)
     _check_min(sem)
-    axis_names = engine._axis(axis_names)
-    total = S * R_max
+    axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
 
     in_specs = (
-        DeviceArrays(*([spec] * len(DeviceArrays._fields))),
+        DeviceArrays.specs(spec),
         spec,
         P(),                                   # lane_unitw: replicated
     )
@@ -268,26 +221,11 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
     def shard_fn(arrays_l: DeviceArrays, val_l, lane_unitw):
         arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
         val = val_l[0]                         # (R_max, Q)
-
-        def gather(x):
-            return lax.all_gather(x, axis_names, tiled=True)
-
-        def round_fn(val, chg):
-            gval, gchg = gather(val), gather(chg)      # (S*R_max, Q)
-            partial, counts = _lane_relax_dense(
-                cfg, arrays_s.edge_src_root_flat, arrays_s.edge_w,
-                arrays_s.edge_mask, arrays_s.edge_dst_flat,
-                gval, gchg, lane_unitw, total, "add_w", "min")
-            recv = lax.all_to_all(
-                partial.reshape(S, R_max, Q), axis_names,
-                split_axis=0, concat_axis=0, tiled=True)
-            inbox = jnp.min(recv.reshape(S, R_max, Q), axis=0)
-            cand = sem.combine(val, inbox)
-            cand = _collapse_lanes(sem, gather(cand),
-                                   arrays_s.sibling_flat,
-                                   arrays_s.sibling_mask)
-            new_chg = sem.improved(cand, val) & arrays_s.slot_valid[..., None]
-            return cand, new_chg, counts
+        vol = exchange.exchange_volume(
+            S, R_max, arrays_s.inbox_slot_map.shape[-1], cfg)
+        round_fn = exchange.make_shard_fixpoint_round(
+            sem, arrays_s, cfg, S, R_max, axis_names,
+            lane_unitw=lane_unitw)
 
         def body(carry):
             val, chg, it, stats = carry
@@ -300,6 +238,7 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
                 messages=stats.messages + lax.psum(counts, axis_names),
                 work_actions=stats.work_actions + lax.psum(
                     new_chg.sum(axis=0, dtype=jnp.int32), axis_names),
+                exchanged=stats.exchanged + live.astype(jnp.int32) * vol,
             )
             return new_val, new_chg, it + 1, stats
 
@@ -312,17 +251,53 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
             sem.improved(val, jnp.full_like(val, sem.identity))
             & arrays_s.slot_valid[..., None]
         )
-        zero_q = jnp.zeros((Q,), jnp.int32)
-        stats0 = LaneStats(zero_q, zero_q, zero_q)
         val, chg, it, stats = lax.while_loop(
-            cond, body, (val, init_chg, jnp.zeros((), jnp.int32), stats0))
+            cond, body,
+            (val, init_chg, jnp.zeros((), jnp.int32), _zero_stats(Q)))
         return val[None], jax.tree.map(lambda x: x[None], stats)
 
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=in_specs,
-        out_specs=(spec, LaneStats(*([spec] * 3))),
+        out_specs=(spec, LaneStats(*([spec] * 4))),
         check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
+
+
+def make_sharded_min_round(S: int, R_max: int, mesh: Mesh,
+                           axis_names=("data", "model"),
+                           cfg: EngineConfig = EngineConfig(),
+                           sem: Semiring = actions.SSSP):
+    """shard_map laned fixpoint round: (DeviceArrays, val, chg, unitw) ->
+    (val, chg, (Q,) psum'd counts) — one tick of the sharded
+    QueryServer's min pool (``make_sharded_lanes_fn`` runs the same round
+    inside a traced while_loop; the server needs it un-looped so it can
+    inject/evict lanes between ticks).  Counterpart of
+    ``make_sharded_ppr_round`` for the sum pool."""
+    _check_cfg(cfg)
+    _check_min(sem)
+    axis_names = exchange.axis_tuple(axis_names)
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (
+        DeviceArrays.specs(spec),
+        spec, spec,
+        P(),                                   # lane_unitw: replicated
+    )
+
+    def shard_fn(arrays_l: DeviceArrays, val_l, chg_l, unitw):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        round_fn = exchange.make_shard_fixpoint_round(
+            sem, arrays_s, cfg, S, R_max, axis_names, lane_unitw=unitw)
+        cand, new_chg, counts = round_fn(val_l[0], chg_l[0])
+        counts = lax.psum(counts, axis_names)
+        return cand[None], new_chg[None], counts[None]
+
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=(spec, spec, spec), check_rep=False,
     )
     return jax.jit(fn), NamedSharding(mesh, spec)
 
@@ -357,13 +332,14 @@ def make_ppr_round(part: Partition, cfg: EngineConfig = EngineConfig(),
     to share one device copy of the static graph tables with other
     round fns over the same partition (the QueryServer does).
 
-    One round is relax(mul_w) -> dense exchange -> rhizome-collapse(+)
-    over the inbox -> per-lane damping update ``base + d_q * total_in``;
-    ``base`` is the per-lane personalization table ((1-d_q) at the seed's
-    replicas — see ``ppr_base_table``).  ``live`` (Q,) freezes converged
-    lanes: their frontier column is masked off (they cost no messages)
-    and their values are carried through unchanged, so a lane evicted by
-    the server stays bit-stable while other lanes keep iterating."""
+    One round is relax(mul_w) -> exchange (dense or compact targeted) ->
+    rhizome-collapse(+) over the inbox -> per-lane damping update
+    ``base + d_q * total_in``; ``base`` is the per-lane personalization
+    table ((1-d_q) at the seed's replicas — see ``ppr_base_table``).
+    ``live`` (Q,) freezes converged lanes: their frontier column is
+    masked off (they cost no messages) and their values are carried
+    through unchanged, so a lane evicted by the server stays bit-stable
+    while other lanes keep iterating."""
     _check_cfg(cfg)
     if arrays is None:
         arrays = DeviceArrays.from_partition(part)
@@ -375,13 +351,8 @@ def make_ppr_round(part: Partition, cfg: EngineConfig = EngineConfig(),
         q = val.shape[-1]
         gchg = (arrays.slot_valid[..., None] & live[None, None, :]) \
             .reshape(total, q)
-        inbox, counts = _lane_relax_dense(
-            cfg, arrays.edge_src_root_flat, arrays.edge_w,
-            arrays.edge_mask, arrays.edge_dst_flat,
-            val.reshape(total, q), gchg, jnp.zeros((q,), jnp.int32),
-            total, "mul_w", "sum")
-        total_in = _collapse_lanes(
-            sem, inbox, arrays.sibling_flat, arrays.sibling_mask)
+        total_in, counts = exchange.stacked_total_in(
+            sem, arrays, cfg, S, R_max, val.reshape(total, q), gchg)
         new = jnp.where(arrays.slot_valid[..., None],
                         base + damping[None, None, :] * total_in, 0.0)
         new = jnp.where(live[None, None, :], new, val)
@@ -389,6 +360,53 @@ def make_ppr_round(part: Partition, cfg: EngineConfig = EngineConfig(),
         return new, delta, counts
 
     return jax.jit(round_fn)
+
+
+def make_sharded_ppr_round(S: int, R_max: int, mesh: Mesh,
+                           axis_names=("data", "model"),
+                           cfg: EngineConfig = EngineConfig()):
+    """shard_map laned PPR round: (DeviceArrays, val, base, damping, live)
+    -> (new_val, (Q,) max-abs delta, (Q,) counts) — one counted round of
+    the sharded serving loop, same semantics as ``make_ppr_round`` with
+    real collectives (delta is pmax'd, counts psum'd across the mesh).
+    The lane count is taken from the traced argument shapes, so one
+    returned fn serves any Q (jit specializes per shape)."""
+    _check_cfg(cfg)
+    axis_names = exchange.axis_tuple(axis_names)
+    sem = actions.PAGERANK
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (
+        DeviceArrays.specs(spec),
+        spec, spec,
+        P(),                                   # damping: replicated
+        P(),                                   # live: replicated
+    )
+
+    def shard_fn(arrays_l: DeviceArrays, val_l, base_l, damping, live):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        val, base = val_l[0], base_l[0]        # (R_max, Q)
+
+        def gather(x):
+            return lax.all_gather(x, axis_names, tiled=True)
+
+        chg = arrays_s.slot_valid[..., None] & live[None, :]
+        total_in, counts = exchange.shard_total_in(
+            sem, arrays_s, cfg, S, R_max, axis_names,
+            gather(val), gather(chg))
+        new = jnp.where(arrays_s.slot_valid[..., None],
+                        base + damping[None, :] * total_in, 0.0)
+        new = jnp.where(live[None, :], new, val)
+        delta = lax.pmax(jnp.abs(new - val).max(axis=0), axis_names)
+        counts = lax.psum(counts, axis_names)
+        return new[None], delta[None], counts[None]
+
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=(spec, spec, spec), check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
 
 
 def run_ppr_lanes(part: Partition, seeds, dampings,
@@ -406,6 +424,8 @@ def run_ppr_lanes(part: Partition, seeds, dampings,
         [engine.init_values(part, actions.PAGERANK, {int(s): 1.0})
          for s in seeds], axis=-1).astype(np.float32)
     round_fn = make_ppr_round(part, cfg)
+    vol = _volume(part, cfg)
+    n_slots = jnp.sum(jnp.asarray(part.slot_vertex >= 0), dtype=jnp.int32)
 
     def body(carry):
         val, live, it, stats = carry
@@ -414,8 +434,9 @@ def run_ppr_lanes(part: Partition, seeds, dampings,
         stats = LaneStats(
             rounds=stats.rounds + live.astype(jnp.int32),
             messages=stats.messages + counts,
-            work_actions=stats.work_actions + live.astype(jnp.int32)
-            * jnp.sum(jnp.asarray(part.slot_vertex >= 0), dtype=jnp.int32),
+            work_actions=stats.work_actions
+            + live.astype(jnp.int32) * n_slots,
+            exchanged=stats.exchanged + live.astype(jnp.int32) * vol,
         )
         return new_val, live & (delta > tol), it + 1, stats
 
@@ -423,11 +444,10 @@ def run_ppr_lanes(part: Partition, seeds, dampings,
         _, live, it, _ = carry
         return jnp.any(live) & (it < max_rounds)
 
-    zero_q = jnp.zeros((q,), jnp.int32)
     val, live, it, stats = lax.while_loop(
         cond, body,
         (jnp.asarray(val0), jnp.ones((q,), bool), jnp.zeros((), jnp.int32),
-         LaneStats(zero_q, zero_q, zero_q)))
+         _zero_stats(q)))
     return val, stats
 
 

@@ -1,4 +1,5 @@
-"""Continuous-batching graph query server (ISSUE 2 tentpole).
+"""Continuous-batching graph query server (ISSUE 2 tentpole; sharded
+serving loop — ISSUE 3).
 
 The graph-query analog of ``serve.scheduler.ContinuousBatcher``: a pool
 of ``Q`` query lanes shares one compiled round step per semiring class
@@ -13,15 +14,26 @@ the paper's always-busy compute cells).
 A freed lane is inert by construction: its ``changed`` column is
 all-False, so it reads as the absorbing identity inside the shared relax
 and contributes nothing until the next injection overwrites it.
+
+``QueryServer(mesh=...)`` drives the lanes × ``shard_map`` round instead
+of the stacked one: the same continuous-batching loop, but each tick is
+one real-collective round over the mesh (value/changed ``all_gather``,
+inbox ``all_to_all`` — dense or §Perf compact targeted per
+``EngineConfig.exchange``), so one serving loop batches queries across
+devices.  Lane state lives sharded on the mesh; injection writes a
+column of the distributed table between rounds.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import exchange
 from repro.core import actions, engine
 from repro.core.engine import EngineConfig
 from repro.core.partition import Partition
@@ -66,26 +78,48 @@ class QueryResult:
     admitted_tick: int
     completed_tick: int
     latency_s: float             # submit -> completion (includes queue wait)
+    exchanged: int = 0           # exchange entries shipped while live
 
 
-class _MinPool:
-    """Min-semiring lane pool: one compiled laned fixpoint round."""
+class _LanePool:
+    """Shared pool plumbing: lane state lives on device — stacked, or
+    sharded over the server's mesh (``_sharding`` set, ``_arrays``
+    holding the mesh-placed graph tables), in which case every state
+    update is re-placed so the per-tick round never re-shards."""
+
+    _sharding = None
+
+    def _put(self, x):
+        return x if self._sharding is None else jax.device_put(
+            x, self._sharding)
+
+
+class _MinPool(_LanePool):
+    """Min-semiring lane pool: one compiled laned fixpoint round —
+    stacked, or lanes × shard_map when the server holds a mesh."""
 
     def __init__(self, part: Partition, n_lanes: int, cfg: EngineConfig,
-                 arrays: engine.DeviceArrays):
+                 arrays: engine.DeviceArrays, mesh=None,
+                 axis_names=("data", "model")):
         self.part, self.n = part, n_lanes
         S, R_max = part.S, part.R_max
-        self.val = jnp.full((S, R_max, n_lanes), jnp.inf, jnp.float32)
-        self.chg = jnp.zeros((S, R_max, n_lanes), bool)
+        self.exchange_volume = L._volume(part, cfg)
         self.unitw = np.zeros(n_lanes, np.int32)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
+        if mesh is None:
+            def round_fn(val, chg, unitw):
+                return exchange.fixpoint_round_stacked(
+                    actions.SSSP, arrays, cfg, S, R_max, val, chg,
+                    lane_unitw=unitw)
 
-        def round_fn(val, chg, unitw):
-            return L._lane_round_stacked(
-                actions.SSSP, arrays, cfg, S, R_max, unitw, val, chg)
-
-        import jax
-        self._round = jax.jit(round_fn)
+            self._round = jax.jit(round_fn)
+        else:
+            self._round, self._sharding = L.make_sharded_min_round(
+                S, R_max, mesh, axis_names, cfg)
+            self._arrays = arrays          # already device_put by the server
+        self.val = self._put(jnp.full((S, R_max, n_lanes), jnp.inf,
+                                      jnp.float32))
+        self.chg = self._put(jnp.zeros((S, R_max, n_lanes), bool))
 
     def inject(self, lane: int, req: QueryRequest):
         init, unitw = L.init_lane_values(
@@ -94,8 +128,8 @@ class _MinPool:
         col = jnp.asarray(init[..., 0])
         chg_col = (actions.SSSP.improved(col, jnp.full_like(col, jnp.inf))
                    & jnp.asarray(self.part.slot_vertex >= 0))
-        self.val = self.val.at[:, :, lane].set(col)
-        self.chg = self.chg.at[:, :, lane].set(chg_col)
+        self.val = self._put(self.val.at[:, :, lane].set(col))
+        self.chg = self._put(self.chg.at[:, :, lane].set(chg_col))
         self.unitw[lane] = int(unitw[0])
         self.reqs[lane] = req
 
@@ -105,32 +139,44 @@ class _MinPool:
 
     def step(self) -> np.ndarray:
         """One shared round; returns (Q,) per-lane message counts."""
+        if self._sharding is None:
+            self.val, self.chg, counts = self._round(
+                self.val, self.chg, jnp.asarray(self.unitw))
+            return np.asarray(counts)
+        arrays = self._arrays
         self.val, self.chg, counts = self._round(
-            self.val, self.chg, jnp.asarray(self.unitw))
-        return np.asarray(counts)
+            arrays, self.val, self.chg, jnp.asarray(self.unitw))
+        return np.asarray(counts)[0]     # psum'd — identical per shard row
 
     def extract(self, lane: int) -> np.ndarray:
         vv = engine.vertex_values(self.part, self.val[:, :, lane])
         return L.decode_min_values(vv, self.reqs[lane].kind)
 
 
-class _PprPool:
+class _PprPool(_LanePool):
     """Sum-semiring lane pool: per-lane seed/damping counted rounds with
-    tolerance-based convergence."""
+    tolerance-based convergence — stacked, or sharded under a mesh."""
 
     def __init__(self, part: Partition, n_lanes: int, cfg: EngineConfig,
-                 arrays: engine.DeviceArrays):
+                 arrays: engine.DeviceArrays, mesh=None,
+                 axis_names=("data", "model")):
         self.part, self.n = part, n_lanes
         S, R_max = part.S, part.R_max
-        self.val = jnp.zeros((S, R_max, n_lanes), jnp.float32)
-        # device-resident like `val`: only an injection touches it, so the
-        # per-tick round must not re-upload a table-sized host array
-        self.base = jnp.zeros((S, R_max, n_lanes), jnp.float32)
+        self.exchange_volume = L._volume(part, cfg)
         self.damping = np.zeros(n_lanes, np.float32)
         self.tol = np.full(n_lanes, 1e-6, np.float32)
         self.live_mask = np.zeros(n_lanes, bool)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
-        self._round = L.make_ppr_round(part, cfg, arrays=arrays)
+        if mesh is None:
+            self._round = L.make_ppr_round(part, cfg, arrays=arrays)
+        else:
+            self._round, self._sharding = L.make_sharded_ppr_round(
+                S, R_max, mesh, axis_names, cfg)
+            self._arrays = arrays          # already device_put by the server
+        self.val = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
+        # device-resident like `val`: only an injection touches it, so the
+        # per-tick round must not re-upload a table-sized host array
+        self.base = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
 
     def inject(self, lane: int, req: QueryRequest):
         srcs = np.asarray(req.sources).reshape(-1)
@@ -139,10 +185,10 @@ class _PprPool:
                 f"ppr takes a single personalization seed; got "
                 f"{srcs.size} sources")
         seed = int(srcs[0])
-        self.base = self.base.at[:, :, lane].set(jnp.asarray(
-            L.ppr_base_table(self.part, [seed], [req.damping])[..., 0]))
+        self.base = self._put(self.base.at[:, :, lane].set(jnp.asarray(
+            L.ppr_base_table(self.part, [seed], [req.damping])[..., 0])))
         col = engine.init_values(self.part, actions.PAGERANK, {seed: 1.0})
-        self.val = self.val.at[:, :, lane].set(jnp.asarray(col))
+        self.val = self._put(self.val.at[:, :, lane].set(jnp.asarray(col)))
         self.damping[lane] = req.damping
         self.tol[lane] = req.tol
         self.live_mask[lane] = True
@@ -152,11 +198,19 @@ class _PprPool:
         return self.live_mask.copy()
 
     def step(self) -> np.ndarray:
-        self.val, delta, counts = self._round(
-            self.val, self.base, jnp.asarray(self.damping),
-            jnp.asarray(self.live_mask))
-        self.live_mask &= np.asarray(delta) > self.tol
-        return np.asarray(counts)
+        if self._sharding is None:
+            self.val, delta, counts = self._round(
+                self.val, self.base, jnp.asarray(self.damping),
+                jnp.asarray(self.live_mask))
+            delta, counts = np.asarray(delta), np.asarray(counts)
+        else:
+            self.val, delta, counts = self._round(
+                self._arrays, self.val, self.base,
+                jnp.asarray(self.damping), jnp.asarray(self.live_mask))
+            # pmax'd / psum'd — identical per shard row
+            delta, counts = np.asarray(delta)[0], np.asarray(counts)[0]
+        self.live_mask &= delta > self.tol
+        return counts
 
     def extract(self, lane: int) -> np.ndarray:
         return engine.vertex_values(
@@ -170,23 +224,37 @@ class QueryServer:
     lanes, advance each pool one laned round, retire converged lanes.
     ``run()`` drains the queue.  Occupancy / round / message counters are
     kept per lane for the serving metrics in ``benchmarks/query_bench.py``.
+
+    With ``mesh=`` the per-tick round is the lanes × shard_map round with
+    real collectives (see the module docstring); the batching semantics —
+    masked mid-flight injection, eviction on convergence, no head-of-line
+    blocking — are identical to the stacked server's.
     """
 
     def __init__(self, part: Partition, n_lanes: int = 8,
                  cfg: EngineConfig = EngineConfig(),
-                 ppr_lanes: int | None = None):
+                 ppr_lanes: int | None = None, mesh=None,
+                 axis_names=("data", "model")):
         self.part = part
+        self.mesh = mesh
         # one device copy of the static graph tables, shared by both pools
         arrays = engine.DeviceArrays.from_partition(part)
-        self.min_pool = _MinPool(part, n_lanes, cfg, arrays)
+        if mesh is not None:
+            sharding = NamedSharding(mesh, P(exchange.axis_tuple(axis_names)))
+            arrays = jax.tree.map(
+                lambda x: jax.device_put(x, sharding), arrays)
+        self.min_pool = _MinPool(part, n_lanes, cfg, arrays, mesh,
+                                 axis_names)
         self.ppr_pool = _PprPool(
-            part, n_lanes if ppr_lanes is None else ppr_lanes, cfg, arrays)
+            part, n_lanes if ppr_lanes is None else ppr_lanes, cfg, arrays,
+            mesh, axis_names)
         self.queue: list[QueryRequest] = []
         self.results: dict[int, QueryResult] = {}
         self.tick = 0
         self._next_qid = 0
         self._lane_rounds = {}       # (pool, lane) -> rounds live
         self._lane_msgs = {}
+        self._lane_exchanged = {}
         self._submit_time = {}       # qid -> wall time at submit
         self._admit_tick = {}
         self._pools_used: set[int] = set()
@@ -226,6 +294,7 @@ class QueryServer:
                 key = (id(pool), lane)
                 self._lane_rounds[key] = 0
                 self._lane_msgs[key] = 0
+                self._lane_exchanged[key] = 0
                 self._admit_tick[key] = self.tick
                 admitted.append(req.qid)
         return admitted
@@ -250,6 +319,7 @@ class QueryServer:
             if live_before[lane]:
                 self._lane_rounds[key] += 1
                 self._lane_msgs[key] += int(counts[lane])
+                self._lane_exchanged[key] += pool.exchange_volume
                 n_live += 1
             if not live_after[lane]:           # converged -> evict now
                 req = pool.reqs[lane]
@@ -261,6 +331,7 @@ class QueryServer:
                     completed_tick=self.tick,
                     latency_s=time.perf_counter()
                     - self._submit_time[req.qid],
+                    exchanged=self._lane_exchanged[key],
                 )
                 pool.reqs[lane] = None         # lane freed immediately
         return n_live

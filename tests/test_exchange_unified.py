@@ -1,0 +1,271 @@
+"""Unified lane-generic exchange layer (ISSUE 3 tentpole).
+
+Covers the acceptance matrix: compact-vs-dense *laned* parity across min
+and sum semirings (bit-identical min values, strictly fewer exchanged
+entries on a skewed partition), the unlaned/laned consistency of the
+shared round composition (a Q=1 lane column equals the unlaned engine
+round bit-for-bit), and the sharded QueryServer — same continuous-
+batching semantics as the stacked server (no head-of-line blocking on a
+1-device mesh in-process; full 8-device parity on an identical request
+trace in a subprocess, min and ppr pools, dense and compact exchange).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.apps import batched_queries, personalized_pagerank
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators, reference
+from repro.query import QueryServer
+from repro.query.lanes import init_lane_values
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _skewed_workload(seed=4):
+    g = generators.rmat(8, edge_factor=4, seed=seed).with_random_weights(
+        seed=seed)
+    deg = np.argsort(-g.out_degrees())
+    queries = [("bfs", int(deg[0])), ("sssp", int(deg[1])),
+               ("bfs", int(deg[2])), ("sssp", int(deg[7]))]
+    return g, queries
+
+
+# --------------------------------------------------------------------------
+# compact targeted exchange on the lane axis
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_compact_laned_min_bit_identical_fewer_exchanged(use_pallas):
+    """A mixed BFS/SSSP lane batch on the compact targeted exchange is
+    bit-identical to the dense laned path, and every lane ships strictly
+    fewer exchange entries on the skewed (power-law RMAT) partition —
+    the §Perf message reduction, now on the lane axis."""
+    g, queries = _skewed_workload()
+    dense = engine.EngineConfig(use_pallas=use_pallas)
+    compact = engine.EngineConfig(use_pallas=use_pallas, exchange="compact")
+    res_d, st_d, part = batched_queries(g, queries, num_shards=4,
+                                        rpvo_max=2, cfg=dense)
+    res_c, st_c, _ = batched_queries(g, queries, part=part, cfg=compact)
+    assert part.P_t < part.R_max          # the partition is actually skewed
+    for a, b in zip(res_d, res_c):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(st_d.rounds),
+                                  np.asarray(st_c.rounds))
+    np.testing.assert_array_equal(np.asarray(st_d.messages),
+                                  np.asarray(st_c.messages))
+    ex_d = np.asarray(st_d.exchanged)
+    ex_c = np.asarray(st_c.exchanged)
+    assert (ex_c < ex_d).all()
+    assert (ex_c > 0).all()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_compact_laned_ppr_matches_dense_fewer_exchanged(use_pallas):
+    """Sum-semiring lanes (personalized PageRank, per-lane damping) on the
+    compact exchange: same scores as the dense laned path (to float-sum
+    reassociation across the exchange — the compact path sums per-source
+    partials sequentially where the dense reduce is pairwise) and
+    strictly fewer exchanged entries; both match the numpy oracle."""
+    g, _ = _skewed_workload()
+    deg = np.argsort(-g.out_degrees())
+    seeds, dampings = [int(deg[0]), int(deg[2])], [0.85, 0.6]
+    sc_d, st_d, part = personalized_pagerank(
+        g, seeds, dampings, num_shards=4, rpvo_max=2, tol=1e-9,
+        cfg=engine.EngineConfig(use_pallas=use_pallas))
+    sc_c, st_c, _ = personalized_pagerank(
+        g, seeds, dampings, part=part, tol=1e-9,
+        cfg=engine.EngineConfig(use_pallas=use_pallas, exchange="compact"))
+    np.testing.assert_allclose(sc_c, sc_d, rtol=1e-6, atol=1e-9)
+    for q, (s, d) in enumerate(zip(seeds, dampings)):
+        want = reference.personalized_pagerank(g, s, d, tol=1e-12)
+        np.testing.assert_allclose(sc_c[:, q], want, rtol=1e-4, atol=1e-7)
+    assert (np.asarray(st_c.exchanged) < np.asarray(st_d.exchanged)).all()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_compact_laned_sharded_single_device_mesh(use_pallas):
+    """The compact laned exchange under shard_map (trivial mesh) equals
+    the stacked compact laned run, jnp and fused."""
+    from jax.sharding import Mesh
+    g, queries = _skewed_workload(seed=6)
+    cfg = engine.EngineConfig(exchange="compact", use_pallas=use_pallas)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    res_sh, st_sh, part = batched_queries(g, queries, num_shards=1,
+                                          rpvo_max=2, mesh=mesh, cfg=cfg)
+    res_st, st_st, _ = batched_queries(g, queries, part=part, cfg=cfg)
+    for a, b in zip(res_sh, res_st):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(st_sh.exchanged),
+                                  np.asarray(st_st.exchanged))
+
+
+def test_laned_q1_round_equals_unlaned_round():
+    """The unified round composition is lane-generic: a Q=1 laned round
+    equals the unlaned engine round bit-for-bit, dense and compact, so
+    the engine and the query runners provably share one implementation."""
+    from repro import exchange
+    g, _ = _skewed_workload(seed=2)
+    part = build_partition(g, PartitionConfig(num_shards=4, rpvo_max=2))
+    arrays = engine.DeviceArrays.from_partition(part)
+    sem = actions.SSSP
+    init, _ = init_lane_values(part, [("sssp", int(g.src[0]))])
+    val = jnp.asarray(init[..., 0])
+    chg = sem.improved(val, jnp.full_like(val, jnp.inf)) & arrays.slot_valid
+    for exch in ("dense", "compact"):
+        cfg = engine.EngineConfig(exchange=exch)
+        v_u, c_u = val, chg
+        v_l, c_l = val[..., None], chg[..., None]
+        for _ in range(3):
+            v_u, c_u, m_u = exchange.fixpoint_round_stacked(
+                sem, arrays, cfg, part.S, part.R_max, v_u, c_u)
+            v_l, c_l, m_l = exchange.fixpoint_round_stacked(
+                sem, arrays, cfg, part.S, part.R_max, v_l, c_l,
+                lane_unitw=jnp.zeros((1,), jnp.int32))
+            np.testing.assert_array_equal(np.asarray(v_u),
+                                          np.asarray(v_l[..., 0]))
+            np.testing.assert_array_equal(np.asarray(c_u),
+                                          np.asarray(c_l[..., 0]))
+            assert int(m_u) == int(m_l[0])
+
+
+# --------------------------------------------------------------------------
+# sharded QueryServer: same continuous-batching semantics as stacked
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange_kind", ["dense", "compact"])
+def test_sharded_server_no_head_of_line_blocking(exchange_kind):
+    """The stacked server's no-head-of-line-blocking acceptance test,
+    run against the lanes x shard_map serving loop (1-device mesh
+    in-process; the 8-device run is the subprocess test below)."""
+    from jax.sharding import Mesh
+    from repro.graph.graph import COOGraph
+    n = 40
+    src = np.arange(n - 1, dtype=np.int32)
+    g = COOGraph(n, src, (src + 1).astype(np.int32), None)
+    part = build_partition(g, PartitionConfig(num_shards=1, rpvo_max=1))
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    srv = QueryServer(part, n_lanes=2, mesh=mesh,
+                      cfg=engine.EngineConfig(exchange=exchange_kind))
+    q_long = srv.submit("bfs", 0)          # n-1 rounds down the path
+    q_short1 = srv.submit("bfs", n - 3)    # 2 rounds
+    q_short2 = srv.submit("bfs", n - 5)    # queued: both lanes busy
+    results = srv.run()
+    assert set(results) == {q_long, q_short1, q_short2}
+
+    long_r, s1, s2 = results[q_long], results[q_short1], results[q_short2]
+    # short2 was admitted into short1's freed lane while long was live...
+    assert s2.admitted_tick > s1.completed_tick      # freed by short1
+    assert s2.admitted_tick < long_r.completed_tick  # mid-flight, long live
+    assert s2.lane == s1.lane and s2.lane != long_r.lane
+    # ...and neither short query waited for the long one to finish
+    assert s1.completed_tick < long_r.completed_tick
+    assert s2.completed_tick < long_r.completed_tick
+
+    np.testing.assert_array_equal(long_r.values, reference.bfs_levels(g, 0))
+    np.testing.assert_array_equal(s1.values,
+                                  reference.bfs_levels(g, n - 3))
+    np.testing.assert_array_equal(s2.values,
+                                  reference.bfs_levels(g, n - 5))
+    assert long_r.rounds == n
+    assert long_r.exchanged > 0
+
+
+def test_sharded_server_mixed_kinds_single_device_mesh():
+    """Mixed min + ppr requests through the sharded serving loop match
+    the numpy oracles (the ppr pool's sharded counted round included)."""
+    from jax.sharding import Mesh
+    g = generators.rmat(7, edge_factor=5, seed=8)
+    from repro.apps.pagerank import _pr_graph
+    part = build_partition(_pr_graph(g),
+                           PartitionConfig(num_shards=1, rpvo_max=2))
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    deg = np.argsort(-g.out_degrees())
+    srv = QueryServer(part, n_lanes=2, ppr_lanes=2, mesh=mesh)
+    qa = srv.submit("ppr", int(deg[0]), damping=0.85, tol=1e-9)
+    qb = srv.submit("ppr", int(deg[3]), damping=0.6, tol=1e-9)
+    qc = srv.submit("bfs", int(deg[1]))
+    results = srv.run()
+    for qid, seed, d in ((qa, int(deg[0]), 0.85), (qb, int(deg[3]), 0.6)):
+        want = reference.personalized_pagerank(g, seed, d, tol=1e-12)
+        np.testing.assert_allclose(results[qid].values, want,
+                                   rtol=1e-4, atol=1e-7)
+    np.testing.assert_array_equal(results[qc].values,
+                                  reference.bfs_levels(g, int(deg[1])))
+
+
+CHILD_SERVER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import engine
+    from repro.core.partition import PartitionConfig, build_partition
+    from repro.graph import generators
+    from repro.query import QueryServer
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    g = generators.rmat(8, edge_factor=4, seed=6).with_random_weights(seed=6)
+    from repro.apps.pagerank import _pr_graph
+    part = build_partition(_pr_graph(g),
+                           PartitionConfig(num_shards=8, rpvo_max=4))
+    deg = np.argsort(-g.out_degrees())
+    trace = [("bfs", int(deg[0])), ("sssp", int(deg[1])),
+             ("ppr", int(deg[2])), ("bfs", int(deg[3])),
+             ("reachability", int(deg[5])), ("sssp", int(deg[8])),
+             ("ppr", int(deg[9])), ("bfs", int(deg[12]))]
+    for exch in ("dense", "compact"):
+        cfg = engine.EngineConfig(exchange=exch)
+        servers = (QueryServer(part, n_lanes=2, ppr_lanes=1, cfg=cfg),
+                   QueryServer(part, n_lanes=2, ppr_lanes=1, cfg=cfg,
+                               mesh=mesh))
+        out = []
+        for srv in servers:
+            qids = [srv.submit(kind, root, tol=1e-9) for kind, root in trace]
+            out.append((qids, srv.run()))
+        (q_st, r_st), (q_sh, r_sh) = out
+        for a, b in zip(q_st, q_sh):
+            st, sh = r_st[a], r_sh[b]
+            if st.kind == "ppr":
+                # sum-semiring deltas reassociate across 8 real shards, so
+                # the tolerance test may trip a round apart; values agree
+                # to fp noise
+                np.testing.assert_allclose(sh.values, st.values,
+                                           rtol=1e-5, atol=1e-9)
+                assert abs(sh.rounds - st.rounds) <= 2, \\
+                    (st.kind, sh.rounds, st.rounds)
+            else:
+                # min lanes are bit-exact, so the whole serving schedule
+                # (rounds, messages, admit/complete ticks) must replay
+                np.testing.assert_array_equal(sh.values, st.values)
+                assert sh.rounds == st.rounds, (st.kind, sh.rounds, st.rounds)
+                assert sh.messages == st.messages
+                assert sh.admitted_tick == st.admitted_tick
+                assert sh.completed_tick == st.completed_tick
+    print("SERVER_SHARDED_OK")
+""")
+
+
+def test_sharded_server_eight_devices_subprocess():
+    """The sharded QueryServer under real 8-device collectives serves an
+    identical request trace (mixed min + ppr, deeper than the lane
+    count) with the same per-request values, rounds, messages, and
+    admit/complete ticks as the stacked server — dense and compact."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # pin the child to CPU: with libtpu present, backend autodetect stalls
+    # on (unreachable) TPU metadata; these are CPU host devices
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", CHILD_SERVER], env=env, capture_output=True,
+        text=True, timeout=420)
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "SERVER_SHARDED_OK" in out.stdout

@@ -257,9 +257,6 @@ def test_lane_runner_rejects_unsupported_configs():
     g = generators.ring(16)
     part = build_partition(g, PartitionConfig(num_shards=2))
     init = np.full((part.S, part.R_max, 1), np.inf, np.float32)
-    with pytest.raises(ValueError, match="dense"):
-        run_stacked_lanes(part, init,
-                          cfg=engine.EngineConfig(exchange="compact"))
     with pytest.raises(ValueError, match="eager"):
         run_stacked_lanes(part, init,
                           cfg=engine.EngineConfig(collapse="deferred"))
