@@ -31,6 +31,17 @@ DATASETS = {
 }
 
 
+def add_seed_arg(ap, default: int = 7):
+    """Grow a bench arg parser a ``--seed`` flag: the base RNG seed for
+    graph generation (and anything else stochastic), threaded through the
+    engine/query benches so BENCH_*.json runs are reproducible
+    run-to-run and recorded in the emitted report."""
+    ap.add_argument("--seed", type=int, default=default,
+                    help="base RNG seed for graph generation "
+                         f"(default {default}; recorded in the report)")
+    return ap
+
+
 def reversed_graph(g):
     from repro.graph.graph import COOGraph
     return COOGraph(g.n, g.dst, g.src, g.weight)

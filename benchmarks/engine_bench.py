@@ -1,23 +1,28 @@
-"""Engine hot-path benchmark: fused vs unfused relax phase (ISSUE 1).
+"""Engine hot-path benchmark: fused vs unfused relax phase (ISSUE 1),
+plus the VMEM-tiled fused path (ISSUE 4).
 
 Runs BFS / SSSP / PageRank on a skewed RMAT graph through the stacked
-engine three ways — ``fused`` (the frontier-aware relax+reduce Pallas
-kernel), ``unfused`` (the pre-fusion composition: XLA gather/relax/mask
-ops + the standalone Pallas segment-reduce kernel,
-``pallas_mode='reduce'``), and ``jnp`` (no Pallas at all, the oracle) —
-measuring per-round wall time, delivered messages, and the exact number
-of Pallas grid cells each variant executes per round
-(``fused_grid_cells`` mirrors the kernel's skip predicates: the unfused
-reduce kernel executes every range-intersecting cell; the fused kernel
-additionally skips frontier-dead edge chunks).
+engine four ways — ``fused`` (the frontier-aware relax+reduce Pallas
+kernel, value table pinned in VMEM), ``tiled`` (the same kernel with the
+VMEM budget forced below the slot table so every launch runs the
+HBM-tiled double-buffered-DMA path), ``unfused`` (the pre-fusion
+composition: XLA gather/relax/mask ops + the standalone Pallas
+segment-reduce kernel, ``pallas_mode='reduce'``), and ``jnp`` (no Pallas
+at all, the oracle) — measuring per-round wall time, delivered messages,
+and the exact number of Pallas grid cells each variant executes per
+round (``fused_grid_cells`` mirrors the kernel's skip predicates; for
+the tiled variant it additionally mirrors the per-cell value-tile DMA
+issues and bytes).
 
 Emits ``BENCH_engine.json`` so future PRs have a perf trajectory:
 
-    rounds, wall-time/round, messages/s per app x variant, and per-round
+    rounds, wall-time/round, messages/s per app x variant, per-round
     grid-cell counts demonstrating the frontier skip firing on late
-    sparse BFS/SSSP rounds.
+    sparse BFS/SSSP rounds, and tiled-vs-pinned wall/round + DMA-byte
+    columns (``tiled_vs_pinned``) for the out-of-core path.
 
 Usage:  PYTHONPATH=src python benchmarks/engine_bench.py [--out PATH]
+        [--seed N]
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import argparse
 import json
 import time
 
-import common  # noqa: F401  (pins JAX_PLATFORMS=cpu before jax loads)
+import common  # pins JAX_PLATFORMS=cpu before jax loads; --seed helper
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,11 +38,13 @@ import numpy as np
 from repro.core import actions, engine
 from repro.core.partition import PartitionConfig, build_partition
 from repro.graph import generators
-from repro.kernels.fused_relax_reduce import fused_grid_cells
+from repro.kernels.fused_relax_reduce import (
+    fused_grid_cells, select_kernel_path,
+)
 
 
 def bench_rounds(sem, part, sources, cfg, max_rounds, fixed_rounds=None,
-                 repeats=5, damping=0.85):
+                 repeats=5, damping=0.85, vblk=None):
     """Drive the stacked engine round-by-round (jitted round fn — the
     exact round the shipped runners execute), timing each round
     (best-of-``repeats``, the round fn is pure) and mirroring the
@@ -77,7 +84,7 @@ def bench_rounds(sem, part, sources, cfg, max_rounds, fixed_rounds=None,
             break
         cells = fused_grid_cells(
             part.edge_dst_flat, part.edge_mask, part.edge_src_root_flat,
-            np.asarray(chg).reshape(-1), total)
+            np.asarray(chg).reshape(-1), total, vblk=vblk)
         dt = np.inf
         for _ in range(repeats):
             t0 = time.perf_counter()
@@ -85,14 +92,18 @@ def bench_rounds(sem, part, sources, cfg, max_rounds, fixed_rounds=None,
             nval.block_until_ready()
             dt = min(dt, time.perf_counter() - t0)
         val, chg = nval, nchg
-        rounds.append({
+        row = {
             "wall_s": dt,
             "messages": int(msg_count),
             "grid_fused_live": cells["fused_live"],
             "grid_range_live": cells["range_live"],
             "grid_total_fused": cells["total_fused"],
             "grid_total_unfused": cells["total_unfused"],
-        })
+        }
+        if vblk is not None:
+            row["grid_tile_dmas"] = cells["fused_tile_dmas"]
+            row["dma_bytes"] = cells["dma_bytes"]
+        rounds.append(row)
     return rounds
 
 
@@ -101,7 +112,7 @@ def summarize(rounds, cell_key):
     total_wall = sum(r["wall_s"] for r in rounds)
     executed = (sum(r[cell_key] for r in rounds)
                 if cell_key is not None else 0)
-    return {
+    out = {
         "rounds": len(rounds),
         "wall_s_total": total_wall,
         "wall_s_per_round": total_wall / max(len(rounds), 1),
@@ -110,6 +121,10 @@ def summarize(rounds, cell_key):
         "grid_cells_executed": executed,
         "per_round": rounds,
     }
+    if rounds and "dma_bytes" in rounds[0]:
+        out["tile_dmas_total"] = sum(r["grid_tile_dmas"] for r in rounds)
+        out["dma_bytes_total"] = sum(r["dma_bytes"] for r in rounds)
+    return out
 
 
 def main():
@@ -122,10 +137,12 @@ def main():
     ap.add_argument("--rpvo-max", type=int, default=4)
     ap.add_argument("--pr-iters", type=int, default=10)
     ap.add_argument("--max-rounds", type=int, default=64)
+    common.add_seed_arg(ap)
     args = ap.parse_args()
 
-    g = generators.rmat(args.scale, edge_factor=args.edge_factor, seed=7)
-    gw = g.with_random_weights(seed=7)
+    g = generators.rmat(args.scale, edge_factor=args.edge_factor,
+                        seed=args.seed)
+    gw = g.with_random_weights(seed=args.seed)
     root = int(np.argmax(g.out_degrees()))
     pcfg = PartitionConfig(num_shards=args.shards, rpvo_max=args.rpvo_max)
 
@@ -133,7 +150,8 @@ def main():
         "bench": "engine_round",
         "graph": {"kind": "rmat", "scale": args.scale,
                   "edge_factor": args.edge_factor, "n": g.n,
-                  "num_edges": g.num_edges, "root": root},
+                  "num_edges": g.num_edges, "root": root,
+                  "seed": args.seed},
         "config": {"shards": args.shards, "rpvo_max": args.rpvo_max,
                    "backend": jax.default_backend(),
                    "interpret_mode": jax.default_backend() != "tpu"},
@@ -166,15 +184,40 @@ def main():
     ]
     for name, sem, p, sources, fixed in jobs:
         entry = {}
-        for label, cfg, cell_key in variants:
-            rounds = bench_rounds(sem, p, sources, cfg, args.max_rounds,
-                                  fixed_rounds=fixed)
+        # budget a quarter of the padded slot table's bytes — always below
+        # the table, so the fused launch takes the tiled path at any
+        # --scale (an absolute floor would fall back to pinned on small
+        # partitions and silently bench the wrong kernel)
+        slots = p.S * p.R_max
+        v_pad = -(-slots // 128) * 128
+        budget = v_pad * 4 // 4
+        path, vblk = select_kernel_path(slots, 1, budget)
+        assert path == "tiled", (slots, budget)
+        entry["kernel_budget"] = {"vmem_budget_bytes": budget,
+                                  "vblk": vblk, "slots": slots}
+        tiled_cfg = engine.EngineConfig(use_pallas=True,
+                                        vmem_budget_bytes=budget)
+        for label, cfg, cell_key in variants + [
+                ("tiled", tiled_cfg, "grid_fused_live")]:
+            rounds = bench_rounds(
+                sem, p, sources, cfg, args.max_rounds, fixed_rounds=fixed,
+                vblk=vblk if label == "tiled" else None)
             entry[label] = summarize(rounds, cell_key)
             print(f"{name:9s} {label:8s} rounds={entry[label]['rounds']:3d} "
                   f"wall/round={entry[label]['wall_s_per_round']*1e3:8.2f}ms "
                   f"msgs/s={entry[label]['messages_per_s']:.3e} "
                   f"cells={entry[label]['grid_cells_executed']}")
-        f, u = entry["fused"], entry["unfused"]
+        f, u, t = entry["fused"], entry["unfused"], entry["tiled"]
+        entry["tiled_vs_pinned"] = {
+            "wall_s_per_round_tiled": t["wall_s_per_round"],
+            "wall_s_per_round_pinned": f["wall_s_per_round"],
+            "wall_ratio": t["wall_s_per_round"]
+            / max(f["wall_s_per_round"], 1e-12),
+            "grid_cells_tiled": t["grid_cells_executed"],
+            "grid_cells_pinned": f["grid_cells_executed"],
+            "tile_dmas_total": t.get("tile_dmas_total", 0),
+            "dma_bytes_total": t.get("dma_bytes_total", 0),
+        }
         # the frontier skip must fire: strictly fewer grid cells on the
         # late sparse rounds of the fixpoint apps
         if fixed is None and f["per_round"]:

@@ -31,7 +31,7 @@ import argparse
 import json
 import time
 
-import common  # noqa: F401  (pins JAX_PLATFORMS=cpu before jax loads)
+import common  # pins JAX_PLATFORMS=cpu before jax loads; --seed helper
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -240,20 +240,21 @@ def main():
     ap.add_argument("--rpvo-max", type=int, default=4)
     ap.add_argument("--lanes", type=int, default=16)
     ap.add_argument("--server-queue", type=int, default=48)
+    common.add_seed_arg(ap)
     args = ap.parse_args()
 
-    g = generators.rmat(args.scale, edge_factor=args.edge_factor, seed=7) \
-        .with_random_weights(seed=7)
+    g = generators.rmat(args.scale, edge_factor=args.edge_factor,
+                        seed=args.seed).with_random_weights(seed=args.seed)
     part = build_partition(
         g, PartitionConfig(num_shards=args.shards, rpvo_max=args.rpvo_max))
-    workload = _mixed_queries(g, args.lanes, seed=1)
-    deep_queue = _mixed_queries(g, args.server_queue, seed=2)
+    workload = _mixed_queries(g, args.lanes, seed=args.seed + 1)
+    deep_queue = _mixed_queries(g, args.server_queue, seed=args.seed + 2)
 
     report = {
         "bench": "query_serving",
         "graph": {"kind": "rmat", "scale": args.scale,
                   "edge_factor": args.edge_factor, "n": g.n,
-                  "num_edges": g.num_edges},
+                  "num_edges": g.num_edges, "seed": args.seed},
         "config": {"shards": args.shards, "rpvo_max": args.rpvo_max,
                    "lanes": args.lanes,
                    "backend": jax.default_backend(),

@@ -67,6 +67,15 @@ class EngineConfig:
     # False skips the Fig-6 message counter (an O(E) boolean reduction per
     # round on the fused path); RunStats then reports zero messages/pruned
     track_stats: bool = True
+    # VMEM byte budget for the fused kernel's value-table residency: the
+    # kernel pins the whole padded (S*R_max[, Q]) slot table in VMEM when
+    # it fits the budget, else tiles it out of HBM with per-cell
+    # double-buffered async DMA (see kernels.fused_relax_reduce.
+    # select_kernel_path).  None defers to the REPRO_VMEM_BUDGET env var,
+    # then to DEFAULT_VMEM_BUDGET_BYTES — so paper-scale partitions whose
+    # slot table exceeds VMEM run fused via tiling instead of failing to
+    # compile.
+    vmem_budget_bytes: int | None = None
 
     def __post_init__(self):
         if self.collapse not in ("eager", "deferred"):
@@ -75,6 +84,10 @@ class EngineConfig:
             raise ValueError(f"exchange={self.exchange!r}")
         if self.pallas_mode not in ("fused", "reduce"):
             raise ValueError(f"pallas_mode={self.pallas_mode!r}")
+        if self.vmem_budget_bytes is not None \
+                and self.vmem_budget_bytes <= 0:
+            raise ValueError(
+                f"vmem_budget_bytes={self.vmem_budget_bytes!r}")
 
 
 class DeviceArrays(typing.NamedTuple):

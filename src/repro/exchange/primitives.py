@@ -58,10 +58,12 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
             from repro.kernels import ops as kops
             # the Fig-6 message count rides along for free: it is a
             # reduction of the same gather that builds the kernel's
-            # frontier chunk bitmap
+            # frontier chunk bitmap.  The cfg's VMEM budget selects the
+            # value table's residency (pinned vs HBM-tiled DMA).
             partial, count = kops.fused_relax_reduce(
                 gval, gchg, src, w, mask, idsf, num_segments,
-                relax_kind=sem.relax_kind, kind=sem.segment)
+                relax_kind=sem.relax_kind, kind=sem.segment,
+                vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None))
             if not cfg.track_stats:
                 count = jnp.zeros((), jnp.int32)
             return partial, count
@@ -94,7 +96,8 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
         from repro.kernels import ops as kops
         partial, counts = kops.fused_relax_reduce_lanes(
             gval, gchg, unitw, src, w, mask, idsf, num_segments,
-            relax_kind=sem.relax_kind, kind=sem.segment)
+            relax_kind=sem.relax_kind, kind=sem.segment,
+            vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None))
         if not cfg.track_stats:
             counts = jnp.zeros((q,), jnp.int32)
         return partial, counts

@@ -9,13 +9,12 @@ materializing an ``(S, E_max)`` HBM intermediate:
     inbox   = segment_reduce(msg, edge_dst)   # Pallas kernel
 
 This kernel fuses the whole pipeline into one VMEM-resident pass: the
-vertex value table is pinned in VMEM and the gather, semiring relax,
-frontier masking, and blocked semiring reduction all happen inside the
-grid cell — no per-edge float array ever round-trips HBM.  The
-frontier mask is folded into the value table before launch (inactive
-sources read as the absorbing identity: ``relax(identity, w) ==
-identity`` for every supported semiring), so the cell needs a single
-VMEM gather.
+gather, semiring relax, frontier masking, and blocked semiring reduction
+all happen inside the grid cell — no per-edge float array ever
+round-trips HBM.  The frontier mask is folded into the value table
+before launch (inactive sources read as the absorbing identity:
+``relax(identity, w) == identity`` for every supported semiring), so the
+cell needs a single VMEM gather.
 
 Blocking follows ``rhizome_segment_reduce``: the edge axis is tiled into
 ``EBLK`` chunks, the segment axis into ``SBLK`` blocks; cell (i, j)
@@ -40,8 +39,11 @@ paper's diffusion pruning — work stays proportional to the frontier):
 
 ``fused_grid_cells`` mirrors the two skip predicates on the host so
 benchmarks/tests can count exactly how many grid cells execute (see
-``benchmarks/engine_bench.py``: the fused path must execute strictly
-fewer cells than range-skip alone once the frontier thins).
+``benchmarks/engine_bench.py``); with a ``vblk`` it also mirrors the
+tiled path's per-chunk tile counts and DMA issue/byte totals, and the
+kernels' optional ``with_debug`` counters report the *kernel-side*
+executed-cell / issued-DMA totals so the mirror is provably exact
+(``tests/test_fused_kernel.py::test_grid_cell_dma_oracle_*``).
 
 Semiring relax is selected statically via ``relax_kind``
 (``Semiring.relax_kind``, single-sourced with the jnp path through
@@ -50,16 +52,44 @@ relax; the weight is ignored), 'mul_w' (plus-times / PageRank).
 Validated against ``ref.fused_relax_reduce_ref`` in interpret mode (CPU);
 the compiled path targets TPU VMEM via BlockSpecs.
 
-**Scale constraint**: the whole padded value table rides into VMEM per
-grid cell (``full_spec``), so on real hardware the kernel is limited to
-partitions whose slot table fits alongside the edge blocks (~16 MB VMEM
-⇒ roughly 3M f32 slots). Paper-scale graphs (R22+) need the value table
-tiled with per-cell async DMA + double buffering — tracked as a ROADMAP
-open item; interpret-mode CI does not exercise the limit.
+**Scale: budget-based pinned/tiled path selection.**  Two residency
+strategies share the cell math, selected per launch from the slot
+table's footprint against a VMEM budget (``vmem_budget_bytes`` on
+``EngineConfig``, the ``REPRO_VMEM_BUDGET`` env var, or the
+``DEFAULT_VMEM_BUDGET_BYTES`` fallback — see ``select_kernel_path``):
+
+* **pinned** — the whole padded value table rides into VMEM per grid
+  cell (``full_spec``).  Fastest when it fits (one resident copy, zero
+  per-cell DMA), but caps partitions at roughly ``budget / 4`` f32
+  slots (~3M at the 12 MiB default).
+* **tiled**  — the value table stays in HBM (``memory_space=ANY``); the
+  slot axis is cut into ``vblk``-wide tiles and each live grid cell
+  async-copies (``pltpu.make_async_copy``) only the tiles its edge
+  chunk's *frontier-active sources* touch, double-buffered so tile
+  ``t+1``'s DMA overlaps tile ``t``'s relax+reduce.  Per-chunk tile
+  lists ride the scalar prefetch (``chunk_ntiles`` / ``chunk_tiles``),
+  so a sparse frontier pays DMA proportional to the tiles it actually
+  diffuses from — the out-of-core form of the paper's rhizome scaling
+  (slot state larger than any one fast memory).  Tile lists are
+  per-edge-chunk (not per-(i, j) cell): a dst-range filter would shrink
+  DMAs further and is future work.  Note the scalar-prefetch tables are
+  O(E/EBLK) rows (as the pre-existing ``chunk_lo/hi/act`` already were),
+  times ``t_max`` columns for the tile lists — at extreme chunk counts
+  they outgrow real SMEM and belong in an HBM side table (ROADMAP);
+  with the default budget ``t_max`` stays single-digit (vblk is large),
+  so the chunk count, not the tile list, is the binding row dimension.
+
+Both paths are bit-identical for min semirings (sum differs only by
+float reassociation across tile partials).  The laned kernels grow the
+same two paths with the trailing query axis padded to the TPU lane tile
+(``LANE_TILE`` when compiling, a sublane multiple under interpret —
+tail lanes are frontier-dead and masked, so padding never changes
+results; see ``_lane_pad``).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +101,13 @@ from repro.core.actions import RELAX_FNS
 
 EBLK = 512   # edge-axis tile
 SBLK = 256   # segment-axis tile (lane-aligned)
+
+LANE_TILE = 128          # TPU lane tile: laned compile pads Q up to this
+INTERPRET_LANE_TILE = 8  # sublane multiple: cheap pad that still exercises
+                         # the masked-tail machinery under interpret-mode CI
+
+DEFAULT_VMEM_BUDGET_BYTES = 12 * 2**20   # ~3/4 of a 16 MiB TPU core VMEM
+VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
 
 RELAX_KINDS = tuple(RELAX_FNS)
 
@@ -86,13 +123,111 @@ def _relax(relax_kind: str, src_val, w):
     return RELAX_FNS[relax_kind](src_val, w)
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-max(x, 1) // m) * m
+
+
+def _check_pair(relax_kind: str, kind: str):
+    assert relax_kind in RELAX_KINDS, relax_kind
+    if (relax_kind, kind) not in ABSORBING_PAIRS:
+        raise ValueError(
+            f"non-absorbing relax/combine pairing {(relax_kind, kind)}: "
+            "frontier masking requires relax(identity, w) == identity "
+            f"(supported: {sorted(ABSORBING_PAIRS)})")
+
+
+# --------------------------------------------------------------------------
+# budget-based pinned/tiled path selection
+# --------------------------------------------------------------------------
+
+def resolve_vmem_budget(vmem_budget_bytes=None) -> int:
+    """The VMEM byte budget the value table must live within: an explicit
+    argument wins, else the ``REPRO_VMEM_BUDGET`` env var (CI forces it
+    tiny to route interpret-mode runs through the tiled path), else
+    ``DEFAULT_VMEM_BUDGET_BYTES``."""
+    if vmem_budget_bytes is not None:
+        return int(vmem_budget_bytes)
+    env = os.environ.get(VMEM_BUDGET_ENV)
+    if env:
+        return int(env)
+    return DEFAULT_VMEM_BUDGET_BYTES
+
+
+def select_kernel_path(num_slots: int, q_pad: int = 1,
+                       vmem_budget_bytes=None, *, path=None, vblk=None):
+    """Pick the fused kernel's residency strategy for a value table of
+    ``num_slots`` (x ``q_pad`` lanes) f32 slots.
+
+    Returns ``("pinned", None)`` when the whole padded table fits the
+    budget, else ``("tiled", vblk)`` with ``vblk`` the largest 128-multiple
+    slot-tile whose double buffer fits (floored at 128 — the smallest
+    legal tile — even if that overshoots a pathologically small budget).
+    ``path``/``vblk`` force the decision (differential tests pin both
+    sides; benchmarks pin the tile to keep DMA counts comparable).
+    """
+    budget = resolve_vmem_budget(vmem_budget_bytes)
+    v_pad = _round_up(num_slots, 128)
+    if path is None:
+        path = "pinned" if v_pad * q_pad * 4 <= budget else "tiled"
+    if path == "pinned":
+        return "pinned", None
+    if path != "tiled":
+        raise ValueError(f"unknown kernel path {path!r}")
+    if vblk is None:
+        vblk = max((budget // (2 * q_pad * 4)) // 128 * 128, 128)
+        vblk = min(vblk, v_pad)
+    if vblk % 128 or vblk <= 0:
+        raise ValueError(f"vblk must be a positive multiple of 128; "
+                         f"got {vblk}")
+    return "tiled", int(vblk)
+
+
+def _lane_pad(q: int, interpret: bool, lane_tile=None) -> int:
+    """Padded lane count: up to the 128-lane TPU tile when compiling;
+    under interpret mode a sublane multiple keeps CI cheap while still
+    exercising the masked-tail-lane machinery (the regression tests force
+    ``lane_tile=LANE_TILE`` to prove the full tile)."""
+    tile = lane_tile if lane_tile is not None else (
+        INTERPRET_LANE_TILE if interpret else LANE_TILE)
+    return _round_up(q, tile)
+
+
+# --------------------------------------------------------------------------
+# kernel bodies — pinned (full table in VMEM per cell)
+# --------------------------------------------------------------------------
+
+def _split_dbg(extras):
+    """Trailing kernel refs: (dbg?, *scratch) -> (dbg | None, scratch)."""
+    if len(extras) % 2:                  # dbg present: odd count
+        return extras[0], extras[1:]
+    return None, extras
+
+
+def _init_dbg(dbg_ref, i, j):
+    """Zero the [executed cells, issued DMAs] counters at the first cell
+    (the grid is iterated sequentially, row-major)."""
+    if dbg_ref is not None:
+        @pl.when((i == 0) & (j == 0))
+        def _dbg_init():
+            dbg_ref[0] = 0
+            dbg_ref[1] = 0
+
+
+def _bump_dbg(dbg_ref, dmas):
+    if dbg_ref is not None:
+        dbg_ref[0] += 1
+        dbg_ref[1] += dmas
+
+
 def _kernel(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
             ids_ref, src_ref, w_ref, mask_ref, gval_ref,
-            out_ref, *, relax_kind, kind):
+            out_ref, *extras, relax_kind, kind):
+    dbg_ref, _ = _split_dbg(extras)
     i = pl.program_id(0)  # segment block
     j = pl.program_id(1)  # edge chunk
 
     identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, i, j)
 
     @pl.when(j == 0)
     def _init():
@@ -116,26 +251,31 @@ def _kernel(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
         msg = jnp.where(mask_ref[...] > 0, msg,
                         jnp.asarray(identity, msg.dtype))
 
-        local = ids_ref[...] - seg0
-        cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
-        hit = local[:, None] == cols             # (EBLK, SBLK)
-        if kind == "sum":
-            # one-hot matmul -> MXU systolic reduction
-            contrib = jnp.dot(
-                hit.astype(msg.dtype).T, msg,
-                preferred_element_type=jnp.float32,
-            ).astype(out_ref.dtype)
-            out_ref[...] += contrib
-        else:
-            padded = jnp.where(hit, msg[:, None],
-                               jnp.asarray(identity, msg.dtype))
-            contrib = jnp.min(padded, axis=0)    # VPU reduction over edges
-            out_ref[...] = jnp.minimum(out_ref[...], contrib)
+        _seg_accumulate(out_ref, msg, ids_ref[...] - seg0, kind, identity)
+        _bump_dbg(dbg_ref, 0)        # pinned: no manual value-tile DMAs
+
+
+def _seg_accumulate(out_ref, msg, local, kind, identity):
+    """Accumulate (EBLK,) messages into the (SBLK,) out block."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
+    hit = local[:, None] == cols                 # (EBLK, SBLK)
+    if kind == "sum":
+        # one-hot matmul -> MXU systolic reduction
+        contrib = jnp.dot(
+            hit.astype(msg.dtype).T, msg,
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+        out_ref[...] += contrib
+    else:
+        padded = jnp.where(hit, msg[:, None],
+                           jnp.asarray(identity, msg.dtype))
+        contrib = jnp.min(padded, axis=0)        # VPU reduction over edges
+        out_ref[...] = jnp.minimum(out_ref[...], contrib)
 
 
 def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
                   ids_ref, src_ref, w_ref, mask_ref, unitw_ref, gval_ref,
-                  out_ref, *, relax_kind, kind):
+                  out_ref, *extras, relax_kind, kind):
     """Lane-batched kernel body: the value table carries a trailing query
     axis ``Q`` and every edge relaxes all lanes at once.  ``unitw_ref``
     (Q,) selects, per lane, whether 'add_w' reads the edge weight or the
@@ -143,10 +283,12 @@ def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
     launch serves a mixed BFS/SSSP batch with bit-identical per-lane math.
     The frontier chunk skip uses the OR across lanes (``chunk_act``): a
     grid cell is skipped only when its edge chunk is dead in EVERY lane."""
+    dbg_ref, _ = _split_dbg(extras)
     i = pl.program_id(0)  # segment block
     j = pl.program_id(1)  # edge chunk
 
     identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, i, j)
 
     @pl.when(j == 0)
     def _init():
@@ -160,44 +302,191 @@ def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
     def _compute():
         src = src_ref[...]                       # (EBLK,) int32
         src_val = jnp.take(gval_ref[...], src, axis=0)   # (EBLK, Q)
+        msg = _lane_msgs(relax_kind, src_val, w_ref[...], mask_ref[...],
+                         unitw_ref[...], identity)
+        _lane_accumulate(out_ref, msg, ids_ref[...] - seg0, kind, identity)
+        _bump_dbg(dbg_ref, 0)        # pinned: no manual value-tile DMAs
+
+
+def _lane_msgs(relax_kind, src_val, w, mask, unitw, identity):
+    """(EBLK, Q) relaxed + masked messages for the laned kernels."""
+    if relax_kind == "add_w":
+        w_eff = jnp.where(unitw[None, :] > 0,
+                          jnp.asarray(1.0, w.dtype), w[:, None])
+        msg = src_val + w_eff
+    else:                                        # 'mul_w'
+        msg = src_val * w[:, None]
+    return jnp.where(mask[:, None] > 0, msg,
+                     jnp.asarray(identity, msg.dtype))
+
+
+def _lane_accumulate(out_ref, msg, local, kind, identity):
+    """Accumulate (EBLK, Q) messages into the (SBLK, Q) out block."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
+    hit = local[:, None] == cols                 # (EBLK, SBLK)
+    if kind == "sum":
+        # one-hot matmul -> (SBLK, Q) MXU systolic reduction
+        contrib = jnp.dot(
+            hit.astype(msg.dtype).T, msg,
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+        out_ref[...] += contrib
+    else:
+        # statically unrolled per-lane loop: peak in-cell memory stays
+        # (EBLK, SBLK) regardless of Q — a broadcast hit[:, :, None]
+        # against msg would materialize an (EBLK, SBLK, Q) intermediate
+        # per grid cell, which cannot fit VMEM for real batch widths
+        contribs = []
+        for lq in range(msg.shape[1]):
+            padded = jnp.where(hit, msg[:, lq][:, None],
+                               jnp.asarray(identity, msg.dtype))
+            contribs.append(jnp.min(padded, axis=0))  # (SBLK,) VPU
+        contrib = jnp.stack(contribs, axis=-1)        # (SBLK, Q)
+        out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
+# --------------------------------------------------------------------------
+# kernel bodies — tiled (value table in HBM, per-cell double-buffered DMA)
+# --------------------------------------------------------------------------
+
+def _tile_loop(j, n, chunk_tiles_ref, gval_hbm, scratch, sem, vblk,
+               tile_fn):
+    """Double-buffered DMA loop over this chunk's ``n`` slot tiles: start
+    the warm-up fetch, then per tile overlap tile t+1's async copy with
+    tile t's compute (``tile_fn(slot, tile)`` reads ``scratch[slot]``).
+    Every started DMA is waited; the caller guards on ``n >= 1``.
+    ``gval_hbm`` may be (v_pad,) or (v_pad, Q) — the slice rank follows."""
+    laned = len(gval_hbm.shape) == 2
+
+    def get_dma(slot, t):
+        tile = chunk_tiles_ref[j, t]
+        rows = pl.ds(tile * vblk, vblk)
+        src = gval_hbm.at[rows, :] if laned else gval_hbm.at[rows]
+        return pltpu.make_async_copy(src, scratch.at[slot], sem.at[slot])
+
+    get_dma(0, 0).start()                        # warm-up fetch
+
+    def body(t, _):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < n)
+        def _prefetch():                         # overlap next tile's DMA
+            get_dma(jax.lax.rem(t + 1, 2), t + 1).start()
+
+        get_dma(slot, t).wait()
+        tile_fn(slot, chunk_tiles_ref[j, t])
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def _kernel_tiled(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
+                  chunk_ntiles_ref, chunk_tiles_ref,
+                  ids_ref, src_ref, w_ref, mask_ref, gval_hbm,
+                  out_ref, *extras, relax_kind, kind, vblk):
+    """Tiled cell: the value table stays in HBM; only the ``vblk``-wide
+    slot tiles listed for this edge chunk (``chunk_tiles`` — the tiles
+    its frontier-active sources live in) are async-copied into a
+    double-buffered VMEM scratch, tile t+1's DMA overlapping tile t's
+    relax+reduce.  Every edge contributes in exactly one tile (its
+    source's), so per-tile accumulation into the out block is exact."""
+    dbg_ref, (scratch, sem) = _split_dbg(extras)
+    i = pl.program_id(0)  # segment block
+    j = pl.program_id(1)  # edge chunk
+
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, i, j)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full((SBLK,), identity, out_ref.dtype)
+
+    seg0 = i * SBLK
+    intersects = (chunk_hi_ref[j] >= seg0) & (chunk_lo_ref[j] < seg0 + SBLK)
+    # a live chunk has >= 1 active source, hence >= 1 tile to fetch
+    live = intersects & (chunk_act_ref[j] > 0)
+
+    @pl.when(live)
+    def _compute():
+        n = chunk_ntiles_ref[j]
+        src = src_ref[...]                       # (EBLK,) int32
         w = w_ref[...]
-        if relax_kind == "add_w":
-            w_eff = jnp.where(unitw_ref[...][None, :] > 0,
-                              jnp.asarray(1.0, w.dtype), w[:, None])
-            msg = src_val + w_eff
-        else:                                    # 'mul_w'
-            msg = src_val * w[:, None]
-        msg = jnp.where(mask_ref[...][:, None] > 0, msg,
-                        jnp.asarray(identity, msg.dtype))
-
+        msk = mask_ref[...]
         local = ids_ref[...] - seg0
-        cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
-        hit = local[:, None] == cols             # (EBLK, SBLK)
-        if kind == "sum":
-            # one-hot matmul -> (SBLK, Q) MXU systolic reduction
-            contrib = jnp.dot(
-                hit.astype(msg.dtype).T, msg,
-                preferred_element_type=jnp.float32,
-            ).astype(out_ref.dtype)
-            out_ref[...] += contrib
-        else:
-            # statically unrolled per-lane loop: peak in-cell memory stays
-            # (EBLK, SBLK) regardless of Q — a broadcast hit[:, :, None]
-            # against msg would materialize an (EBLK, SBLK, Q) intermediate
-            # per grid cell, which cannot fit VMEM for real batch widths
-            contribs = []
-            for lq in range(msg.shape[1]):
-                padded = jnp.where(hit, msg[:, lq][:, None],
-                                   jnp.asarray(identity, msg.dtype))
-                contribs.append(jnp.min(padded, axis=0))  # (SBLK,) VPU
-            contrib = jnp.stack(contribs, axis=-1)        # (SBLK, Q)
-            out_ref[...] = jnp.minimum(out_ref[...], contrib)
 
+        def tile_fn(slot, tile):
+            loc = src - tile * vblk
+            in_tile = (loc >= 0) & (loc < vblk)
+            # sources outside this tile read slot 0 and are masked off;
+            # frontier-inactive sources *inside* the tile read the
+            # pre-masked absorbing identity, exactly as on the pinned path
+            sval = jnp.take(scratch[slot], jnp.where(in_tile, loc, 0))
+            msg = _relax(relax_kind, sval, w)
+            msg = jnp.where((msk > 0) & in_tile, msg,
+                            jnp.asarray(identity, msg.dtype))
+            _seg_accumulate(out_ref, msg, local, kind, identity)
+
+        _tile_loop(j, n, chunk_tiles_ref, gval_hbm, scratch, sem, vblk,
+                   tile_fn)
+        _bump_dbg(dbg_ref, n)
+
+
+def _kernel_tiled_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
+                        chunk_ntiles_ref, chunk_tiles_ref,
+                        ids_ref, src_ref, w_ref, mask_ref, unitw_ref,
+                        gval_hbm, out_ref, *extras, relax_kind, kind, vblk):
+    """Laned tiled cell: (vblk, Q) value tiles ride the double-buffered
+    DMA; tile lists use the OR-across-lanes frontier (a tile is fetched
+    iff ANY lane has an active source in it — the gather is vectorized
+    over lanes, and inactive lanes read the pre-masked identity)."""
+    dbg_ref, (scratch, sem) = _split_dbg(extras)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, i, j)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    seg0 = i * SBLK
+    intersects = (chunk_hi_ref[j] >= seg0) & (chunk_lo_ref[j] < seg0 + SBLK)
+    live = intersects & (chunk_act_ref[j] > 0)
+
+    @pl.when(live)
+    def _compute():
+        n = chunk_ntiles_ref[j]
+        src = src_ref[...]
+        w = w_ref[...]
+        msk = mask_ref[...]
+        unitw = unitw_ref[...]
+        local = ids_ref[...] - seg0
+
+        def tile_fn(slot, tile):
+            loc = src - tile * vblk
+            in_tile = (loc >= 0) & (loc < vblk)
+            sval = jnp.take(scratch[slot], jnp.where(in_tile, loc, 0),
+                            axis=0)              # (EBLK, Q)
+            msg = _lane_msgs(relax_kind, sval, w,
+                             msk * in_tile.astype(msk.dtype), unitw,
+                             identity)
+            _lane_accumulate(out_ref, msg, local, kind, identity)
+
+        _tile_loop(j, n, chunk_tiles_ref, gval_hbm, scratch, sem, vblk,
+                   tile_fn)
+        _bump_dbg(dbg_ref, n)
+
+
+# --------------------------------------------------------------------------
+# scalar-prefetch table builders
+# --------------------------------------------------------------------------
 
 def _chunk_tables(ids_p, src_p, mask_i, gchg_i):
     """Scalar-prefetch tables: per-chunk [lo, hi] id range + frontier bit.
     Also returns the total active-edge count (the Fig-6 message counter) —
-    a free reduction of the gather the bitmap needs anyway."""
+    a free reduction of the gather the bitmap needs anyway — and the
+    per-edge active rows the tiled path's tile lists are built from."""
     e_pad = ids_p.shape[0]
     idc = ids_p.reshape(e_pad // EBLK, EBLK)
     valid = mask_i.reshape(e_pad // EBLK, EBLK) > 0
@@ -206,87 +495,50 @@ def _chunk_tables(ids_p, src_p, mask_i, gchg_i):
     # "any active source" bitmap: gchg gather fused into a per-chunk any()
     src_act = jnp.where(valid, jnp.take(gchg_i, src_p.reshape(valid.shape)), 0)
     chunk_act = src_act.max(axis=1).astype(jnp.int32)
-    return chunk_lo, chunk_hi, chunk_act, src_act.sum()
+    return chunk_lo, chunk_hi, chunk_act, src_act.sum(), src_act
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
-                     "with_count"))
-def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
-                              edge_dst, num_segments: int, relax_kind: str,
-                              kind: str, interpret: bool = True,
-                              with_count: bool = False):
-    """Fused gather/relax/mask/segment-reduce.
+def _chunk_tile_tables(src_p, src_act, v_pad: int, vblk: int):
+    """Per-chunk slot-tile lists for the tiled kernels.
 
-    gval: (V,) f32 vertex (replica-slot) values; gchg: (V,) bool changed
-    flags (the frontier); edge_src/edge_dst: (E,) int32 into [0, V) /
-    [0, num_segments); edge_w: (E,) f32; edge_mask: (E,) bool (False on
-    padding). Returns the (num_segments,) inbox partial — empty segments
-    hold the combine identity — or, ``with_count=True``, a (partial,
-    active-edge count) pair; the count is a byproduct of the frontier
-    bitmap gather, not an extra pass. Edges should be sorted by
-    ``edge_dst`` for the range skip to bite; correctness never depends
-    on the sort.
+    ``src_act``: (n_chunks, EBLK) nonzero where the edge is valid AND its
+    source is frontier-active (OR across lanes when laned).  Returns
+    ((n_chunks,) tile counts, (n_chunks, t_max) tile indices packed left
+    in ascending order; entries past the count are arbitrary in-range
+    tiles and never fetched — the kernel's fori_loop stops at the count).
+
+    Built by an in-chunk sort + adjacent-dedupe, so the work is
+    O(E log EBLK) and *independent of the tile count* — a dense
+    (n_chunks, n_tiles) hit matrix would be quadratic-ish at exactly the
+    paper-scale (R22+: ~131k chunks x ~33k tiles) regime this path
+    exists to serve.
     """
-    assert relax_kind in RELAX_KINDS, relax_kind
-    if (relax_kind, kind) not in ABSORBING_PAIRS:
-        raise ValueError(
-            f"non-absorbing relax/combine pairing {(relax_kind, kind)}: "
-            "frontier masking requires relax(identity, w) == identity "
-            f"(supported: {sorted(ABSORBING_PAIRS)})")
-    e = edge_src.shape[0]
-    e_pad = -(-e // EBLK) * EBLK
-    s_pad = -(-num_segments // SBLK) * SBLK
-    v = gval.shape[0]
-    v_pad = -(-max(v, 1) // 128) * 128
-    identity = jnp.inf if kind == "min" else 0.0
-
-    # frontier masking folded into the value table (absorbing identity):
-    # relax(identity, w) == identity for all supported semirings, so an
-    # inactive source can never contribute — bit-identical to the oracle's
-    # explicit where(active, ...) mask, one fewer VMEM gather per cell.
-    gval_m = jnp.where(gchg, gval, jnp.asarray(identity, gval.dtype))
-    gval_p = jnp.full((v_pad,), identity, gval.dtype).at[:v].set(gval_m)
-    gchg_p = jnp.zeros((v_pad,), jnp.int32).at[:v].set(
-        gchg.astype(jnp.int32))
-    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_dst.astype(jnp.int32))
-    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_src.astype(jnp.int32))
-    w_p = jnp.zeros((e_pad,), edge_w.dtype).at[:e].set(edge_w)
-    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_mask.astype(jnp.int32))
-
-    chunk_lo, chunk_hi, chunk_act, msg_count = _chunk_tables(
-        ids_p, src_p, mask_i, gchg_p)
-
-    grid = (s_pad // SBLK, e_pad // EBLK)
-    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
-    full_spec = pl.BlockSpec((v_pad,), lambda i, j, lo, hi, act: (0,))
-    out = pl.pallas_call(
-        functools.partial(_kernel, relax_kind=relax_kind, kind=kind),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
-                      full_spec],
-            out_specs=pl.BlockSpec((SBLK,), lambda i, j, lo, hi, act: (i,)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((s_pad,), gval.dtype),
-        interpret=interpret,
-    )(chunk_lo, chunk_hi, chunk_act,
-      ids_p, src_p, w_p, mask_i, gval_p)
-    if with_count:
-        return out[:num_segments], msg_count
-    return out[:num_segments]
+    n_chunks = src_act.shape[0]
+    n_tiles = v_pad // vblk
+    t_max = min(n_tiles, EBLK)   # a chunk of EBLK edges touches <= EBLK tiles
+    tile_of = src_p.reshape(n_chunks, EBLK) // vblk
+    # inactive edges carry the n_tiles sentinel so they sort past every
+    # real tile; first-occurrence flags then mark each distinct live tile
+    t = jnp.sort(jnp.where(src_act > 0, tile_of, n_tiles), axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((n_chunks, 1), bool), t[:, 1:] != t[:, :-1]], axis=1)
+    is_tile = first & (t < n_tiles)
+    ntiles = is_tile.sum(axis=1).astype(jnp.int32)
+    # pack distinct tiles left (stable: ascending slot order -> the
+    # kernel's tile fetches walk HBM sequentially)
+    order = jnp.argsort(~is_tile, axis=1, stable=True)[:, :t_max]
+    tiles = jnp.take_along_axis(t, order, axis=1)
+    # slots past the count may hold the sentinel; clamp into range
+    # (never fetched, but keeps any address arithmetic in bounds)
+    return ntiles, jnp.minimum(tiles, n_tiles - 1).astype(jnp.int32)
 
 
 def _chunk_tables_lanes(ids_p, src_p, mask_i, gchg_iq):
     """Laned scalar-prefetch tables. ``gchg_iq``: (v_pad, Q) int32 per-lane
     frontier. The chunk-skip bit is the OR across lanes — a chunk is dead
     only when no lane has an active source in it; the per-lane active-edge
-    counts (the Fig-6 message counters, one per query) ride along."""
+    counts (the Fig-6 message counters, one per query) ride along, as do
+    the OR-across-lanes per-edge active rows for the tiled tile lists."""
     e_pad = ids_p.shape[0]
     idc = ids_p.reshape(e_pad // EBLK, EBLK)
     valid = mask_i.reshape(e_pad // EBLK, EBLK) > 0
@@ -296,18 +548,319 @@ def _chunk_tables_lanes(ids_p, src_p, mask_i, gchg_iq):
         valid[..., None],
         jnp.take(gchg_iq, src_p.reshape(valid.shape), axis=0), 0)
     chunk_act = src_act.max(axis=(1, 2)).astype(jnp.int32)
-    return chunk_lo, chunk_hi, chunk_act, src_act.sum(axis=(0, 1))
+    return (chunk_lo, chunk_hi, chunk_act, src_act.sum(axis=(0, 1)),
+            src_act.max(axis=2))
+
+
+# --------------------------------------------------------------------------
+# single-query launches
+# --------------------------------------------------------------------------
+
+def _pad_edges(edge_src, edge_w, edge_mask, edge_dst, e_pad: int):
+    e = edge_src.shape[0]
+    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_dst.astype(jnp.int32))
+    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_src.astype(jnp.int32))
+    w_p = jnp.zeros((e_pad,), edge_w.dtype).at[:e].set(edge_w)
+    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_mask.astype(jnp.int32))
+    return ids_p, src_p, w_p, mask_i
+
+
+def _masked_value_tables(gval, gchg, identity, v_pad: int, q_pad=None):
+    """Frontier masking folded into the value table (absorbing identity):
+    relax(identity, w) == identity for all supported semirings, so an
+    inactive source can never contribute — bit-identical to the oracle's
+    explicit where(active, ...) mask, one fewer in-cell gather.  Pads
+    slots (and, when ``q_pad`` is given, lanes — tail lanes stay
+    frontier-dead identity columns) to the launch shape."""
+    gval_m = jnp.where(gchg, gval, jnp.asarray(identity, gval.dtype))
+    if q_pad is None:
+        v = gval.shape[0]
+        gval_p = jnp.full((v_pad,), identity, gval.dtype).at[:v].set(gval_m)
+        gchg_p = jnp.zeros((v_pad,), jnp.int32).at[:v].set(
+            gchg.astype(jnp.int32))
+    else:
+        v, q = gval.shape
+        gval_p = jnp.full((v_pad, q_pad), identity, gval.dtype) \
+            .at[:v, :q].set(gval_m)
+        gchg_p = jnp.zeros((v_pad, q_pad), jnp.int32).at[:v, :q].set(
+            gchg.astype(jnp.int32))
+    return gval_p, gchg_p
+
+
+def _pack_result(raw, slicer, msg_count, with_count, with_debug):
+    """Launch epilogue shared by all four wrappers: split off the debug
+    counters, strip the padding (``slicer``), then return out /
+    (out, count) / (out, dbg) / (out, count, dbg)."""
+    out, dbg = raw if with_debug else (raw, None)
+    res = (slicer(out),)
+    if with_count:
+        res += (msg_count,)
+    if with_debug:
+        res += (dbg,)
+    return res[0] if len(res) == 1 else res
+
+
+_DBG_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
+_DBG_SHAPE = jax.ShapeDtypeStruct((2,), jnp.int32)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_segments", "relax_kind", "kind", "interpret",
-                     "with_count"))
+                     "with_count", "with_debug"))
+def _fused_pinned(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                  num_segments, relax_kind, kind, interpret, with_count,
+                  with_debug):
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(gval.shape[0], 128)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+
+    chunk_lo, chunk_hi, chunk_act, msg_count, _ = _chunk_tables(
+        ids_p, src_p, mask_i, gchg_p)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
+    full_spec = pl.BlockSpec((v_pad,), lambda i, j, lo, hi, act: (0,))
+    out_spec = pl.BlockSpec((SBLK,), lambda i, j, lo, hi, act: (i,))
+    out_shape = jax.ShapeDtypeStruct((s_pad,), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel, relax_kind=relax_kind, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      full_spec],
+            out_specs=out_spec,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act,
+      ids_p, src_p, w_p, mask_i, gval_p)
+    return _pack_result(out, lambda o: o[:num_segments], msg_count,
+                        with_count, with_debug)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "vblk"))
+def _fused_tiled(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                 num_segments, relax_kind, kind, interpret, with_count,
+                 with_debug, vblk):
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(gval.shape[0], vblk)   # uniform vblk-wide tiles
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+
+    chunk_lo, chunk_hi, chunk_act, msg_count, src_act = _chunk_tables(
+        ids_p, src_p, mask_i, gchg_p)
+    chunk_ntiles, chunk_tiles = _chunk_tile_tables(
+        src_p, src_act, v_pad, vblk)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, *sc: (j,))
+    out_spec = pl.BlockSpec((SBLK,), lambda i, j, *sc: (i,))
+    out_shape = jax.ShapeDtypeStruct((s_pad,), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_tiled, relax_kind=relax_kind, kind=kind,
+                          vblk=vblk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=out_spec,
+            scratch_shapes=[pltpu.VMEM((2, vblk), gval.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act, chunk_ntiles, chunk_tiles,
+      ids_p, src_p, w_p, mask_i, gval_p)
+    return _pack_result(out, lambda o: o[:num_segments], msg_count,
+                        with_count, with_debug)
+
+
+def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
+                              edge_dst, num_segments: int, relax_kind: str,
+                              kind: str, interpret: bool = True,
+                              with_count: bool = False,
+                              vmem_budget_bytes=None, path=None, vblk=None,
+                              with_debug: bool = False):
+    """Fused gather/relax/mask/segment-reduce.
+
+    gval: (V,) f32 vertex (replica-slot) values; gchg: (V,) bool changed
+    flags (the frontier); edge_src/edge_dst: (E,) int32 into [0, V) /
+    [0, num_segments); edge_w: (E,) f32; edge_mask: (E,) bool (False on
+    padding). Returns the (num_segments,) inbox partial — empty segments
+    hold the combine identity.  ``with_count=True`` appends the
+    active-edge count (a byproduct of the frontier bitmap gather, not an
+    extra pass); ``with_debug=True`` appends the kernel-side (2,) int32
+    [executed grid cells, issued value-tile DMAs] counters that
+    ``fused_grid_cells`` mirrors on the host.  Edges should be sorted by
+    ``edge_dst`` for the range skip to bite; correctness never depends
+    on the sort.
+
+    Residency is selected by ``select_kernel_path`` from the slot count
+    against ``vmem_budget_bytes`` (pinned when the table fits, else
+    HBM-tiled with per-cell double-buffered DMA); ``path``/``vblk``
+    force it.  Both paths are bit-identical for min semirings.
+    """
+    _check_pair(relax_kind, kind)
+    path, vblk = select_kernel_path(
+        gval.shape[0], 1, vmem_budget_bytes, path=path, vblk=vblk)
+    args = (gval, gchg, edge_src, edge_w, edge_mask, edge_dst)
+    if path == "pinned":
+        return _fused_pinned(*args, num_segments=num_segments,
+                             relax_kind=relax_kind, kind=kind,
+                             interpret=interpret, with_count=with_count,
+                             with_debug=with_debug)
+    return _fused_tiled(*args, num_segments=num_segments,
+                        relax_kind=relax_kind, kind=kind,
+                        interpret=interpret, with_count=with_count,
+                        with_debug=with_debug, vblk=vblk)
+
+
+# --------------------------------------------------------------------------
+# lane-batched launches
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "q_pad"))
+def _fused_lanes_pinned(gval, gchg, lane_unitw, edge_src, edge_w, edge_mask,
+                        edge_dst, num_segments, relax_kind, kind, interpret,
+                        with_count, with_debug, q_pad):
+    v, q = gval.shape
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(v, 128)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    # lane padding: tail lanes hold the identity with an all-False
+    # frontier, so they relax to the identity everywhere and are sliced
+    # off the output — masked tail lanes, bit-identical to no padding
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad,
+                                          q_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    unitw = jnp.zeros((q_pad,), jnp.int32).at[:q].set(
+        jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+
+    chunk_lo, chunk_hi, chunk_act, msg_counts, _ = _chunk_tables_lanes(
+        ids_p, src_p, mask_i, gchg_p)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
+    lane_spec = pl.BlockSpec((q_pad,), lambda i, j, lo, hi, act: (0,))
+    full_spec = pl.BlockSpec((v_pad, q_pad),
+                             lambda i, j, lo, hi, act: (0, 0))
+    out_spec = pl.BlockSpec((SBLK, q_pad), lambda i, j, lo, hi, act: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((s_pad, q_pad), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_lanes, relax_kind=relax_kind, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      lane_spec, full_spec],
+            out_specs=out_spec,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act,
+      ids_p, src_p, w_p, mask_i, unitw, gval_p)
+    return _pack_result(out, lambda o: o[:num_segments, :q],
+                        msg_counts[:q], with_count, with_debug)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "q_pad", "vblk"))
+def _fused_lanes_tiled(gval, gchg, lane_unitw, edge_src, edge_w, edge_mask,
+                       edge_dst, num_segments, relax_kind, kind, interpret,
+                       with_count, with_debug, q_pad, vblk):
+    v, q = gval.shape
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(v, vblk)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad,
+                                          q_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    unitw = jnp.zeros((q_pad,), jnp.int32).at[:q].set(
+        jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+
+    chunk_lo, chunk_hi, chunk_act, msg_counts, src_act = \
+        _chunk_tables_lanes(ids_p, src_p, mask_i, gchg_p)
+    chunk_ntiles, chunk_tiles = _chunk_tile_tables(
+        src_p, src_act, v_pad, vblk)
+
+    grid = (s_pad // SBLK, e_pad // EBLK)
+    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, *sc: (j,))
+    lane_spec = pl.BlockSpec((q_pad,), lambda i, j, *sc: (0,))
+    out_spec = pl.BlockSpec((SBLK, q_pad), lambda i, j, *sc: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((s_pad, q_pad), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_tiled_lanes, relax_kind=relax_kind,
+                          kind=kind, vblk=vblk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      lane_spec, pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=out_spec,
+            scratch_shapes=[pltpu.VMEM((2, vblk, q_pad), gval.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(chunk_lo, chunk_hi, chunk_act, chunk_ntiles, chunk_tiles,
+      ids_p, src_p, w_p, mask_i, unitw, gval_p)
+    return _pack_result(out, lambda o: o[:num_segments, :q],
+                        msg_counts[:q], with_count, with_debug)
+
+
 def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
                                     edge_mask, edge_dst, num_segments: int,
                                     relax_kind: str, kind: str,
                                     interpret: bool = True,
-                                    with_count: bool = False):
+                                    with_count: bool = False,
+                                    vmem_budget_bytes=None, path=None,
+                                    vblk=None, lane_tile=None,
+                                    with_debug: bool = False):
     """Lane-batched fused gather/relax/mask/segment-reduce (ISSUE 2).
 
     The single-query kernel grown a trailing query-lane axis ``Q``:
@@ -323,65 +876,40 @@ def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
     the chunk-skip bitmap is the OR across lanes, so a grid cell is
     skipped only when its edge chunk is frontier-dead in *every* lane.
 
-    Same VMEM scale constraint as the single-query kernel, times Q: the
-    whole (v_pad, Q) table rides into every grid cell.  The trailing lane
-    axis is not padded to the 128-lane TPU tile — fine under interpret
-    mode (this container); real-TPU lane padding is a ROADMAP open item.
+    The lane axis is padded up to the TPU lane tile (``LANE_TILE=128``
+    when compiling; a sublane multiple under interpret mode — force with
+    ``lane_tile=``): tail lanes carry the identity with an all-False
+    frontier, so they are masked out of every reduction and sliced off
+    the output — a padded batch is bit-identical to the unpadded math.
+    Residency (pinned vs HBM-tiled with per-cell double-buffered DMA of
+    (vblk, Q) value tiles) follows ``select_kernel_path`` on the
+    lane-padded table, exactly as in the single-query kernel.
     """
     assert relax_kind in ("add_w", "mul_w"), relax_kind
-    if (relax_kind, kind) not in ABSORBING_PAIRS:
-        raise ValueError(
-            f"non-absorbing relax/combine pairing {(relax_kind, kind)}: "
-            "frontier masking requires relax(identity, w) == identity "
-            f"(supported: {sorted(ABSORBING_PAIRS)})")
+    _check_pair(relax_kind, kind)
     v, q = gval.shape
-    e = edge_src.shape[0]
-    e_pad = -(-e // EBLK) * EBLK
-    s_pad = -(-num_segments // SBLK) * SBLK
-    v_pad = -(-max(v, 1) // 128) * 128
-    identity = jnp.inf if kind == "min" else 0.0
+    q_pad = _lane_pad(q, interpret, lane_tile)
+    path, vblk = select_kernel_path(
+        v, q_pad, vmem_budget_bytes, path=path, vblk=vblk)
+    args = (gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst)
+    if path == "pinned":
+        return _fused_lanes_pinned(
+            *args, num_segments=num_segments, relax_kind=relax_kind,
+            kind=kind, interpret=interpret, with_count=with_count,
+            with_debug=with_debug, q_pad=q_pad)
+    return _fused_lanes_tiled(
+        *args, num_segments=num_segments, relax_kind=relax_kind, kind=kind,
+        interpret=interpret, with_count=with_count, with_debug=with_debug,
+        q_pad=q_pad, vblk=vblk)
 
-    gval_m = jnp.where(gchg, gval, jnp.asarray(identity, gval.dtype))
-    gval_p = jnp.full((v_pad, q), identity, gval.dtype).at[:v].set(gval_m)
-    gchg_p = jnp.zeros((v_pad, q), jnp.int32).at[:v].set(
-        gchg.astype(jnp.int32))
-    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_dst.astype(jnp.int32))
-    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_src.astype(jnp.int32))
-    w_p = jnp.zeros((e_pad,), edge_w.dtype).at[:e].set(edge_w)
-    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
-        edge_mask.astype(jnp.int32))
-    unitw = jnp.asarray(lane_unitw, jnp.int32).reshape(q)
 
-    chunk_lo, chunk_hi, chunk_act, msg_counts = _chunk_tables_lanes(
-        ids_p, src_p, mask_i, gchg_p)
-
-    grid = (s_pad // SBLK, e_pad // EBLK)
-    edge_spec = pl.BlockSpec((EBLK,), lambda i, j, lo, hi, act: (j,))
-    lane_spec = pl.BlockSpec((q,), lambda i, j, lo, hi, act: (0,))
-    full_spec = pl.BlockSpec((v_pad, q), lambda i, j, lo, hi, act: (0, 0))
-    out = pl.pallas_call(
-        functools.partial(_kernel_lanes, relax_kind=relax_kind, kind=kind),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
-                      lane_spec, full_spec],
-            out_specs=pl.BlockSpec((SBLK, q),
-                                   lambda i, j, lo, hi, act: (i, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((s_pad, q), gval.dtype),
-        interpret=interpret,
-    )(chunk_lo, chunk_hi, chunk_act,
-      ids_p, src_p, w_p, mask_i, unitw, gval_p)
-    if with_count:
-        return out[:num_segments], msg_counts
-    return out[:num_segments]
-
+# --------------------------------------------------------------------------
+# host-side launch mirror (grid-cell and DMA accounting)
+# --------------------------------------------------------------------------
 
 def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
-                     num_segments: int) -> dict:
+                     num_segments: int, vblk: int | None = None,
+                     lane_width: int = 1) -> dict:
     """Host-side mirror of both launch shapes for the dense exchange.
 
     ``fused_live``/``total_fused`` mirror THIS kernel's single flattened
@@ -391,7 +919,18 @@ def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
     rule is positional (every in-shard slot counts, so engine padding
     edges carrying id 0 widen chunk ranges) and which has no frontier
     skip.  Edge arrays are (S, E_max) host arrays — or 1-D for a single
-    flat launch; ``gchg`` is the (V,) frontier.
+    flat launch; ``gchg`` is the (V,) frontier (OR across lanes when
+    mirroring a laned launch).
+
+    With ``vblk`` the dict also mirrors the tiled path's DMA plan:
+    ``chunk_ntiles`` (per edge chunk, the number of distinct vblk-wide
+    slot tiles its frontier-active sources touch), ``fused_tile_dmas``
+    (tile fetches summed over live cells — every live (i, j) cell
+    fetches its chunk's tiles), and ``dma_bytes`` (those fetches *
+    vblk * lane_width * 4 bytes).  The cell/DMA *counts* must match the
+    kernels' ``with_debug`` counters exactly; for the byte column of a
+    laned launch, pass the lane-PADDED width (``_lane_pad`` of Q — the
+    kernel DMAs (vblk, q_pad) tiles), not the logical lane count.
     """
     edge_dst = np.atleast_2d(np.asarray(edge_dst))
     edge_mask = np.atleast_2d(np.asarray(edge_mask))
@@ -410,11 +949,14 @@ def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
     msk[:e] = edge_mask.reshape(-1)
     act = np.zeros(e_pad, bool)
     act[:e] = edge_mask.reshape(-1) & gchg[edge_src.reshape(-1)]
+    srcs = np.zeros(e_pad, np.int64)
+    srcs[:e] = edge_src.reshape(-1)
     idc, mkc, acc = (x.reshape(e_pad // EBLK, EBLK) for x in (ids, msk, act))
     lo = np.where(mkc, idc, np.iinfo(np.int64).max).min(axis=1)
     hi = np.where(mkc, idc, -1).max(axis=1)
     intersects = (hi[None, :] >= seg0) & (lo[None, :] < seg0 + SBLK)
-    fused_live = int((intersects & acc.any(axis=1)[None, :]).sum())
+    live_mat = intersects & acc.any(axis=1)[None, :]       # (n_i, n_j)
+    fused_live = int(live_mat.sum())
     total_fused = int(intersects.size)
 
     # unfused: S per-shard launches, positional validity, range skip only
@@ -429,9 +971,20 @@ def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
     hi2 = np.where(v2, idc2, -1).max(axis=-1)                # (S, n_j)
     inter2 = (hi2[:, None, :] >= seg0[None, :, :]) \
         & (lo2[:, None, :] < seg0[None, :, :] + SBLK)        # (S, n_i, n_j)
-    return {
+    out = {
         "total_fused": total_fused,
         "total_unfused": int(inter2.size),
         "range_live": int(inter2.sum()),
         "fused_live": fused_live,
     }
+    if vblk is not None:
+        # tiled-path DMA mirror: distinct source tiles per chunk among
+        # frontier-active valid edges, fetched once per live (i, j) cell
+        tile_of = (srcs // vblk).reshape(e_pad // EBLK, EBLK)
+        ntiles = np.array([len(np.unique(t[a])) for t, a in
+                           zip(tile_of, acc)], np.int64)
+        tile_dmas = int((live_mat * ntiles[None, :]).sum())
+        out["chunk_ntiles"] = ntiles.tolist()
+        out["fused_tile_dmas"] = tile_dmas
+        out["dma_bytes"] = tile_dmas * int(vblk) * int(lane_width) * 4
+    return out

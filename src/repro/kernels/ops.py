@@ -26,24 +26,34 @@ def segment_combine(data, segment_ids, num_segments: int, kind: str):
 
 
 def fused_relax_reduce(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
-                       num_segments: int, relax_kind: str, kind: str):
+                       num_segments: int, relax_kind: str, kind: str,
+                       vmem_budget_bytes=None):
     """Fused frontier gather + semiring relax + mask + segment reduction —
-    the whole per-round relax phase in one VMEM-resident Pallas pass.
-    Returns ((num_segments,) partial, active-edge message count)."""
+    the whole per-round relax phase in one Pallas pass.  Returns
+    ((num_segments,) partial, active-edge message count).  The value
+    table rides pinned in VMEM when it fits ``vmem_budget_bytes`` (None:
+    REPRO_VMEM_BUDGET env var, then the default budget), else HBM-tiled
+    with per-cell double-buffered async DMA — same results either way
+    (bit-identical for min semirings)."""
     return fused_relax_reduce_pallas(
         gval, gchg, edge_src, edge_w, edge_mask, edge_dst, num_segments,
-        relax_kind, kind, interpret=_interpret(), with_count=True
+        relax_kind, kind, interpret=_interpret(), with_count=True,
+        vmem_budget_bytes=vmem_budget_bytes
     )
 
 
 def fused_relax_reduce_lanes(gval, gchg, lane_unitw, edge_src, edge_w,
                              edge_mask, edge_dst, num_segments: int,
-                             relax_kind: str, kind: str):
+                             relax_kind: str, kind: str,
+                             vmem_budget_bytes=None):
     """Lane-batched fused relax phase: per-lane (V, Q) values/frontiers
     over one shared edge structure, one launch for all queries.  Returns
-    ((num_segments, Q) partial, (Q,) per-lane active-edge counts)."""
+    ((num_segments, Q) partial, (Q,) per-lane active-edge counts).  The
+    lane axis is padded to the TPU lane tile (masked tail lanes) and the
+    lane-padded table's residency follows ``vmem_budget_bytes`` as in
+    ``fused_relax_reduce``."""
     return fused_relax_reduce_lanes_pallas(
         gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst,
         num_segments, relax_kind, kind, interpret=_interpret(),
-        with_count=True
+        with_count=True, vmem_budget_bytes=vmem_budget_bytes
     )

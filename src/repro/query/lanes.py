@@ -30,6 +30,14 @@ Both exchanges serve the lane axis: ``exchange='dense'`` ships the full
 (target, distinct-slot) targeted tables with Q riding as a trailing dim —
 converged lanes contribute the absorbing identity and add no message
 volume (``LaneStats.exchanged`` accounts the per-lane difference).
+
+Under ``use_pallas`` the laned fused kernel pads the lane axis to the
+TPU lane tile (masked tail lanes) and honors the same VMEM budget as
+the unlaned engine (``EngineConfig.vmem_budget_bytes``): when the
+(S*R_max, Q) lane table outgrows the budget — which happens Q× sooner
+than for a single query — the relax phase tiles it out of HBM with
+per-cell double-buffered DMA of (vblk, Q) value tiles, bit-identically
+for the min pool (``tests/test_fused_tiled.py``).
 """
 from __future__ import annotations
 

@@ -22,6 +22,12 @@ inbox ``all_to_all`` — dense or §Perf compact targeted per
 ``EngineConfig.exchange``), so one serving loop batches queries across
 devices.  Lane state lives sharded on the mesh; injection writes a
 column of the distributed table between rounds.
+
+The ``EngineConfig`` handed to the server also governs the fused
+kernel's value-table residency (``vmem_budget_bytes``): a served
+partition whose lane table exceeds the VMEM budget runs every pool
+round through the HBM-tiled DMA kernel with identical serving
+semantics — the continuous-batching loop never needs to know.
 """
 from __future__ import annotations
 

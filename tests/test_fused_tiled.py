@@ -1,0 +1,368 @@
+"""Differential test harness for the VMEM-tiled fused kernel (ISSUE 4).
+
+The tiled path DMAs ``vblk``-wide slot tiles of the HBM-resident value
+table into a double-buffered VMEM scratch per grid cell; irregular
+frontiers make that tiling correctness-subtle (iPregel), so every case
+here is driven through all three implementations — **tiled**, **pinned**
+(the classic full-table-in-VMEM launch), and the jnp oracle
+``ref.fused_relax_reduce_ref`` — and min-semiring results must agree
+**bit-identically** (sum semirings agree up to float reassociation of
+the per-tile partials).  Coverage: skewed degree distributions, empty
+frontiers, single-vertex tiles, slot counts straddling the ``vblk``
+boundary, stacked + sharded engines, and lane counts Q ∈ {1, 3, 128};
+hypothesis drives randomized graphs on top when available.
+
+Also covers the budget-based path selection (``select_kernel_path``,
+``REPRO_VMEM_BUDGET``) and the 128-lane-tile padding regression (a Q=5
+batch padded to the full TPU lane tile is bit-identical to unpadded jnp
+lanes).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.apps import bfs, sssp, pagerank
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators, reference
+from repro.kernels import fused_relax_reduce as FR
+from repro.kernels.fused_relax_reduce import (
+    EBLK, LANE_TILE, SBLK, fused_grid_cells, fused_relax_reduce_pallas,
+    fused_relax_reduce_lanes_pallas, resolve_vmem_budget, select_kernel_path,
+)
+from repro.kernels.ref import (
+    fused_relax_reduce_lanes_ref, fused_relax_reduce_ref,
+)
+from repro.query.lanes import init_lane_values, run_stacked_lanes
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+TINY_BUDGET = 256        # bytes: forces the tiled path for every table
+
+
+def _skewed_case(v, e, nseg, frontier_frac, seed, q=None):
+    """Random case with a Zipf-skewed source distribution (the paper's
+    R22+ RMAT regime in miniature: a few hub sources own most edges, so
+    tile lists are non-uniform across chunks)."""
+    rng = np.random.default_rng(seed)
+    shape = (v,) if q is None else (v, q)
+    gval = rng.uniform(0.0, 10.0, shape).astype(np.float32)
+    gchg = rng.random(shape) < frontier_frac
+    ranks = rng.permutation(v)[rng.integers(0, max(v // 8, 1), e)]
+    src = ranks.astype(np.int32)                          # hub-skewed
+    w = rng.uniform(0.1, 2.0, e).astype(np.float32)
+    mask = rng.random(e) < 0.9
+    ids = np.sort(rng.integers(0, nseg, e)).astype(np.int32)
+    return tuple(jnp.asarray(x) for x in (gval, gchg, src, w, mask, ids))
+
+
+def _assert_all_equal(kind, tiled, pinned, want):
+    if kind == "min":
+        np.testing.assert_array_equal(np.asarray(pinned), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(pinned))
+    else:
+        np.testing.assert_allclose(np.asarray(pinned), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(tiled), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# kernel-level differential: tiled == pinned == ref
+# --------------------------------------------------------------------------
+
+# slot counts straddling the vblk=128 tile boundary, single-vertex
+# tables, and multi-tile tables with multi-chunk edge axes
+TILED_SHAPES = [
+    # (v, e, nseg, vblk)
+    (1, 1, 1, 128),                 # single-vertex, single tile
+    (127, 300, 50, 128),            # one partial tile
+    (128, 300, 50, 128),            # exactly one tile
+    (129, 300, 50, 128),            # just past the boundary
+    (257, 2 * EBLK + 13, SBLK + 5, 128),   # 3 tiles, 3 edge chunks
+    (500, 3 * EBLK + 9, 2 * SBLK + 1, 128),
+    (300, 1000, 400, 256),          # wider tile, still multi-tile
+]
+
+
+@pytest.mark.parametrize("relax,kind", [
+    ("add_w", "min"), ("add_one", "min"), ("mul_w", "sum")])
+@pytest.mark.parametrize("v,e,nseg,vblk", TILED_SHAPES)
+def test_tiled_matches_pinned_and_ref(relax, kind, v, e, nseg, vblk):
+    gval, gchg, src, w, mask, ids = _skewed_case(v, e, nseg, 0.4,
+                                                 seed=v + e + nseg)
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, nseg,
+                                  relax, kind)
+    pinned = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids, nseg,
+                                       relax, kind, path="pinned")
+    tiled = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids, nseg,
+                                      relax, kind, path="tiled", vblk=vblk)
+    _assert_all_equal(kind, tiled, pinned, want)
+
+
+@pytest.mark.parametrize("frontier_frac", [0.0, 0.05, 1.0])
+def test_tiled_frontier_densities(frontier_frac):
+    """Empty, sparse, and full frontiers: the tile lists shrink with the
+    frontier (a dead chunk fetches nothing) but never drop a live
+    contribution."""
+    gval, gchg, src, w, mask, ids = _skewed_case(400, 3 * EBLK + 9, 700,
+                                                 frontier_frac, seed=5)
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, 700,
+                                  "add_w", "min")
+    tiled, dbg = fused_relax_reduce_pallas(
+        gval, gchg, src, w, mask, ids, 700, "add_w", "min",
+        path="tiled", vblk=128, with_debug=True)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+    if frontier_frac == 0.0:
+        assert np.all(np.asarray(tiled) == np.inf)
+        assert int(dbg[0]) == 0 and int(dbg[1]) == 0   # no cells, no DMAs
+    else:
+        assert int(dbg[1]) >= int(dbg[0]) > 0          # >=1 tile per cell
+
+
+def test_tiled_unsorted_ids_still_correct():
+    gval, gchg, src, w, mask, ids = _skewed_case(300, 1000, 400, 0.5,
+                                                 seed=11)
+    ids = jnp.asarray(np.random.default_rng(1).permutation(
+        np.asarray(ids)))
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, 400,
+                                  "add_w", "min")
+    tiled = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids, 400,
+                                      "add_w", "min", path="tiled",
+                                      vblk=128)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(v=st.integers(1, 400), e=st.integers(1, 1400),
+           nseg=st.integers(1, 600), vblk=st.sampled_from([128, 256]),
+           frontier=st.sampled_from([0.0, 0.07, 0.5, 1.0]),
+           seed=st.integers(0, 2**30))
+    def test_tiled_differential_hypothesis(v, e, nseg, vblk, frontier,
+                                           seed):
+        """Randomized differential sweep: tiled == pinned == ref
+        bit-identically for the min kind, on skewed-degree graphs with
+        arbitrary slot counts vs the tile boundary."""
+        gval, gchg, src, w, mask, ids = _skewed_case(v, e, nseg, frontier,
+                                                     seed)
+        want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, nseg,
+                                      "add_w", "min")
+        pinned = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids,
+                                           nseg, "add_w", "min",
+                                           path="pinned")
+        tiled = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids,
+                                          nseg, "add_w", "min",
+                                          path="tiled", vblk=vblk)
+        np.testing.assert_array_equal(np.asarray(pinned), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# lane-batched differential: Q ∈ {1, 3, 128}, padded tail lanes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [1, 3, 128])
+def test_tiled_lanes_match_pinned_and_ref(q):
+    # Q=128 pads to a full lane tile already; keep the graph tiny so the
+    # per-lane unrolled min loop stays cheap under interpret mode
+    v, e, nseg = (40, 200, 60) if q == 128 else (260, 900, 300)
+    gval, gchg, src, w, mask, ids = _skewed_case(v, e, nseg, 0.4,
+                                                 seed=q, q=q)
+    unitw = jnp.asarray(np.arange(q) % 2, jnp.int32)
+    want = fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask,
+                                        ids, nseg, "add_w", "min")
+    pinned = fused_relax_reduce_lanes_pallas(
+        gval, gchg, unitw, src, w, mask, ids, nseg, "add_w", "min",
+        path="pinned")
+    tiled = fused_relax_reduce_lanes_pallas(
+        gval, gchg, unitw, src, w, mask, ids, nseg, "add_w", "min",
+        path="tiled", vblk=128)
+    np.testing.assert_array_equal(np.asarray(pinned), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+
+
+def test_lane_padding_to_full_tile_bit_identical():
+    """ISSUE-4 satellite: the lane axis padded to the full 128-lane TPU
+    tile (masked tail lanes) leaves a Q=5 batch bit-identical to the
+    unpadded jnp lanes — on the pinned AND the tiled path."""
+    q = 5
+    gval, gchg, src, w, mask, ids = _skewed_case(150, 600, 200, 0.4,
+                                                 seed=77, q=q)
+    unitw = jnp.asarray([1, 0, 1, 0, 0], jnp.int32)
+    want, want_counts = (
+        fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask, ids,
+                                     200, "add_w", "min"),
+        (np.asarray(mask)[:, None]
+         & np.asarray(gchg)[np.asarray(src)]).sum(axis=0),
+    )
+    for path in ("pinned", "tiled"):
+        got, counts = fused_relax_reduce_lanes_pallas(
+            gval, gchg, unitw, src, w, mask, ids, 200, "add_w", "min",
+            path=path, vblk=128 if path == "tiled" else None,
+            lane_tile=LANE_TILE, with_count=True)
+        assert got.shape == (200, q)          # tail lanes sliced off
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(counts), want_counts)
+
+
+def test_lane_padding_sum_semiring_close():
+    """Padded tail lanes contribute the 0 identity under 'sum' too."""
+    q = 5
+    gval, gchg, src, w, mask, ids = _skewed_case(100, 400, 150, 0.6,
+                                                 seed=9, q=q)
+    unitw = jnp.zeros(q, jnp.int32)
+    want = fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask,
+                                        ids, 150, "mul_w", "sum")
+    got = fused_relax_reduce_lanes_pallas(
+        gval, gchg, unitw, src, w, mask, ids, 150, "mul_w", "sum",
+        path="tiled", vblk=128, lane_tile=LANE_TILE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# engine-level differential: budget-forced tiling, stacked + sharded
+# --------------------------------------------------------------------------
+
+def test_engine_budget_forces_tiled_bit_identical():
+    """A partition whose slot table exceeds the configured VMEM budget
+    runs the fused path via tiling, bit-identical to the pinned kernel
+    and the jnp path on BFS/SSSP (the ISSUE-4 acceptance bar)."""
+    g = generators.ba_skewed(260, m_per=4, seed=9).with_random_weights(
+        seed=9)
+    root = int(np.argmax(g.out_degrees()))
+    part = build_partition(g, PartitionConfig(num_shards=8, rpvo_max=4))
+    # the budget really is exceeded -> the engine's launches are tiled
+    path, vblk = select_kernel_path(part.S * part.R_max, 1, TINY_BUDGET)
+    assert path == "tiled" and vblk == 128
+
+    cfg_j = engine.EngineConfig()
+    cfg_p = engine.EngineConfig(use_pallas=True)
+    cfg_t = engine.EngineConfig(use_pallas=True,
+                                vmem_budget_bytes=TINY_BUDGET)
+    for app in (bfs, sssp):
+        out_j, st_j, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_j)
+        out_p, st_p, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_p)
+        out_t, st_t, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_t)
+        np.testing.assert_array_equal(out_t, out_j)
+        np.testing.assert_array_equal(out_t, out_p)
+        assert int(st_t.messages) == int(st_j.messages)
+        assert int(st_t.iterations) == int(st_j.iterations)
+    np.testing.assert_array_equal(
+        bfs(g, root, num_shards=8, rpvo_max=4, cfg=cfg_j)[0],
+        reference.bfs_levels(g, root))
+
+
+@pytest.mark.parametrize("exchange", ["dense", "compact"])
+def test_engine_tiled_pagerank_matches_jnp(exchange):
+    g = generators.rmat(8, edge_factor=6, seed=3)
+    cfg_j = engine.EngineConfig(exchange=exchange)
+    cfg_t = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                vmem_budget_bytes=TINY_BUDGET)
+    pr_j, _ = pagerank(g, iters=15, num_shards=8, rpvo_max=4, cfg=cfg_j)
+    pr_t, _ = pagerank(g, iters=15, num_shards=8, rpvo_max=4, cfg=cfg_t)
+    np.testing.assert_allclose(pr_t, pr_j, rtol=1e-5, atol=1e-9)
+
+
+def test_engine_tiled_sharded_matches_stacked():
+    from jax.sharding import Mesh
+    g = generators.erdos_renyi(180, avg_degree=4.0, seed=21)
+    root = int(g.src[0])
+    cfg = engine.EngineConfig(use_pallas=True,
+                              vmem_budget_bytes=TINY_BUDGET)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    lv_st, _, _ = bfs(g, root, num_shards=1, cfg=cfg)
+    lv_sh, _, _ = bfs(g, root, num_shards=1, mesh=mesh, cfg=cfg)
+    np.testing.assert_array_equal(lv_sh, lv_st)
+    np.testing.assert_array_equal(lv_st, reference.bfs_levels(g, root))
+
+
+@pytest.mark.parametrize("exchange", ["dense", "compact"])
+def test_laned_engine_tiled_matches_jnp(exchange):
+    """Mixed BFS/SSSP lane batch through the serving runner with the
+    budget forced tiny: the laned tiled kernel must be bit-identical to
+    the laned jnp path, dense and compact exchange alike."""
+    g = generators.ba_skewed(200, m_per=3, seed=4).with_random_weights(
+        seed=4)
+    part = build_partition(g, PartitionConfig(num_shards=4, rpvo_max=4))
+    init, unitw = init_lane_values(
+        part, [("bfs", 0), ("sssp", 5), ("bfs", [1, 7])])
+    cfg_j = engine.EngineConfig(exchange=exchange)
+    cfg_t = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                vmem_budget_bytes=TINY_BUDGET)
+    val_j, st_j = run_stacked_lanes(part, init, unitw, cfg=cfg_j)
+    val_t, st_t = run_stacked_lanes(part, init, unitw, cfg=cfg_t)
+    np.testing.assert_array_equal(np.asarray(val_t), np.asarray(val_j))
+    np.testing.assert_array_equal(np.asarray(st_t.messages),
+                                  np.asarray(st_j.messages))
+
+
+def test_laned_engine_tiled_sharded_matches_stacked():
+    from jax.sharding import Mesh
+    from repro.query.lanes import run_sharded_lanes
+    g = generators.ba_skewed(150, m_per=3, seed=6).with_random_weights(
+        seed=6)
+    part = build_partition(g, PartitionConfig(num_shards=1, rpvo_max=4))
+    init, unitw = init_lane_values(
+        part, [("bfs", 2), ("sssp", 9), ("sssp", 0)])
+    cfg = engine.EngineConfig(use_pallas=True,
+                              vmem_budget_bytes=TINY_BUDGET)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    v_sh, _ = run_sharded_lanes(part, init, unitw, mesh=mesh, cfg=cfg)
+    v_st, _ = run_stacked_lanes(part, init, unitw, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(v_sh), np.asarray(v_st))
+
+
+# --------------------------------------------------------------------------
+# budget resolution / path selection
+# --------------------------------------------------------------------------
+
+def test_select_kernel_path_budget_rules():
+    # fits: pinned
+    assert select_kernel_path(1000, 1, 10**7) == ("pinned", None)
+    # table (128-padded) over budget: tiled, vblk shrinks with budget
+    path, vblk = select_kernel_path(10_000, 1, 8192)
+    assert path == "tiled" and vblk == 1024 == (8192 // (2 * 4))
+    # floor: never below one 128-slot tile, even for absurd budgets
+    assert select_kernel_path(10_000, 1, 1)[1] == 128
+    # lanes multiply the footprint: same budget tips laned tables sooner
+    assert select_kernel_path(1000, 128, 128 * 1024)[0] == "tiled"
+    assert select_kernel_path(1000, 1, 128 * 1024)[0] == "pinned"
+    # vblk is capped at the padded table (one tile == whole table)
+    assert select_kernel_path(100, 1, 1)[1] == 128
+    with pytest.raises(ValueError, match="multiple of 128"):
+        select_kernel_path(1000, 1, 1, path="tiled", vblk=100)
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    monkeypatch.delenv(FR.VMEM_BUDGET_ENV, raising=False)
+    assert resolve_vmem_budget() == FR.DEFAULT_VMEM_BUDGET_BYTES
+    assert resolve_vmem_budget(4096) == 4096
+    monkeypatch.setenv(FR.VMEM_BUDGET_ENV, "512")
+    assert resolve_vmem_budget() == 512
+    assert select_kernel_path(10_000)[0] == "tiled"   # env forces tiling
+    assert resolve_vmem_budget(10**7) == 10**7        # explicit arg wins
+    monkeypatch.setenv(FR.VMEM_BUDGET_ENV, "")        # empty == unset
+    assert resolve_vmem_budget() == FR.DEFAULT_VMEM_BUDGET_BYTES
+
+
+def test_tiled_dma_mirror_scales_with_vblk():
+    """dma_bytes accounting: halving vblk can only increase the fetch
+    count while shrinking per-fetch bytes; totals stay consistent."""
+    gval, gchg, src, w, mask, ids = _skewed_case(512, 1500, 300, 1.0,
+                                                 seed=3)
+    m128 = fused_grid_cells(ids, mask, src, np.asarray(gchg), 300,
+                            vblk=128)
+    m256 = fused_grid_cells(ids, mask, src, np.asarray(gchg), 300,
+                            vblk=256)
+    assert m128["fused_tile_dmas"] >= m256["fused_tile_dmas"]
+    assert m128["dma_bytes"] == m128["fused_tile_dmas"] * 128 * 4
+    assert m256["dma_bytes"] == m256["fused_tile_dmas"] * 256 * 4

@@ -104,12 +104,12 @@ def test_lanes_chunk_bitmap_is_or_across_lanes():
     gchg = np.zeros((v, q), np.int32)
     gchg[np.asarray(src_p)[:EBLK], 0] = 1
     gchg[np.asarray(src_p)[EBLK:], 1] = 1
-    _, _, chunk_act, counts = _chunk_tables_lanes(
+    _, _, chunk_act, counts, _ = _chunk_tables_lanes(
         ids_p, src_p, mask_i, jnp.asarray(gchg))
     assert np.asarray(chunk_act).tolist() == [1, 1]   # OR keeps both live
     assert int(counts[2]) == 0                        # lane 2 fully dead
     dead = jnp.zeros((v, q), jnp.int32)
-    _, _, act_dead, _ = _chunk_tables_lanes(ids_p, src_p, mask_i, dead)
+    _, _, act_dead, _, _ = _chunk_tables_lanes(ids_p, src_p, mask_i, dead)
     assert np.asarray(act_dead).tolist() == [0, 0]
 
 
