@@ -42,6 +42,20 @@ def add_seed_arg(ap, default: int = 7):
     return ap
 
 
+def add_grid_mode_arg(ap, default: str = "worklist"):
+    """Grow a bench arg parser a ``--grid-mode`` flag: the fused kernel's
+    launch shape for the worklist-capable bench variants (ISSUE 5) —
+    'dense' (the classic early-exit grid), 'worklist' (host-planned
+    live-cell launches), or 'auto'.  Recorded in the emitted BENCH json
+    so the perf trajectory distinguishes dense from worklist runs."""
+    ap.add_argument("--grid-mode", default=default,
+                    choices=("dense", "worklist", "auto"),
+                    help="fused-kernel grid mode for worklist-capable "
+                         f"variants (default {default}; recorded in the "
+                         "report)")
+    return ap
+
+
 def reversed_graph(g):
     from repro.graph.graph import COOGraph
     return COOGraph(g.n, g.dst, g.src, g.weight)

@@ -67,7 +67,17 @@ def _timed_run(fn, init, unitw, chg, repeats):
 
 
 def bench_batch_vs_serial(part, queries, cfg, repeats=3):
-    fn = make_stacked_lanes_fn(part, cfg)
+    if cfg.wants_worklist:
+        # host-driven laned runner: per-round worklist launches planned
+        # from the OR-across-lanes frontier (ISSUE 5) — same values and
+        # LaneStats as the traced fixpoint
+        from repro.query.lanes import run_stacked_lanes
+
+        def fn(init, unitw, chg):
+            return run_stacked_lanes(part, init, unitw, cfg=cfg,
+                                     init_changed=chg)
+    else:
+        fn = make_stacked_lanes_fn(part, cfg)
     slot_valid = jnp.asarray(part.slot_vertex >= 0)
 
     def prep(qs):
@@ -241,6 +251,7 @@ def main():
     ap.add_argument("--lanes", type=int, default=16)
     ap.add_argument("--server-queue", type=int, default=48)
     common.add_seed_arg(ap)
+    common.add_grid_mode_arg(ap)
     args = ap.parse_args()
 
     g = generators.rmat(args.scale, edge_factor=args.edge_factor,
@@ -256,7 +267,7 @@ def main():
                   "edge_factor": args.edge_factor, "n": g.n,
                   "num_edges": g.num_edges, "seed": args.seed},
         "config": {"shards": args.shards, "rpvo_max": args.rpvo_max,
-                   "lanes": args.lanes,
+                   "lanes": args.lanes, "grid_mode": args.grid_mode,
                    "backend": jax.default_backend(),
                    "interpret_mode": jax.default_backend() != "tpu"},
         "notes": (
@@ -270,8 +281,13 @@ def main():
         "variants": {},
     }
 
-    for label, cfg in (("jnp", engine.EngineConfig()),
-                       ("fused", engine.EngineConfig(use_pallas=True))):
+    variants = [("jnp", engine.EngineConfig()),
+                ("fused", engine.EngineConfig(use_pallas=True))]
+    if args.grid_mode != "dense":
+        variants.append(
+            ("fused_wl", engine.EngineConfig(use_pallas=True,
+                                             grid_mode=args.grid_mode)))
+    for label, cfg in variants:
         entry = bench_batch_vs_serial(part, workload, cfg,
                                       repeats=3 if label == "jnp" else 1)
         print(f"{label:6s} serial={entry['serial']['wall_s']:.3f}s "

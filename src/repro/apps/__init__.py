@@ -1,10 +1,11 @@
 from repro.apps.bfs import bfs
 from repro.apps.sssp import sssp
-from repro.apps.pagerank import pagerank
+from repro.apps.pagerank import pagerank, pagerank_delta
 from repro.apps.cc import cc
 from repro.apps.batch import batched_queries, multi_source_bfs, \
     multi_source_sssp
 from repro.apps.ppr import personalized_pagerank
 
-__all__ = ["bfs", "sssp", "pagerank", "cc", "batched_queries",
+__all__ = ["bfs", "sssp", "pagerank", "pagerank_delta", "cc",
+           "batched_queries",
            "multi_source_bfs", "multi_source_sssp", "personalized_pagerank"]

@@ -38,3 +38,30 @@ def pagerank(g: COOGraph, damping: float = 0.85, iters: int = 30,
         val = engine.run_pagerank_sharded(
             part, damping, iters, mesh, axis_names, cfg)
     return engine.vertex_values(part, val).astype(np.float64), part
+
+
+def pagerank_delta(g: COOGraph, damping: float = 0.85, tol=1e-7,
+                   part: Partition | None = None,
+                   cfg: engine.EngineConfig = engine.EngineConfig(),
+                   num_shards: int = 16, rpvo_max: int = 1,
+                   mesh=None, axis_names=("data", "model"),
+                   max_rounds: int = 256):
+    """Delta-PageRank (ISSUE 5): push-based residual propagation — only
+    deltas above ``tol`` diffuse, so the frontier shrinks round over
+    round and the engine's diffusion pruning (chunk skip, worklist
+    launch, tile filter) finally fires for the sum semiring.  Converges
+    to the ``pagerank`` fixpoint within O(tol / (1-damping)) per vertex.
+
+    Returns (scores (n,) float64, RunStats, partition)."""
+    if part is None:
+        part = build_partition(
+            _pr_graph(g),
+            PartitionConfig(num_shards=num_shards, rpvo_max=rpvo_max),
+        )
+    if mesh is None:
+        val, stats = engine.run_pagerank_delta(
+            part, damping, tol, cfg, max_rounds)
+    else:
+        val, stats = engine.run_pagerank_delta_sharded(
+            part, damping, tol, mesh, axis_names, cfg, max_rounds)
+    return engine.vertex_values(part, val).astype(np.float64), stats, part

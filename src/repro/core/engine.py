@@ -67,6 +67,24 @@ class EngineConfig:
     # False skips the Fig-6 message counter (an O(E) boolean reduction per
     # round on the fused path); RunStats then reports zero messages/pruned
     track_stats: bool = True
+    # Fused-kernel grid shape (ISSUE 5):
+    # 'dense'    — the classic (num_sblk, num_chunks) grid with per-cell
+    #              early exit (launch cost ∝ total work)
+    # 'worklist' — host-planned 1-D launch over the live (i, j) cells
+    #              only (launch cost ∝ frontier); requires a host-driven
+    #              round loop, so it applies to the stacked runners and
+    #              the delta rounds — traced collective loops
+    #              (run_sharded's while_loop, the laned sharded fixpoint)
+    #              fall back to the dense grid, whose per-cell skip is
+    #              semantically identical
+    # 'auto'     — per round: worklist when the live fraction of the
+    #              dense grid drops below WORKLIST_AUTO_THRESHOLD
+    grid_mode: str = "dense"
+    # SMEM byte budget for the fused kernel's scalar-prefetch tables
+    # (chunk ranges, tile lists, worklist cells).  None disables the
+    # guard; set to the real-TPU SMEM size to make select_kernel_path
+    # warn and widen vblk before a ~100k-chunk launch would overflow.
+    smem_budget_bytes: int | None = None
     # VMEM byte budget for the fused kernel's value-table residency: the
     # kernel pins the whole padded (S*R_max[, Q]) slot table in VMEM when
     # it fits the budget, else tiles it out of HBM with per-cell
@@ -88,6 +106,20 @@ class EngineConfig:
                 and self.vmem_budget_bytes <= 0:
             raise ValueError(
                 f"vmem_budget_bytes={self.vmem_budget_bytes!r}")
+        if self.grid_mode not in ("dense", "worklist", "auto"):
+            raise ValueError(f"grid_mode={self.grid_mode!r}")
+        if self.smem_budget_bytes is not None \
+                and self.smem_budget_bytes <= 0:
+            raise ValueError(
+                f"smem_budget_bytes={self.smem_budget_bytes!r}")
+
+    @property
+    def wants_worklist(self) -> bool:
+        """Whether runners should plan sparse worklist launches (only
+        meaningful on the fused Pallas path — the jnp oracle and the
+        pre-fusion composition have no grid to sparsify)."""
+        return (self.grid_mode != "dense" and self.use_pallas
+                and self.pallas_mode == "fused")
 
 
 class DeviceArrays(typing.NamedTuple):
@@ -149,15 +181,69 @@ class RunStats(typing.NamedTuple):
 # directly to measure exactly what the runners ship)
 # --------------------------------------------------------------------------
 
-def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg):
+def _fixpoint_round_stacked(sem, arrays, cfg, S, R_max, val, chg,
+                            worklist=None):
     return exchange.fixpoint_round_stacked(
-        sem, arrays, cfg, S, R_max, val, chg)
+        sem, arrays, cfg, S, R_max, val, chg, worklist=worklist)
 
 
 def _pagerank_round_stacked(sem, arrays, cfg, S, R_max, base, damping, val,
-                            chg):
+                            chg, worklist=None):
     return exchange.pagerank_round_stacked(
-        sem, arrays, cfg, S, R_max, base, damping, val, chg)
+        sem, arrays, cfg, S, R_max, base, damping, val, chg,
+        worklist=worklist)
+
+
+# --------------------------------------------------------------------------
+# worklist launch planning (grid_mode='worklist'|'auto' host-driven rounds)
+# --------------------------------------------------------------------------
+
+# 'auto' plans a worklist launch only when the dense grid's live fraction
+# drops below this — a dense frontier gains nothing from the 1-D launch
+# but pays the planning pass
+WORKLIST_AUTO_THRESHOLD = 0.25
+
+
+def launch_planner(part: Partition, cfg: EngineConfig, q_pad: int = 1):
+    """Host-side ``WorklistPlanner`` for the stacked fused launch under
+    ``cfg`` — the planner must mirror the exact launch ``relax`` builds:
+    dense exchange flattens ``edge_dst_flat`` over ``S*R_max`` segments;
+    compact exchange offsets ``edge_dst_compact`` into per-source-shard
+    id windows over ``S*S*P_t``.  ``q_pad`` is the lane-PADDED width of
+    laned launches (sizes the residency choice and the DMA byte mirror).
+    """
+    from repro.kernels.fused_relax_reduce import (
+        EBLK, WorklistPlanner, select_kernel_path, _round_up)
+    S, R_max = part.S, part.R_max
+    num_slots = S * R_max
+    if cfg.exchange == "compact":
+        P_t = part.P_t
+        offs = (np.arange(S, dtype=np.int64) * (S * P_t))[:, None]
+        ids = np.asarray(part.edge_dst_compact) + offs
+        num_segments = S * S * P_t
+    else:
+        ids = np.asarray(part.edge_dst_flat)
+        num_segments = S * R_max
+    n_chunks = _round_up(ids.size, EBLK) // EBLK
+    path, vblk = select_kernel_path(
+        num_slots, q_pad, cfg.vmem_budget_bytes, n_chunks=n_chunks,
+        smem_budget_bytes=cfg.smem_budget_bytes)
+    return WorklistPlanner(
+        ids, np.asarray(part.edge_mask), np.asarray(part.edge_src_root_flat),
+        num_segments, num_slots=num_slots, path=path, vblk=vblk,
+        lane_width=q_pad, smem_budget_bytes=cfg.smem_budget_bytes)
+
+
+def plan_round_worklist(planner, cfg: EngineConfig, gchg):
+    """One round's launch decision for a host-driven loop: a ``Worklist``
+    under 'worklist' (and under 'auto' when the frontier is sparse
+    enough), else None — the dense early-exit grid.  The auto threshold
+    is applied inside ``plan`` so a dense round bails out before any
+    per-cell planning work."""
+    thresh = (WORKLIST_AUTO_THRESHOLD if cfg.grid_mode == "auto"
+              else None)
+    wl, _ = planner.plan(gchg, max_live_fraction=thresh)
+    return wl
 
 
 # --------------------------------------------------------------------------
@@ -168,7 +254,14 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
                 cfg: EngineConfig = EngineConfig(), init_changed=None):
     """Single-device stacked execution. ``init_val``: (S, R_max) float32.
     ``init_changed`` (optional bool (S, R_max)) seeds the first frontier —
-    used by incremental recompute to re-diffuse only mutation sites."""
+    used by incremental recompute to re-diffuse only mutation sites.
+
+    Under ``cfg.grid_mode='worklist'|'auto'`` (fused Pallas only) the
+    fixpoint runs as a host-driven round loop: each round's frontier
+    plans a sparse worklist launch (``launch_planner``), so launch cost
+    tracks the live frontier instead of the dense grid.  Values and
+    stats are identical to the traced loop (min semirings are
+    bit-identical)."""
     if sem.segment != "min":
         raise ValueError(
             "run_stacked drives monotone min-semiring fixpoints; the "
@@ -176,6 +269,9 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
             "run_pagerank_stacked for counted sum-semiring rounds")
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
+    if cfg.wants_worklist:
+        return _run_stacked_hostloop(sem, part, arrays, cfg, init_val,
+                                     init_changed)
 
     def body(carry):
         val, chg, it, stats = carry
@@ -215,6 +311,54 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
     return val, stats
 
 
+def _host_stats(it, msgs, work, pruned):
+    dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    mk = lambda x: jnp.asarray(x, dtype)  # noqa: E731
+    return RunStats(iterations=mk(it), messages=mk(msgs),
+                    work_actions=mk(work), pruned_actions=mk(pruned),
+                    diffusions=mk(work))
+
+
+def _run_stacked_hostloop(sem, part, arrays, cfg, init_val, init_changed):
+    """Worklist-mode fixpoint: the traced ``lax.while_loop`` becomes a
+    Python loop so each round's frontier can plan its launch host-side.
+    One jitted round fn serves every round — jit retraces only when the
+    worklist's power-of-two length bucket changes (O(log cells) traces)
+    or a dense round passes ``worklist=None``."""
+    S, R_max = part.S, part.R_max
+    planner = launch_planner(part, cfg)
+
+    @jax.jit
+    def round_fn(val, chg, worklist):
+        return exchange.fixpoint_round_stacked(
+            sem, arrays, cfg, S, R_max, val, chg, worklist=worklist)
+
+    val = jnp.asarray(init_val)
+    if init_changed is not None:
+        chg = jnp.asarray(init_changed) & arrays.slot_valid
+    else:
+        chg = sem.improved(val, jnp.full_like(val, sem.identity)) \
+            & arrays.slot_valid
+    chg_h = np.asarray(chg)        # ONE frontier download per round:
+    it = msgs = work_total = pruned = 0   # reused for plan + accounting
+    while it < cfg.max_iters:
+        if not chg_h.any():
+            break
+        wl = plan_round_worklist(planner, cfg, chg_h.reshape(-1))
+        val, chg, mc = round_fn(val, chg, wl)
+        chg_h = np.asarray(chg)
+        mc, work = int(mc), int(chg_h.sum())
+        it += 1
+        msgs += mc
+        work_total += work
+        pruned += mc - min(work, mc)
+    stats = _host_stats(it, msgs, work_total, pruned)
+    if cfg.collapse == "deferred":
+        val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
+                                arrays.sibling_mask)
+    return val, stats
+
+
 # --------------------------------------------------------------------------
 # PageRank-style counted-iteration apps
 # --------------------------------------------------------------------------
@@ -238,6 +382,141 @@ def run_pagerank_stacked(part: Partition, damping: float, iters: int,
 
     val = lax.fori_loop(0, iters, body, val0)
     return val
+
+
+def _tol_table(part: Partition, tol):
+    """Per-slot residual tolerance: a scalar passes through; an (n,)
+    per-vertex array maps every replica of vertex v to ``tol[v]``
+    (invalid slots get +inf — they never diffuse)."""
+    tol_arr = np.asarray(tol, np.float32)
+    if tol_arr.ndim == 0:
+        return jnp.asarray(float(tol_arr), jnp.float32)
+    if tol_arr.shape != (part.n,):
+        raise ValueError(
+            f"per-vertex tol must be shape ({part.n},); got {tol_arr.shape}")
+    sv = np.asarray(part.slot_vertex)
+    table = np.where(sv >= 0, tol_arr[np.maximum(sv, 0)], np.inf)
+    return jnp.asarray(table, jnp.float32)
+
+
+def run_pagerank_delta(part: Partition, damping: float = 0.85,
+                       tol=1e-6, cfg: EngineConfig = EngineConfig(),
+                       max_rounds: int = 256):
+    """Stacked **delta-PageRank**: push-based residual propagation with
+    per-vertex pruning (ISSUE 5 tentpole).
+
+    Ranks accumulate the Neumann series ``Σ_k (d·Aᵀ)^k base`` — the same
+    fixpoint the dense power iteration converges to — but each round
+    diffuses only residual deltas above ``tol`` (scalar or (n,)
+    per-vertex), so the frontier *shrinks* as residuals decay (by ~d per
+    round) and the fused kernel's chunk-skip / worklist launch / tile
+    filter all fire for the sum semiring.  Dropping sub-tolerance
+    residuals bounds the rank error by O(tol / (1-d)) per vertex.
+
+    Runs host-driven (the termination test and any worklist planning
+    need the frontier on host).  Returns ((S, R_max) ranks, RunStats
+    with the Fig-6 accounting: messages delivered, slots whose residual
+    stayed live (work), deliveries pruned below tolerance)."""
+    from repro.core.actions import PAGERANK as sem
+
+    arrays = DeviceArrays.from_partition(part)
+    S, R_max = part.S, part.R_max
+    base = (1.0 - damping) / part.n
+    tol_t = _tol_table(part, tol)
+    planner = launch_planner(part, cfg) if cfg.wants_worklist else None
+
+    @jax.jit
+    def round_fn(rank, delta, worklist):
+        return exchange.delta_pagerank_round_stacked(
+            sem, arrays, cfg, S, R_max, damping, tol_t, rank, delta,
+            worklist=worklist)
+
+    rank = delta = jnp.where(arrays.slot_valid, base, 0.0)
+    # each round returns next round's frontier — computed on device,
+    # downloaded ONCE per round for planning + accounting alike
+    chg_h = np.asarray((delta > tol_t) & arrays.slot_valid)
+    it = msgs = work_total = pruned = 0
+    while it < max_rounds:
+        if not chg_h.any():
+            break
+        wl = (plan_round_worklist(planner, cfg, chg_h.reshape(-1))
+              if planner is not None else None)
+        rank, delta, chg, mc = round_fn(rank, delta, wl)
+        chg_h = np.asarray(chg)
+        mc, work = int(mc), int(chg_h.sum())
+        it += 1
+        msgs += mc
+        work_total += work
+        pruned += mc - min(work, mc)
+    return rank, _host_stats(it, msgs, work_total, pruned)
+
+
+def make_sharded_pagerank_delta_fn(S: int, R_max: int, damping: float,
+                                   tol: float, mesh: Mesh,
+                                   axis_names=("data", "model"),
+                                   cfg: EngineConfig = EngineConfig()):
+    """shard_map delta-PageRank round as a jit-able fn of (DeviceArrays,
+    rank, delta) -> (rank, delta, psum'd count, psum'd live-slot count).
+    The serving loop drives it un-looped (the frontier-empty termination
+    lives on host); the grid stays dense inside shard_map — the per-cell
+    chunk skip provides the pruning there."""
+    from repro.core.actions import PAGERANK as sem
+
+    axis_names = exchange.axis_tuple(axis_names)
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (DeviceArrays.specs(spec), spec, spec)
+
+    def shard_fn(arrays_l: DeviceArrays, rank_l, delta_l):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        new_rank, new_delta, new_chg, counts = \
+            exchange.delta_pagerank_round_shard(
+                sem, arrays_s, cfg, S, R_max, axis_names, damping, tol,
+                rank_l[0], delta_l[0])
+        counts = lax.psum(counts, axis_names)
+        work = lax.psum(new_chg.sum(), axis_names)
+        return new_rank[None], new_delta[None], counts[None], work[None]
+
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=(spec, spec, spec, spec), check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
+
+
+def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
+                               tol: float = 1e-6, mesh: Mesh = None,
+                               axis_names=("data", "model"),
+                               cfg: EngineConfig = EngineConfig(),
+                               max_rounds: int = 256):
+    """shard_map delta-PageRank execution (host-driven rounds over real
+    collectives); layout as in ``run_sharded``.  Scalar ``tol`` only —
+    a per-vertex table would need its own sharded layout."""
+    if np.ndim(tol) != 0:
+        raise ValueError("run_pagerank_delta_sharded takes a scalar tol")
+    fn, sharding = make_sharded_pagerank_delta_fn(
+        part.S, part.R_max, damping, float(tol), mesh, axis_names, cfg)
+    arrays = DeviceArrays.from_partition(part)
+    arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
+    slot_valid = np.asarray(part.slot_vertex) >= 0
+    base = (1.0 - damping) / part.n
+    init = jnp.where(jnp.asarray(slot_valid), base, 0.0)
+    rank = jax.device_put(init, sharding)
+    delta = jax.device_put(init, sharding)
+    it = msgs = work_total = pruned = 0
+    # the round's psum'd live-slot count IS the next round's frontier
+    # size — only the initial frontier needs a host check
+    live = bool(((np.asarray(delta) > tol) & slot_valid).any())
+    while live and it < max_rounds:
+        rank, delta, counts, work = fn(arrays_dev, rank, delta)
+        mc, w = int(counts[0]), int(work[0])
+        it += 1
+        msgs += mc
+        work_total += w
+        pruned += mc - min(w, mc)
+        live = w > 0
+    return rank, _host_stats(it, msgs, work_total, pruned)
 
 
 # --------------------------------------------------------------------------

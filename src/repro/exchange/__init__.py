@@ -17,16 +17,18 @@ from repro.exchange.primitives import (
     scatter_inbox, stacked_compact_partial, stacked_dense_inbox,
 )
 from repro.exchange.rounds import (
-    axis_tuple, fixpoint_round_stacked, make_shard_fixpoint_round,
+    axis_tuple, delta_pagerank_round_shard, delta_pagerank_round_stacked,
+    fixpoint_round_stacked, make_shard_fixpoint_round,
     pagerank_round_stacked, shard_collapse, shard_inbox, shard_total_in,
     stacked_collapse, stacked_inbox, stacked_total_in,
 )
 
 __all__ = [
-    "axis_tuple", "collapse", "compact_collapse", "exchange_volume",
-    "fixpoint_round_stacked", "make_shard_fixpoint_round",
-    "pagerank_round_stacked", "reduce_axis0", "relax", "scatter_inbox",
-    "shard_collapse", "shard_inbox", "shard_total_in", "stacked_collapse",
-    "stacked_compact_partial", "stacked_dense_inbox", "stacked_inbox",
-    "stacked_total_in",
+    "axis_tuple", "collapse", "compact_collapse",
+    "delta_pagerank_round_shard", "delta_pagerank_round_stacked",
+    "exchange_volume", "fixpoint_round_stacked",
+    "make_shard_fixpoint_round", "pagerank_round_stacked", "reduce_axis0",
+    "relax", "scatter_inbox", "shard_collapse", "shard_inbox",
+    "shard_total_in", "stacked_collapse", "stacked_compact_partial",
+    "stacked_dense_inbox", "stacked_inbox", "stacked_total_in",
 ]

@@ -33,7 +33,7 @@ def _identity(sem: Semiring, dtype):
 # --------------------------------------------------------------------------
 
 def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
-          num_segments: int, lane_unitw=None):
+          num_segments: int, lane_unitw=None, worklist=None):
     """Relax phase over one edge set (flattened internally).
 
     ``gval``/``gchg``: (V,) or (V, Q).  Returns ((num_segments[, Q])
@@ -41,6 +41,13 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
 
     Laned 'add_w' honors ``lane_unitw``: lanes with a nonzero flag relax
     with the constant weight 1.0 (BFS levels inside an SSSP launch).
+
+    ``worklist`` — a host-planned live-cell launch (see
+    ``kernels.fused_relax_reduce.WorklistPlanner``) — swaps the fused
+    kernel's dense early-exit grid for the 1-D sparse launch; it only
+    applies to the fused Pallas path (the jnp oracle has no grid) and is
+    built per round by the host-driven engine loops
+    (``EngineConfig.grid_mode``).
     """
     laned = gval.ndim == 2
     src = edge_src.reshape(-1)
@@ -63,7 +70,9 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
             partial, count = kops.fused_relax_reduce(
                 gval, gchg, src, w, mask, idsf, num_segments,
                 relax_kind=sem.relax_kind, kind=sem.segment,
-                vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None))
+                vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None),
+                worklist=worklist,
+                smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None))
             if not cfg.track_stats:
                 count = jnp.zeros((), jnp.int32)
             return partial, count
@@ -97,7 +106,9 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
         partial, counts = kops.fused_relax_reduce_lanes(
             gval, gchg, unitw, src, w, mask, idsf, num_segments,
             relax_kind=sem.relax_kind, kind=sem.segment,
-            vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None))
+            vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None),
+            worklist=worklist,
+            smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None))
         if not cfg.track_stats:
             counts = jnp.zeros((q,), jnp.int32)
         return partial, counts
@@ -123,7 +134,7 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
 # --------------------------------------------------------------------------
 
 def stacked_dense_inbox(sem: Semiring, arrays, cfg, gval, gchg, total: int,
-                        lane_unitw=None):
+                        lane_unitw=None, worklist=None):
     """Stacked dense relax: the reduced (total[, Q]) global inbox + count.
 
     Fused path: all shards' edges address the same global slot space, so
@@ -132,7 +143,7 @@ def stacked_dense_inbox(sem: Semiring, arrays, cfg, gval, gchg, total: int,
     if cfg.use_pallas and cfg.pallas_mode == "fused":
         return relax(sem, cfg, arrays.edge_src_root_flat, arrays.edge_w,
                      arrays.edge_mask, arrays.edge_dst_flat, gval, gchg,
-                     total, lane_unitw)
+                     total, lane_unitw, worklist=worklist)
     partial, counts = jax.vmap(
         lambda s, w, m, i: relax(sem, cfg, s, w, m, i, gval, gchg, total,
                                  lane_unitw)
@@ -142,7 +153,7 @@ def stacked_dense_inbox(sem: Semiring, arrays, cfg, gval, gchg, total: int,
 
 
 def stacked_compact_partial(sem: Semiring, arrays, cfg, S: int, P_t: int,
-                            gval, gchg, lane_unitw=None):
+                            gval, gchg, lane_unitw=None, worklist=None):
     """Stacked compact relax: (S_src, S_tgt, P_t[, Q]) partials + count.
 
     Fused path: source shards get disjoint id windows of width S*P_t, so
@@ -154,7 +165,8 @@ def stacked_compact_partial(sem: Semiring, arrays, cfg, S: int, P_t: int,
         ids = arrays.edge_dst_compact + offs
         flat, count = relax(sem, cfg, arrays.edge_src_root_flat,
                             arrays.edge_w, arrays.edge_mask, ids, gval,
-                            gchg, S * S * P_t, lane_unitw)
+                            gchg, S * S * P_t, lane_unitw,
+                            worklist=worklist)
         return flat.reshape((S, S, P_t) + flat.shape[1:]), count
     partial, counts = jax.vmap(
         lambda s, w, m, i: relax(sem, cfg, s, w, m, i, gval, gchg,

@@ -41,23 +41,28 @@ def _flat(table):
 # --------------------------------------------------------------------------
 
 def stacked_inbox(sem: Semiring, arrays, cfg, S: int, R_max: int,
-                  gval, gchg, lane_unitw=None):
+                  gval, gchg, lane_unitw=None, worklist=None):
     """Relax + exchange on the stacked layout.
 
     Dense: one reduced global inbox.  Compact (§Perf targeted): per-source
     (target, distinct-slot) partials, axis-swapped in place of the real
     ``all_to_all``, scatter-combined per target.  Returns the
-    ((S, R_max[, Q]) inbox, message count — scalar or (Q,))."""
+    ((S, R_max[, Q]) inbox, message count — scalar or (Q,)).
+
+    ``worklist`` is a host-planned sparse launch for the fused relax —
+    planned against THIS exchange's launch shape (the compact path's
+    offset ids differ from the dense flat ids; see
+    ``core.engine.launch_planner``)."""
     if cfg.exchange == "compact":
         P_t = arrays.inbox_slot_map.shape[-1]
         partial, counts = stacked_compact_partial(
-            sem, arrays, cfg, S, P_t, gval, gchg, lane_unitw)
+            sem, arrays, cfg, S, P_t, gval, gchg, lane_unitw, worklist)
         recv = jnp.swapaxes(partial, 0, 1)       # (S_tgt, S_src, P_t[, Q])
         inbox = jax.vmap(lambda r, m: scatter_inbox(sem, r, m, R_max))(
             recv, arrays.inbox_slot_map)
         return inbox, counts
     flat, counts = stacked_dense_inbox(
-        sem, arrays, cfg, gval, gchg, S * R_max, lane_unitw)
+        sem, arrays, cfg, gval, gchg, S * R_max, lane_unitw, worklist)
     return flat.reshape((S, R_max) + flat.shape[1:]), counts
 
 
@@ -76,14 +81,14 @@ def stacked_collapse(sem: Semiring, arrays, cfg, table):
 
 
 def fixpoint_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
-                           val, chg, lane_unitw=None):
+                           val, chg, lane_unitw=None, worklist=None):
     """One stacked fixpoint round: relax → exchange → combine → eager
     rhizome collapse → predicate.  ``val``/``chg``: (S, R_max) or
     (S, R_max, Q).  Returns (new val, new changed, message count)."""
     laned = val.ndim == 3
     gval, gchg = _flat(val), _flat(chg)
     inbox, counts = stacked_inbox(
-        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw)
+        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw, worklist)
     cand = sem.combine(val, inbox)
     if cfg.collapse == "eager":
         cand = stacked_collapse(sem, arrays, cfg, cand)
@@ -93,25 +98,52 @@ def fixpoint_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
 
 
 def stacked_total_in(sem: Semiring, arrays, cfg, S: int, R_max: int,
-                     gval, gchg, lane_unitw=None):
+                     gval, gchg, lane_unitw=None, worklist=None):
     """Relax → exchange → rhizome-collapse(⊕) of the *bare inbox* — the
     total in-flow per slot that counted (PageRank-style) rounds consume.
     The collapse sees inbox partials, never combined candidates, so the
     sum-semiring sibling-total overwrite is exact."""
     inbox, counts = stacked_inbox(
-        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw)
+        sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw, worklist)
     return stacked_collapse(sem, arrays, cfg, inbox), counts
 
 
 def pagerank_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
-                           base, damping, val, chg):
+                           base, damping, val, chg, worklist=None):
     """One stacked PageRank round: relax → exchange → rhizome-collapse(+)
     → damping update.  Shared by run_pagerank_stacked and the engine
     benchmark so BENCH numbers measure the shipped hot path."""
     total_in, counts = stacked_total_in(
-        sem, arrays, cfg, S, R_max, _flat(val), _flat(chg))
+        sem, arrays, cfg, S, R_max, _flat(val), _flat(chg),
+        worklist=worklist)
     new_val = jnp.where(arrays.slot_valid, base + damping * total_in, 0.0)
     return new_val, counts
+
+
+def delta_pagerank_round_stacked(sem: Semiring, arrays, cfg, S: int,
+                                 R_max: int, damping, tol, rank, delta,
+                                 worklist=None):
+    """One stacked **delta-PageRank** round (the diffusion-pruned sum
+    semiring, paper Listing 10 with lazy residuals).
+
+    Ranks follow the Neumann series ``rank = Σ_k (d·Aᵀ)^k base`` — the
+    same fixpoint as the dense power iteration — but each round ships
+    only the *residual delta*, and only where it still exceeds ``tol``
+    (scalar or per-slot): the frontier ``delta > tol`` masks the relax,
+    sub-tolerance residuals are dropped (the paper's pruned diffusions),
+    and the sum semiring finally has a genuinely shrinking frontier for
+    the chunk-skip / worklist / tile-filter stack to prune against.
+
+    Returns (new rank, new delta, new changed, message count); callers
+    seed ``rank = delta = base`` (see ``engine.run_pagerank_delta``)."""
+    chg = (delta > tol) & arrays.slot_valid
+    total_in, counts = stacked_total_in(
+        sem, arrays, cfg, S, R_max, _flat(delta), _flat(chg),
+        worklist=worklist)
+    new_delta = jnp.where(arrays.slot_valid, damping * total_in, 0.0)
+    new_rank = rank + new_delta
+    new_chg = (new_delta > tol) & arrays.slot_valid
+    return new_rank, new_delta, new_chg, counts
 
 
 # --------------------------------------------------------------------------
@@ -201,3 +233,25 @@ def shard_total_in(sem: Semiring, arrays_s, cfg, S: int, R_max: int,
     inbox, counts = shard_inbox(
         sem, arrays_s, cfg, S, R_max, axis_names, gval, gchg, lane_unitw)
     return shard_collapse(sem, arrays_s, cfg, inbox, gather, R_max), counts
+
+
+def delta_pagerank_round_shard(sem: Semiring, arrays_s, cfg, S: int,
+                               R_max: int, axis_names, damping, tol,
+                               rank, delta):
+    """Per-shard delta-PageRank round (runs inside shard_map): the
+    sharded twin of ``delta_pagerank_round_stacked`` — value/frontier
+    ``all_gather``, relax over the shrinking residual frontier, inbox
+    exchange, rhizome-collapse(+).  Counts are local (callers psum)."""
+    axis_names = axis_tuple(axis_names)
+
+    def gather(x):
+        return lax.all_gather(x, axis_names, tiled=True)
+
+    chg = (delta > tol) & arrays_s.slot_valid
+    total_in, counts = shard_total_in(
+        sem, arrays_s, cfg, S, R_max, axis_names, gather(delta),
+        gather(chg))
+    new_delta = jnp.where(arrays_s.slot_valid, damping * total_in, 0.0)
+    new_rank = rank + new_delta
+    new_chg = (new_delta > tol) & arrays_s.slot_valid
+    return new_rank, new_delta, new_chg, counts

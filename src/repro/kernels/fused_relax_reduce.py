@@ -85,11 +85,42 @@ same two paths with the trailing query axis padded to the TPU lane tile
 (``LANE_TILE`` when compiling, a sublane multiple under interpret —
 tail lanes are frontier-dead and masked, so padding never changes
 results; see ``_lane_pad``).
+
+**Sparsity-proportional worklist launches (ISSUE 5).**  The dense grid
+above launches every ``(num_sblk, num_chunks)`` cell and early-exits the
+dead ones — launch cost stays proportional to *total* work even when the
+frontier is four cells wide.  Every kernel variant therefore has a
+**worklist twin**: a host-built (``WorklistPlanner`` / ``plan_worklist``)
+scalar-prefetched list of live ``(i, j)`` cell pairs, launched as a 1-D
+grid over the power-of-two-padded live count.  Each worklist cell writes
+its own ``(SBLK[, Q])`` partial (no out-block revisiting — revisit order
+under a sparse worklist is non-consecutive, which Pallas out pipelining
+does not guarantee), and a host-side scatter-combine folds the partials
+into the inbox; padded cells emit the combine identity, so the scatter
+is exact.  Bit-identical to the dense grid for min semirings; sum
+differs only by scatter reassociation.
+
+The worklist's tiled twin goes further than the per-chunk tile lists
+(the ROADMAP dst-range item): tile lists are built **per cell** — only
+the tiles of frontier-active sources whose edge lands in block *i*'s dst
+range are fetched — and the worklist is ordered j-major so consecutive
+cells sharing an edge chunk reuse tiles still resident in the 2-slot
+VMEM scratch.  The planner simulates exactly the kernel's slot schedule
+(``cell_slot`` / ``cell_fetch``), so the host DMA mirror is exact; a
+cell whose dst-filtered tile list is empty contributes only the identity
+and is dropped from the worklist entirely.
+
+Scalar-prefetch tables live in SMEM; ``smem_table_bytes`` prices them
+and ``select_kernel_path`` warns and widens ``vblk`` (shorter tile
+lists) when a configurable ``smem_budget_bytes`` would be exceeded —
+the real-TPU ~100k-chunk regime the ROADMAP flags.
 """
 from __future__ import annotations
 
 import functools
 import os
+import typing
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +139,10 @@ INTERPRET_LANE_TILE = 8  # sublane multiple: cheap pad that still exercises
 
 DEFAULT_VMEM_BUDGET_BYTES = 12 * 2**20   # ~3/4 of a 16 MiB TPU core VMEM
 VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET"
+
+WL_PAD = 8      # worklist launches are padded to >= this many cells and
+                # then to a power of two, so jit retraces O(log cells)
+                # times per partition instead of once per distinct count
 
 RELAX_KINDS = tuple(RELAX_FNS)
 
@@ -153,8 +188,29 @@ def resolve_vmem_budget(vmem_budget_bytes=None) -> int:
     return DEFAULT_VMEM_BUDGET_BYTES
 
 
+def smem_table_bytes(n_chunks: int, t_max: int = 0,
+                     wl_cells: int = 0) -> int:
+    """Byte footprint of the scalar-prefetch tables one fused launch pins
+    in SMEM: the per-chunk ``chunk_lo/hi/act`` rows, plus (tiled) the
+    ``chunk_ntiles``/``chunk_tiles`` tile lists, plus (worklist) the
+    per-cell ``wl_i/wl_j`` pairs, ``nlive``, and — when both — the
+    per-cell ``cell_ntiles``/``cell_tile``/``cell_slot``/``cell_fetch``
+    tables.  All int32.  ``t_max`` is the tile-list width (0 = pinned),
+    ``wl_cells`` the padded worklist length (0 = dense grid)."""
+    rows = 3 * n_chunks                      # chunk_lo + chunk_hi + chunk_act
+    if t_max and not wl_cells:
+        rows += n_chunks * (1 + t_max)       # chunk_ntiles + chunk_tiles
+    if wl_cells:
+        rows += 2 * wl_cells + 1             # wl_i + wl_j + nlive
+        if t_max:
+            rows += wl_cells * (1 + 3 * t_max)   # ntiles + tile/slot/fetch
+    return rows * 4
+
+
 def select_kernel_path(num_slots: int, q_pad: int = 1,
-                       vmem_budget_bytes=None, *, path=None, vblk=None):
+                       vmem_budget_bytes=None, *, path=None, vblk=None,
+                       n_chunks=None, wl_cells: int = 0,
+                       smem_budget_bytes=None, return_info: bool = False):
     """Pick the fused kernel's residency strategy for a value table of
     ``num_slots`` (x ``q_pad`` lanes) f32 slots.
 
@@ -164,13 +220,36 @@ def select_kernel_path(num_slots: int, q_pad: int = 1,
     legal tile — even if that overshoots a pathologically small budget).
     ``path``/``vblk`` force the decision (differential tests pin both
     sides; benchmarks pin the tile to keep DMA counts comparable).
+
+    With ``n_chunks`` and ``smem_budget_bytes`` the scalar-prefetch table
+    footprint (``smem_table_bytes``; ``wl_cells`` prices a worklist
+    launch on top) joins the decision: a tiled path whose tile lists
+    would overflow the SMEM budget is widened (``vblk`` doubled — fewer,
+    wider tiles shrink ``t_max``) with a warning until the tables fit or
+    one tile covers the table; a still-overflowing chunk count is warned
+    as needing the ROADMAP HBM side table.  ``return_info=True`` appends
+    a dict with the footprint behind the decision.
     """
     budget = resolve_vmem_budget(vmem_budget_bytes)
     v_pad = _round_up(num_slots, 128)
     if path is None:
         path = "pinned" if v_pad * q_pad * 4 <= budget else "tiled"
     if path == "pinned":
-        return "pinned", None
+        info = {"path": "pinned", "vblk": None, "smem_table_bytes":
+                smem_table_bytes(n_chunks, 0, wl_cells) if n_chunks else None}
+        if n_chunks is not None and smem_budget_bytes is not None \
+                and info["smem_table_bytes"] > smem_budget_bytes:
+            # pinned launches carry the same chunk_lo/hi/act rows; no
+            # vblk to widen — the overflow needs the ROADMAP HBM side
+            # table, so say so instead of silently compiling
+            warnings.warn(
+                f"fused-kernel scalar-prefetch tables ({n_chunks} chunks"
+                f", wl_cells={wl_cells}) weigh "
+                f"{info['smem_table_bytes']} bytes — over "
+                f"smem_budget_bytes={smem_budget_bytes} on the pinned "
+                "path; the chunk tables belong in an HBM side table "
+                "(ROADMAP)", stacklevel=2)
+        return ("pinned", None, info) if return_info else ("pinned", None)
     if path != "tiled":
         raise ValueError(f"unknown kernel path {path!r}")
     if vblk is None:
@@ -179,7 +258,29 @@ def select_kernel_path(num_slots: int, q_pad: int = 1,
     if vblk % 128 or vblk <= 0:
         raise ValueError(f"vblk must be a positive multiple of 128; "
                          f"got {vblk}")
-    return "tiled", int(vblk)
+    vblk = int(vblk)
+    info = {"path": "tiled", "vblk": vblk, "smem_table_bytes": None}
+    if n_chunks is not None and smem_budget_bytes is not None:
+        def footprint(vb):
+            t_max = min(_round_up(num_slots, vb) // vb, EBLK)
+            return smem_table_bytes(n_chunks, t_max, wl_cells)
+        if footprint(vblk) > smem_budget_bytes:
+            vblk0 = vblk
+            while footprint(vblk) > smem_budget_bytes and vblk < v_pad:
+                vblk *= 2    # fewer, wider tiles: halves the t_max rows
+            warnings.warn(
+                f"fused-kernel scalar-prefetch tables ({n_chunks} chunks, "
+                f"wl_cells={wl_cells}) exceed smem_budget_bytes="
+                f"{smem_budget_bytes} at vblk={vblk0}; widened to "
+                f"vblk={vblk} ({footprint(vblk)} table bytes)"
+                + ("" if footprint(vblk) <= smem_budget_bytes else
+                   " — still over budget: the chunk tables themselves "
+                   "outgrow SMEM and belong in an HBM side table "
+                   "(ROADMAP)"),
+                stacklevel=2)
+        info["vblk"] = vblk
+        info["smem_table_bytes"] = footprint(vblk)
+    return ("tiled", vblk, info) if return_info else ("tiled", vblk)
 
 
 def _lane_pad(q: int, interpret: bool, lane_tile=None) -> int:
@@ -255,22 +356,36 @@ def _kernel(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
         _bump_dbg(dbg_ref, 0)        # pinned: no manual value-tile DMAs
 
 
-def _seg_accumulate(out_ref, msg, local, kind, identity):
-    """Accumulate (EBLK,) messages into the (SBLK,) out block."""
+def _seg_contrib(msg, local, kind, identity, dtype):
+    """(SBLK,) block contribution of (EBLK,) messages (one grid cell)."""
     cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
     hit = local[:, None] == cols                 # (EBLK, SBLK)
     if kind == "sum":
         # one-hot matmul -> MXU systolic reduction
-        contrib = jnp.dot(
+        return jnp.dot(
             hit.astype(msg.dtype).T, msg,
             preferred_element_type=jnp.float32,
-        ).astype(out_ref.dtype)
+        ).astype(dtype)
+    padded = jnp.where(hit, msg[:, None],
+                       jnp.asarray(identity, msg.dtype))
+    return jnp.min(padded, axis=0)               # VPU reduction over edges
+
+
+def _accumulate_block(out_ref, contrib, kind):
+    """Combine a cell contribution into the out block (the worklist
+    kernels' per-cell partial blocks carry a leading singleton)."""
+    contrib = contrib.reshape(out_ref.shape)
+    if kind == "sum":
         out_ref[...] += contrib
     else:
-        padded = jnp.where(hit, msg[:, None],
-                           jnp.asarray(identity, msg.dtype))
-        contrib = jnp.min(padded, axis=0)        # VPU reduction over edges
         out_ref[...] = jnp.minimum(out_ref[...], contrib)
+
+
+def _seg_accumulate(out_ref, msg, local, kind, identity):
+    """Accumulate (EBLK,) messages into the (SBLK,) out block."""
+    _accumulate_block(
+        out_ref, _seg_contrib(msg, local, kind, identity, out_ref.dtype),
+        kind)
 
 
 def _kernel_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
@@ -320,29 +435,33 @@ def _lane_msgs(relax_kind, src_val, w, mask, unitw, identity):
                      jnp.asarray(identity, msg.dtype))
 
 
-def _lane_accumulate(out_ref, msg, local, kind, identity):
-    """Accumulate (EBLK, Q) messages into the (SBLK, Q) out block."""
+def _lane_contrib(msg, local, kind, identity, dtype):
+    """(SBLK, Q) block contribution of (EBLK, Q) messages."""
     cols = jax.lax.broadcasted_iota(jnp.int32, (EBLK, SBLK), 1)
     hit = local[:, None] == cols                 # (EBLK, SBLK)
     if kind == "sum":
         # one-hot matmul -> (SBLK, Q) MXU systolic reduction
-        contrib = jnp.dot(
+        return jnp.dot(
             hit.astype(msg.dtype).T, msg,
             preferred_element_type=jnp.float32,
-        ).astype(out_ref.dtype)
-        out_ref[...] += contrib
-    else:
-        # statically unrolled per-lane loop: peak in-cell memory stays
-        # (EBLK, SBLK) regardless of Q — a broadcast hit[:, :, None]
-        # against msg would materialize an (EBLK, SBLK, Q) intermediate
-        # per grid cell, which cannot fit VMEM for real batch widths
-        contribs = []
-        for lq in range(msg.shape[1]):
-            padded = jnp.where(hit, msg[:, lq][:, None],
-                               jnp.asarray(identity, msg.dtype))
-            contribs.append(jnp.min(padded, axis=0))  # (SBLK,) VPU
-        contrib = jnp.stack(contribs, axis=-1)        # (SBLK, Q)
-        out_ref[...] = jnp.minimum(out_ref[...], contrib)
+        ).astype(dtype)
+    # statically unrolled per-lane loop: peak in-cell memory stays
+    # (EBLK, SBLK) regardless of Q — a broadcast hit[:, :, None]
+    # against msg would materialize an (EBLK, SBLK, Q) intermediate
+    # per grid cell, which cannot fit VMEM for real batch widths
+    contribs = []
+    for lq in range(msg.shape[1]):
+        padded = jnp.where(hit, msg[:, lq][:, None],
+                           jnp.asarray(identity, msg.dtype))
+        contribs.append(jnp.min(padded, axis=0))  # (SBLK,) VPU
+    return jnp.stack(contribs, axis=-1)           # (SBLK, Q)
+
+
+def _lane_accumulate(out_ref, msg, local, kind, identity):
+    """Accumulate (EBLK, Q) messages into the (SBLK, Q) out block."""
+    _accumulate_block(
+        out_ref, _lane_contrib(msg, local, kind, identity, out_ref.dtype),
+        kind)
 
 
 # --------------------------------------------------------------------------
@@ -479,6 +598,190 @@ def _kernel_tiled_lanes(chunk_lo_ref, chunk_hi_ref, chunk_act_ref,
 
 
 # --------------------------------------------------------------------------
+# kernel bodies — worklist twins (1-D grid over live (i, j) cell pairs)
+# --------------------------------------------------------------------------
+#
+# Every worklist cell writes its own (1, SBLK[, Q]) partial block — the
+# launch's out is (l_pad, SBLK[, Q]) and a host-side scatter-combine by
+# ``wl_i`` folds the partials into the inbox (see ``_scatter_partials``).
+# Cells past ``nlive`` (the pad) and dead cells emit the combine
+# identity, which the scatter absorbs — no first-visit bookkeeping, no
+# out-block revisiting, and the 1-D grid is exactly as long as the
+# padded live count.
+
+
+def _kernel_wl(wl_i_ref, wl_j_ref, nlive_ref,
+               ids_ref, src_ref, w_ref, mask_ref, gval_ref,
+               out_ref, *extras, relax_kind, kind):
+    """Pinned worklist cell: cell ``c`` works edge chunk ``wl_j[c]``
+    against segment block ``wl_i[c]``; the full value table rides in."""
+    dbg_ref, _ = _split_dbg(extras)
+    c = pl.program_id(0)
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, c, 0)
+    out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    @pl.when(c < nlive_ref[0])
+    def _compute():
+        seg0 = wl_i_ref[c] * SBLK
+        src_val = jnp.take(gval_ref[...], src_ref[...])
+        msg = _relax(relax_kind, src_val, w_ref[...])
+        msg = jnp.where(mask_ref[...] > 0, msg,
+                        jnp.asarray(identity, msg.dtype))
+        _accumulate_block(
+            out_ref,
+            _seg_contrib(msg, ids_ref[...] - seg0, kind, identity,
+                         out_ref.dtype),
+            kind)
+        _bump_dbg(dbg_ref, 0)        # pinned: no manual value-tile DMAs
+
+
+def _kernel_wl_lanes(wl_i_ref, wl_j_ref, nlive_ref,
+                     ids_ref, src_ref, w_ref, mask_ref, unitw_ref,
+                     gval_ref, out_ref, *extras, relax_kind, kind):
+    dbg_ref, _ = _split_dbg(extras)
+    c = pl.program_id(0)
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, c, 0)
+    out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    @pl.when(c < nlive_ref[0])
+    def _compute():
+        seg0 = wl_i_ref[c] * SBLK
+        src_val = jnp.take(gval_ref[...], src_ref[...], axis=0)  # (EBLK, Q)
+        msg = _lane_msgs(relax_kind, src_val, w_ref[...], mask_ref[...],
+                         unitw_ref[...], identity)
+        _accumulate_block(
+            out_ref,
+            _lane_contrib(msg, ids_ref[...] - seg0, kind, identity,
+                          out_ref.dtype),
+            kind)
+        _bump_dbg(dbg_ref, 0)
+
+
+def _wl_tile_loop(c, n, cell_tile_ref, cell_slot_ref, cell_fetch_ref,
+                  gval_hbm, scratch, sem, vblk, tile_fn, t_max):
+    """Worklist DMA loop: the planner pre-assigned each of this cell's
+    ``n`` tiles a scratch slot and a fetch flag (0 = the tile is still
+    resident from an earlier cell of the same edge chunk — the j-major
+    reuse), so the kernel only issues the DMAs the host planned.  Tile
+    t+1's fetch overlaps tile t's relax+reduce: the planner alternates
+    fetch slots (a fetched tile never lands in the slot the previous
+    tile is being read from), which keeps the prefetch safe.  Returns
+    the number of DMAs issued (the ``with_debug`` counter)."""
+    laned = len(gval_hbm.shape) == 2
+
+    def get_dma(t):
+        slot = cell_slot_ref[c, t]
+        rows = pl.ds(cell_tile_ref[c, t] * vblk, vblk)
+        src = gval_hbm.at[rows, :] if laned else gval_hbm.at[rows]
+        return pltpu.make_async_copy(src, scratch.at[slot], sem.at[slot])
+
+    @pl.when((n >= 1) & (cell_fetch_ref[c, 0] > 0))
+    def _warmup():
+        get_dma(0).start()
+
+    def body(t, dmas):
+        # t + 1 is clamped for the table read only; the (t + 1 < n)
+        # predicate keeps the clamped duplicate from ever fetching
+        t1 = jnp.minimum(t + 1, t_max - 1)
+
+        @pl.when((t + 1 < n) & (cell_fetch_ref[c, t1] > 0))
+        def _prefetch():
+            get_dma(t1).start()
+
+        @pl.when(cell_fetch_ref[c, t] > 0)
+        def _wait():
+            get_dma(t).wait()
+
+        tile_fn(cell_slot_ref[c, t], cell_tile_ref[c, t])
+        return dmas + cell_fetch_ref[c, t]
+
+    return jax.lax.fori_loop(0, n, body, 0)
+
+
+def _kernel_wl_tiled(wl_i_ref, wl_j_ref, nlive_ref, cell_ntiles_ref,
+                     cell_tile_ref, cell_slot_ref, cell_fetch_ref,
+                     ids_ref, src_ref, w_ref, mask_ref, gval_hbm,
+                     out_ref, *extras, relax_kind, kind, vblk, t_max):
+    """Tiled worklist cell: only the tiles of frontier-active sources
+    whose edge lands in THIS cell's dst block (the per-cell dst-range
+    filter) ride the DMA, and tiles resident from the previous same-
+    chunk cell are reused instead of re-fetched."""
+    dbg_ref, (scratch, sem) = _split_dbg(extras)
+    c = pl.program_id(0)
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, c, 0)
+    out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    @pl.when(c < nlive_ref[0])
+    def _compute():
+        n = cell_ntiles_ref[c]
+        seg0 = wl_i_ref[c] * SBLK
+        src = src_ref[...]
+        w = w_ref[...]
+        msk = mask_ref[...]
+        local = ids_ref[...] - seg0
+
+        def tile_fn(slot, tile):
+            loc = src - tile * vblk
+            in_tile = (loc >= 0) & (loc < vblk)
+            sval = jnp.take(scratch[slot], jnp.where(in_tile, loc, 0))
+            msg = _relax(relax_kind, sval, w)
+            msg = jnp.where((msk > 0) & in_tile, msg,
+                            jnp.asarray(identity, msg.dtype))
+            _accumulate_block(
+                out_ref,
+                _seg_contrib(msg, local, kind, identity, out_ref.dtype),
+                kind)
+
+        dmas = _wl_tile_loop(c, n, cell_tile_ref, cell_slot_ref,
+                             cell_fetch_ref, gval_hbm, scratch, sem, vblk,
+                             tile_fn, t_max)
+        _bump_dbg(dbg_ref, dmas)
+
+
+def _kernel_wl_tiled_lanes(wl_i_ref, wl_j_ref, nlive_ref, cell_ntiles_ref,
+                           cell_tile_ref, cell_slot_ref, cell_fetch_ref,
+                           ids_ref, src_ref, w_ref, mask_ref, unitw_ref,
+                           gval_hbm, out_ref, *extras, relax_kind, kind,
+                           vblk, t_max):
+    dbg_ref, (scratch, sem) = _split_dbg(extras)
+    c = pl.program_id(0)
+    identity = jnp.inf if kind == "min" else 0.0
+    _init_dbg(dbg_ref, c, 0)
+    out_ref[...] = jnp.full(out_ref.shape, identity, out_ref.dtype)
+
+    @pl.when(c < nlive_ref[0])
+    def _compute():
+        n = cell_ntiles_ref[c]
+        seg0 = wl_i_ref[c] * SBLK
+        src = src_ref[...]
+        w = w_ref[...]
+        msk = mask_ref[...]
+        unitw = unitw_ref[...]
+        local = ids_ref[...] - seg0
+
+        def tile_fn(slot, tile):
+            loc = src - tile * vblk
+            in_tile = (loc >= 0) & (loc < vblk)
+            sval = jnp.take(scratch[slot], jnp.where(in_tile, loc, 0),
+                            axis=0)              # (EBLK, Q)
+            msg = _lane_msgs(relax_kind, sval, w,
+                             msk * in_tile.astype(msk.dtype), unitw,
+                             identity)
+            _accumulate_block(
+                out_ref,
+                _lane_contrib(msg, local, kind, identity, out_ref.dtype),
+                kind)
+
+        dmas = _wl_tile_loop(c, n, cell_tile_ref, cell_slot_ref,
+                             cell_fetch_ref, gval_hbm, scratch, sem, vblk,
+                             tile_fn, t_max)
+        _bump_dbg(dbg_ref, dmas)
+
+
+# --------------------------------------------------------------------------
 # scalar-prefetch table builders
 # --------------------------------------------------------------------------
 
@@ -550,6 +853,260 @@ def _chunk_tables_lanes(ids_p, src_p, mask_i, gchg_iq):
     chunk_act = src_act.max(axis=(1, 2)).astype(jnp.int32)
     return (chunk_lo, chunk_hi, chunk_act, src_act.sum(axis=(0, 1)),
             src_act.max(axis=2))
+
+
+# --------------------------------------------------------------------------
+# worklist planning (host side)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class Worklist:
+    """A planned sparse launch: the live (i, j) cell list plus, for the
+    tiled path, the per-cell dst-filtered tile/slot/fetch schedule.
+
+    Registered as a pytree so drivers can pass a fresh per-round plan
+    through one jitted round function — the arrays are leaves (jit
+    retraces only when the padded length bucket changes), the residency
+    decision (``path``/``vblk``) is static aux data.  ``nlive`` rides as
+    a (1,) int32 array for the same reason."""
+
+    def __init__(self, wl_i, wl_j, nlive, cell_ntiles=None, cell_tile=None,
+                 cell_slot=None, cell_fetch=None, *, path="pinned",
+                 vblk=None):
+        self.wl_i = wl_i
+        self.wl_j = wl_j
+        self.nlive = nlive
+        self.cell_ntiles = cell_ntiles
+        self.cell_tile = cell_tile
+        self.cell_slot = cell_slot
+        self.cell_fetch = cell_fetch
+        self.path = path
+        self.vblk = vblk
+
+    @property
+    def l_pad(self) -> int:
+        return self.wl_i.shape[0]
+
+    def tree_flatten(self):
+        return ((self.wl_i, self.wl_j, self.nlive, self.cell_ntiles,
+                 self.cell_tile, self.cell_slot, self.cell_fetch),
+                (self.path, self.vblk))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        path, vblk = aux
+        return cls(*children, path=path, vblk=vblk)
+
+
+class WorklistInfo(typing.NamedTuple):
+    """Host-side accounting of one plan (the ``fused_grid_cells`` mirror
+    for worklist launches; never crosses into jit)."""
+
+    cells: int           # live cells after the dst-range empty-cell drop
+    launched: int        # padded 1-D grid length
+    dense_live: int      # what the dense grid's two-level skip would run
+    tile_dmas: int       # DMAs the 2-slot reuse schedule actually issues
+    tile_needed: int     # tile visits before reuse (the no-reuse count)
+    dma_bytes: int
+    smem_table_bytes: int
+
+
+def _wl_pad_len(nlive: int, pad_to: int = WL_PAD) -> int:
+    return max(pad_to, 1 << max(nlive - 1, 0).bit_length())
+
+
+class WorklistPlanner:
+    """Precomputes the frontier-independent parts of worklist planning
+    for one launch shape (one edge set + segment count [+ vblk]), so
+    per-round plans only pay the frontier-dependent work.
+
+    ``edge_dst``/``edge_mask``/``edge_src`` may be (S, E_max) stacked or
+    flat — flattened exactly as the kernels flatten them; ``num_slots``
+    (the value-table height) sizes the slot tiling when ``vblk`` is
+    given.  ``plan(gchg)`` returns (Worklist, WorklistInfo); for laned
+    launches pass the OR-across-lanes frontier."""
+
+    def __init__(self, edge_dst, edge_mask, edge_src, num_segments: int,
+                 *, num_slots: int | None = None, path: str = "pinned",
+                 vblk: int | None = None, lane_width: int = 1,
+                 smem_budget_bytes: int | None = None):
+        ids = np.asarray(edge_dst).reshape(-1)
+        mask = np.asarray(edge_mask).reshape(-1)
+        srcs = np.asarray(edge_src).reshape(-1)
+        e = ids.shape[0]
+        e_pad = _round_up(e, EBLK)
+        self.num_segments = int(num_segments)
+        self.s_pad = _round_up(num_segments, SBLK)
+        self.n_i = self.s_pad // SBLK
+        self.n_chunks = e_pad // EBLK
+        self.path = path
+        self.vblk = int(vblk) if vblk is not None else None
+        self.lane_width = int(lane_width)
+        self.smem_budget_bytes = smem_budget_bytes
+        self._smem_warned = False
+
+        idc = np.zeros(e_pad, np.int64)
+        idc[:e] = ids
+        mkc = np.zeros(e_pad, bool)
+        mkc[:e] = mask
+        srcc = np.zeros(e_pad, np.int64)
+        srcc[:e] = srcs
+        self.ids = idc.reshape(self.n_chunks, EBLK)
+        self.mask = mkc.reshape(self.n_chunks, EBLK)
+        self.srcs = srcc.reshape(self.n_chunks, EBLK)
+        lo = np.where(self.mask, self.ids, np.iinfo(np.int64).max).min(axis=1)
+        hi = np.where(self.mask, self.ids, -1).max(axis=1)
+        seg0 = np.arange(self.n_i)[:, None] * SBLK
+        self.intersects = (hi[None, :] >= seg0) & (lo[None, :] < seg0 + SBLK)
+        self.blk_of = self.ids // SBLK           # dst block of each edge
+        if self.path == "tiled":
+            if self.vblk is None:
+                raise ValueError("tiled worklist planning needs vblk")
+            v_pad = _round_up(num_slots if num_slots is not None
+                              else int(srcc.max(initial=0)) + 1, self.vblk)
+            self.n_tiles = v_pad // self.vblk
+            self.t_max = min(self.n_tiles, EBLK)
+            self.tile_of = self.srcs // self.vblk
+        else:
+            self.t_max = 0
+
+    @property
+    def total_cells(self) -> int:
+        return self.n_i * self.n_chunks
+
+    def _live_map(self, gchg):
+        gchg = np.asarray(gchg).reshape(-1)
+        act = self.mask & gchg[self.srcs]        # (n_chunks, EBLK)
+        live = self.intersects & act.any(axis=1)[None, :]
+        return act, live
+
+    def live_fraction(self, gchg) -> float:
+        """Fraction of the dense grid the two-level skip would execute —
+        the signal ``grid_mode='auto'`` keys the dense/worklist choice on."""
+        _, live = self._live_map(gchg)
+        return live.sum() / max(self.total_cells, 1)
+
+    def plan(self, gchg, pad_to: int = WL_PAD, dst_filter: bool = True,
+             max_live_fraction: float | None = None):
+        """Plan one round's launch from the (V,) bool frontier.
+
+        j-major cell order (j outer, i inner); with ``dst_filter`` a
+        cell keeps only tiles of active sources whose edge's dst falls
+        in its block — cells left tileless contribute nothing and are
+        dropped.  Tile DMAs are scheduled against a 2-slot resident
+        model (fetches alternate slots; a needed tile already resident
+        is reused), exactly what ``_wl_tile_loop`` executes.
+
+        ``max_live_fraction`` implements 'auto' cheaply: when the dense
+        grid's live fraction is at/above it, return (None, None) BEFORE
+        any per-cell work — a dense frontier gains nothing from the 1-D
+        launch, and skipping here also skips the planner's per-cell
+        cost, which is what degenerates on full frontiers.  Plans whose
+        scalar-prefetch tables exceed ``smem_budget_bytes`` warn once
+        per planner (the per-round cell count is frontier-dependent, so
+        only the plan itself can price the worklist tables —
+        ``select_kernel_path`` guards the static chunk/tile tables)."""
+        act, live = self._live_map(gchg)
+        dense_live = int(live.sum())
+        if max_live_fraction is not None \
+                and dense_live / max(self.total_cells, 1) \
+                >= max_live_fraction:
+            return None, None
+        jj, ii = np.nonzero(live.T)              # j-major: sorted by j, then i
+        if dst_filter:
+            # per-cell active-and-in-block edge mask; a cell with no such
+            # edge contributes only the identity — drop it outright
+            sel = act[jj] & (self.blk_of[jj] == ii[:, None])
+            keep = sel.any(axis=1)
+            jj, ii, sel = jj[keep], ii[keep], sel[keep]
+        else:
+            sel = act[jj]
+        nlive = int(ii.shape[0])
+        l_pad = _wl_pad_len(nlive, pad_to)
+        wl_i = np.zeros(l_pad, np.int32)
+        wl_j = np.zeros(l_pad, np.int32)
+        wl_i[:nlive] = ii
+        wl_j[:nlive] = jj
+        nlive_arr = np.asarray([nlive], np.int32)
+
+        if self.path != "tiled":
+            wl = Worklist(wl_i, wl_j, nlive_arr, path="pinned")
+            info = WorklistInfo(
+                cells=nlive, launched=l_pad, dense_live=dense_live,
+                tile_dmas=0, tile_needed=0, dma_bytes=0,
+                smem_table_bytes=smem_table_bytes(self.n_chunks, 0, l_pad))
+            return wl, self._check_smem(info)
+
+        t_max = self.t_max
+        cell_ntiles = np.zeros(l_pad, np.int32)
+        cell_tile = np.zeros((l_pad, t_max), np.int32)
+        cell_slot = np.zeros((l_pad, t_max), np.int32)
+        cell_fetch = np.zeros((l_pad, t_max), np.int32)
+        # vectorized per-cell distinct-tile extraction: in-row sort with
+        # an out-of-range sentinel on filtered edges + first-occurrence
+        # flags (the _chunk_tile_tables trick, one row per live CELL) —
+        # only the inherently-sequential 2-slot schedule loops in Python
+        t = np.sort(np.where(sel, self.tile_of[jj], self.n_tiles), axis=1)
+        first = np.concatenate(
+            [np.ones((nlive, 1), bool), t[:, 1:] != t[:, :-1]], axis=1)
+        is_tile = first & (t < self.n_tiles)
+        cell_ntiles[:nlive] = is_tile.sum(axis=1)
+        resident = [-1, -1]                      # the kernel's 2-slot scratch
+        prev_slot = 1                            # first fetch lands in slot 0
+        fetches = needed = 0
+        for c in range(nlive):
+            tiles = t[c][is_tile[c]]             # distinct, ascending
+            needed += tiles.shape[0]
+            for k, tile in enumerate(tiles):
+                if tile == resident[0]:
+                    slot, fetch = 0, 0
+                elif tile == resident[1]:
+                    slot, fetch = 1, 0
+                else:
+                    slot, fetch = 1 - prev_slot, 1
+                    resident[slot] = tile
+                    fetches += 1
+                cell_tile[c, k] = tile
+                cell_slot[c, k] = slot
+                cell_fetch[c, k] = fetch
+                prev_slot = slot
+        wl = Worklist(wl_i, wl_j, nlive_arr, cell_ntiles, cell_tile,
+                      cell_slot, cell_fetch, path="tiled", vblk=self.vblk)
+        info = WorklistInfo(
+            cells=nlive, launched=l_pad, dense_live=dense_live,
+            tile_dmas=fetches, tile_needed=needed,
+            dma_bytes=fetches * self.vblk * self.lane_width * 4,
+            smem_table_bytes=smem_table_bytes(self.n_chunks, t_max, l_pad))
+        return wl, self._check_smem(info)
+
+    def _check_smem(self, info: WorklistInfo) -> WorklistInfo:
+        if self.smem_budget_bytes is not None and not self._smem_warned \
+                and info.smem_table_bytes > self.smem_budget_bytes:
+            self._smem_warned = True
+            warnings.warn(
+                f"worklist scalar-prefetch tables ({info.launched} cells, "
+                f"{self.n_chunks} chunks, t_max={self.t_max}) weigh "
+                f"{info.smem_table_bytes} bytes — over smem_budget_bytes="
+                f"{self.smem_budget_bytes}; prefer grid_mode='auto' (dense "
+                "frontiers keep the dense grid) or a wider vblk",
+                stacklevel=3)
+        return info
+
+
+def plan_worklist(edge_dst, edge_mask, edge_src, gchg, num_segments: int,
+                  *, num_slots=None, path="pinned", vblk=None,
+                  lane_width: int = 1, pad_to: int = WL_PAD,
+                  dst_filter: bool = True):
+    """One-shot worklist plan (see ``WorklistPlanner`` for the reusable
+    form drivers amortize across rounds).  ``gchg`` is the (V,) frontier
+    (OR across lanes for laned launches); it also sizes the slot table
+    unless ``num_slots`` overrides."""
+    if num_slots is None:
+        num_slots = np.asarray(gchg).reshape(-1).shape[0]
+    planner = WorklistPlanner(
+        edge_dst, edge_mask, edge_src, num_segments, num_slots=num_slots,
+        path=path, vblk=vblk, lane_width=lane_width)
+    return planner.plan(gchg, pad_to=pad_to, dst_filter=dst_filter)
 
 
 # --------------------------------------------------------------------------
@@ -701,12 +1258,146 @@ def _fused_tiled(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
                         with_count, with_debug)
 
 
+def _scatter_partials(partials, wl_i, n_i, kind, identity):
+    """Fold the (l_pad, SBLK[, Q]) per-cell worklist partials into the
+    (n_i, SBLK[, Q]) blocked inbox.  Dead and padded cells hold the
+    combine identity, so scattering every row is exact."""
+    init = jnp.full((n_i,) + partials.shape[1:], identity, partials.dtype)
+    if kind == "min":
+        return init.at[wl_i].min(partials)
+    return init.at[wl_i].add(partials)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug"))
+def _fused_pinned_wl(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                     wl_i, wl_j, nlive, num_segments, relax_kind, kind,
+                     interpret, with_count, with_debug):
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(gval.shape[0], 128)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    msg_count = (mask_i * jnp.take(gchg_p, src_p)).sum()
+
+    l_pad = wl_i.shape[0]
+    edge_spec = pl.BlockSpec((EBLK,), lambda c, wi, wj, nl: (wj[c],))
+    full_spec = pl.BlockSpec((v_pad,), lambda c, *sc: (0,))
+    out_spec = pl.BlockSpec((1, SBLK), lambda c, wi, wj, nl: (c, 0))
+    out_shape = jax.ShapeDtypeStruct((l_pad, SBLK), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_wl, relax_kind=relax_kind, kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(l_pad,),
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      full_spec],
+            out_specs=out_spec,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wl_i, wl_j, nlive, ids_p, src_p, w_p, mask_i, gval_p)
+
+    def slicer(partials):
+        folded = _scatter_partials(partials, wl_i, s_pad // SBLK, kind,
+                                   identity)
+        return folded.reshape(s_pad)[:num_segments]
+
+    return _pack_result(out, slicer, msg_count, with_count, with_debug)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "vblk"))
+def _fused_tiled_wl(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                    wl_i, wl_j, nlive, cell_ntiles, cell_tile, cell_slot,
+                    cell_fetch, num_segments, relax_kind, kind, interpret,
+                    with_count, with_debug, vblk):
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(gval.shape[0], vblk)   # uniform vblk-wide tiles
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    msg_count = (mask_i * jnp.take(gchg_p, src_p)).sum()
+
+    l_pad = wl_i.shape[0]
+    t_max = cell_tile.shape[1]
+    edge_spec = pl.BlockSpec((EBLK,), lambda c, wi, wj, *sc: (wj[c],))
+    out_spec = pl.BlockSpec((1, SBLK), lambda c, wi, wj, *sc: (c, 0))
+    out_shape = jax.ShapeDtypeStruct((l_pad, SBLK), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_wl_tiled, relax_kind=relax_kind,
+                          kind=kind, vblk=vblk, t_max=t_max),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=7,
+            grid=(l_pad,),
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=out_spec,
+            scratch_shapes=[pltpu.VMEM((2, vblk), gval.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wl_i, wl_j, nlive, cell_ntiles, cell_tile, cell_slot, cell_fetch,
+      ids_p, src_p, w_p, mask_i, gval_p)
+
+    def slicer(partials):
+        folded = _scatter_partials(partials, wl_i, s_pad // SBLK, kind,
+                                   identity)
+        return folded.reshape(s_pad)[:num_segments]
+
+    return _pack_result(out, slicer, msg_count, with_count, with_debug)
+
+
+def _require_concrete(x, what: str):
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError(
+            f"grid_mode='worklist' plans the launch host-side, so {what} "
+            "must be concrete — under jit, build the plan outside the "
+            "trace (WorklistPlanner.plan) and pass it via worklist=")
+
+
+def _launch_worklist(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+                     num_segments, path, vblk, lane_width=1):
+    """Concrete-input convenience: plan the worklist at launch time (the
+    differential tests drive this; round drivers pre-plan instead)."""
+    _require_concrete(gchg, "the frontier")
+    gchg_np = np.asarray(gchg)
+    if gchg_np.ndim == 2:                        # laned: OR across lanes
+        gchg_np = gchg_np.any(axis=-1)
+    wl, _ = plan_worklist(
+        np.asarray(edge_dst), np.asarray(edge_mask), np.asarray(edge_src),
+        gchg_np, num_segments, num_slots=gval.shape[0], path=path,
+        vblk=vblk, lane_width=lane_width)
+    return wl
+
+
 def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
                               edge_dst, num_segments: int, relax_kind: str,
                               kind: str, interpret: bool = True,
                               with_count: bool = False,
                               vmem_budget_bytes=None, path=None, vblk=None,
-                              with_debug: bool = False):
+                              with_debug: bool = False,
+                              grid_mode: str = "dense", worklist=None,
+                              smem_budget_bytes=None):
     """Fused gather/relax/mask/segment-reduce.
 
     gval: (V,) f32 vertex (replica-slot) values; gchg: (V,) bool changed
@@ -725,11 +1416,40 @@ def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
     against ``vmem_budget_bytes`` (pinned when the table fits, else
     HBM-tiled with per-cell double-buffered DMA); ``path``/``vblk``
     force it.  Both paths are bit-identical for min semirings.
+
+    ``grid_mode='worklist'`` (or an explicit ``worklist=`` plan) swaps
+    the dense early-exit grid for the 1-D live-cell worklist launch —
+    the launch count, and on the tiled path the dst-filtered reuse-aware
+    DMA schedule, scale with the live frontier.  Bit-identical to the
+    dense grid for min semirings (sum differs only by the partial
+    scatter's reassociation).  ``smem_budget_bytes`` arms the
+    scalar-prefetch table guard in ``select_kernel_path``.
     """
     _check_pair(relax_kind, kind)
+    e_pad = _round_up(edge_src.shape[0], EBLK)
     path, vblk = select_kernel_path(
-        gval.shape[0], 1, vmem_budget_bytes, path=path, vblk=vblk)
+        gval.shape[0], 1, vmem_budget_bytes, path=path, vblk=vblk,
+        n_chunks=e_pad // EBLK, smem_budget_bytes=smem_budget_bytes)
+    if worklist is None and grid_mode == "worklist":
+        worklist = _launch_worklist(
+            gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+            num_segments, path, vblk)
     args = (gval, gchg, edge_src, edge_w, edge_mask, edge_dst)
+    if worklist is not None:
+        wl = worklist
+        if wl.path == "pinned":
+            return _fused_pinned_wl(
+                *args, jnp.asarray(wl.wl_i), jnp.asarray(wl.wl_j),
+                jnp.asarray(wl.nlive), num_segments=num_segments,
+                relax_kind=relax_kind, kind=kind, interpret=interpret,
+                with_count=with_count, with_debug=with_debug)
+        return _fused_tiled_wl(
+            *args, jnp.asarray(wl.wl_i), jnp.asarray(wl.wl_j),
+            jnp.asarray(wl.nlive), jnp.asarray(wl.cell_ntiles),
+            jnp.asarray(wl.cell_tile), jnp.asarray(wl.cell_slot),
+            jnp.asarray(wl.cell_fetch), num_segments=num_segments,
+            relax_kind=relax_kind, kind=kind, interpret=interpret,
+            with_count=with_count, with_debug=with_debug, vblk=wl.vblk)
     if path == "pinned":
         return _fused_pinned(*args, num_segments=num_segments,
                              relax_kind=relax_kind, kind=kind,
@@ -853,6 +1573,124 @@ def _fused_lanes_tiled(gval, gchg, lane_unitw, edge_src, edge_w, edge_mask,
                         msg_counts[:q], with_count, with_debug)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "q_pad"))
+def _fused_lanes_pinned_wl(gval, gchg, lane_unitw, edge_src, edge_w,
+                           edge_mask, edge_dst, wl_i, wl_j, nlive,
+                           num_segments, relax_kind, kind, interpret,
+                           with_count, with_debug, q_pad):
+    v, q = gval.shape
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(v, 128)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad,
+                                          q_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    unitw = jnp.zeros((q_pad,), jnp.int32).at[:q].set(
+        jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+    msg_counts = (mask_i[:, None] * jnp.take(gchg_p, src_p, axis=0)) \
+        .sum(axis=0)
+
+    l_pad = wl_i.shape[0]
+    edge_spec = pl.BlockSpec((EBLK,), lambda c, wi, wj, nl: (wj[c],))
+    lane_spec = pl.BlockSpec((q_pad,), lambda c, *sc: (0,))
+    full_spec = pl.BlockSpec((v_pad, q_pad), lambda c, *sc: (0, 0))
+    out_spec = pl.BlockSpec((1, SBLK, q_pad),
+                            lambda c, wi, wj, nl: (c, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((l_pad, SBLK, q_pad), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_wl_lanes, relax_kind=relax_kind,
+                          kind=kind),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(l_pad,),
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      lane_spec, full_spec],
+            out_specs=out_spec,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wl_i, wl_j, nlive, ids_p, src_p, w_p, mask_i, unitw, gval_p)
+
+    def slicer(partials):
+        folded = _scatter_partials(partials, wl_i, s_pad // SBLK, kind,
+                                   identity)
+        return folded.reshape(s_pad, q_pad)[:num_segments, :q]
+
+    return _pack_result(out, slicer, msg_counts[:q], with_count,
+                        with_debug)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "relax_kind", "kind", "interpret",
+                     "with_count", "with_debug", "q_pad", "vblk"))
+def _fused_lanes_tiled_wl(gval, gchg, lane_unitw, edge_src, edge_w,
+                          edge_mask, edge_dst, wl_i, wl_j, nlive,
+                          cell_ntiles, cell_tile, cell_slot, cell_fetch,
+                          num_segments, relax_kind, kind, interpret,
+                          with_count, with_debug, q_pad, vblk):
+    v, q = gval.shape
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    s_pad = _round_up(num_segments, SBLK)
+    v_pad = _round_up(v, vblk)
+    identity = jnp.inf if kind == "min" else 0.0
+
+    gval_p, gchg_p = _masked_value_tables(gval, gchg, identity, v_pad,
+                                          q_pad)
+    ids_p, src_p, w_p, mask_i = _pad_edges(
+        edge_src, edge_w, edge_mask, edge_dst, e_pad)
+    unitw = jnp.zeros((q_pad,), jnp.int32).at[:q].set(
+        jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+    msg_counts = (mask_i[:, None] * jnp.take(gchg_p, src_p, axis=0)) \
+        .sum(axis=0)
+
+    l_pad = wl_i.shape[0]
+    t_max = cell_tile.shape[1]
+    edge_spec = pl.BlockSpec((EBLK,), lambda c, wi, wj, *sc: (wj[c],))
+    lane_spec = pl.BlockSpec((q_pad,), lambda c, *sc: (0,))
+    out_spec = pl.BlockSpec((1, SBLK, q_pad),
+                            lambda c, wi, wj, *sc: (c, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((l_pad, SBLK, q_pad), gval.dtype)
+    if with_debug:
+        out_spec = [out_spec, _DBG_SPEC]
+        out_shape = [out_shape, _DBG_SHAPE]
+    out = pl.pallas_call(
+        functools.partial(_kernel_wl_tiled_lanes, relax_kind=relax_kind,
+                          kind=kind, vblk=vblk, t_max=t_max),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=7,
+            grid=(l_pad,),
+            in_specs=[edge_spec, edge_spec, edge_spec, edge_spec,
+                      lane_spec, pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=out_spec,
+            scratch_shapes=[pltpu.VMEM((2, vblk, q_pad), gval.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wl_i, wl_j, nlive, cell_ntiles, cell_tile, cell_slot, cell_fetch,
+      ids_p, src_p, w_p, mask_i, unitw, gval_p)
+
+    def slicer(partials):
+        folded = _scatter_partials(partials, wl_i, s_pad // SBLK, kind,
+                                   identity)
+        return folded.reshape(s_pad, q_pad)[:num_segments, :q]
+
+    return _pack_result(out, slicer, msg_counts[:q], with_count,
+                        with_debug)
+
+
 def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
                                     edge_mask, edge_dst, num_segments: int,
                                     relax_kind: str, kind: str,
@@ -860,7 +1698,9 @@ def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
                                     with_count: bool = False,
                                     vmem_budget_bytes=None, path=None,
                                     vblk=None, lane_tile=None,
-                                    with_debug: bool = False):
+                                    with_debug: bool = False,
+                                    grid_mode: str = "dense",
+                                    worklist=None, smem_budget_bytes=None):
     """Lane-batched fused gather/relax/mask/segment-reduce (ISSUE 2).
 
     The single-query kernel grown a trailing query-lane axis ``Q``:
@@ -889,9 +1729,31 @@ def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
     _check_pair(relax_kind, kind)
     v, q = gval.shape
     q_pad = _lane_pad(q, interpret, lane_tile)
+    e_pad = _round_up(edge_src.shape[0], EBLK)
     path, vblk = select_kernel_path(
-        v, q_pad, vmem_budget_bytes, path=path, vblk=vblk)
+        v, q_pad, vmem_budget_bytes, path=path, vblk=vblk,
+        n_chunks=e_pad // EBLK, smem_budget_bytes=smem_budget_bytes)
+    if worklist is None and grid_mode == "worklist":
+        worklist = _launch_worklist(
+            gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
+            num_segments, path, vblk, lane_width=q_pad)
     args = (gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst)
+    if worklist is not None:
+        wl = worklist
+        if wl.path == "pinned":
+            return _fused_lanes_pinned_wl(
+                *args, jnp.asarray(wl.wl_i), jnp.asarray(wl.wl_j),
+                jnp.asarray(wl.nlive), num_segments=num_segments,
+                relax_kind=relax_kind, kind=kind, interpret=interpret,
+                with_count=with_count, with_debug=with_debug, q_pad=q_pad)
+        return _fused_lanes_tiled_wl(
+            *args, jnp.asarray(wl.wl_i), jnp.asarray(wl.wl_j),
+            jnp.asarray(wl.nlive), jnp.asarray(wl.cell_ntiles),
+            jnp.asarray(wl.cell_tile), jnp.asarray(wl.cell_slot),
+            jnp.asarray(wl.cell_fetch), num_segments=num_segments,
+            relax_kind=relax_kind, kind=kind, interpret=interpret,
+            with_count=with_count, with_debug=with_debug, q_pad=q_pad,
+            vblk=wl.vblk)
     if path == "pinned":
         return _fused_lanes_pinned(
             *args, num_segments=num_segments, relax_kind=relax_kind,
@@ -909,7 +1771,8 @@ def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
 
 def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
                      num_segments: int, vblk: int | None = None,
-                     lane_width: int = 1) -> dict:
+                     lane_width: int = 1, grid_mode: str = "dense",
+                     pad_to: int = WL_PAD, dst_filter: bool = True) -> dict:
     """Host-side mirror of both launch shapes for the dense exchange.
 
     ``fused_live``/``total_fused`` mirror THIS kernel's single flattened
@@ -987,4 +1850,24 @@ def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
         out["chunk_ntiles"] = ntiles.tolist()
         out["fused_tile_dmas"] = tile_dmas
         out["dma_bytes"] = tile_dmas * int(vblk) * int(lane_width) * 4
+    if grid_mode == "worklist":
+        # worklist-launch mirror: the planner is the host-side oracle —
+        # cells launched (after the dst-filter empty-cell drop) and the
+        # reuse-aware DMA schedule, matched EXACTLY by the worklist
+        # kernels' with_debug counters
+        _, info = plan_worklist(
+            edge_dst, edge_mask, edge_src, gchg, num_segments,
+            num_slots=gchg.shape[0],
+            path="tiled" if vblk is not None else "pinned", vblk=vblk,
+            lane_width=lane_width, pad_to=pad_to, dst_filter=dst_filter)
+        out["wl_cells"] = info.cells
+        out["wl_launched"] = info.launched
+        out["wl_tile_dmas"] = info.tile_dmas
+        out["wl_tile_needed"] = info.tile_needed
+        out["wl_dma_bytes"] = info.dma_bytes
+        out["smem_table_bytes"] = info.smem_table_bytes
+    elif vblk is not None:
+        out["smem_table_bytes"] = smem_table_bytes(
+            e_pad // EBLK,
+            min(_round_up(int(gchg.shape[0]), vblk) // vblk, EBLK))
     return out

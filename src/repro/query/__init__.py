@@ -1,14 +1,16 @@
 from repro.query.lanes import (
-    LaneStats, init_lane_values, make_ppr_round, make_sharded_lanes_fn,
-    make_sharded_min_round, make_sharded_ppr_round, make_stacked_lanes_fn,
-    ppr_base_table, run_ppr_lanes, run_sharded_lanes, run_stacked_lanes,
+    LaneStats, init_lane_values, make_ppr_delta_round, make_ppr_round,
+    make_sharded_lanes_fn, make_sharded_min_round, make_sharded_ppr_round,
+    make_stacked_lanes_fn, ppr_base_table, run_ppr_delta_lanes,
+    run_ppr_lanes, run_sharded_lanes, run_stacked_lanes,
 )
 from repro.query.server import QueryRequest, QueryResult, QueryServer
 
 __all__ = [
     "LaneStats", "QueryRequest", "QueryResult", "QueryServer",
-    "init_lane_values", "make_ppr_round", "make_sharded_lanes_fn",
-    "make_sharded_min_round", "make_sharded_ppr_round",
-    "make_stacked_lanes_fn", "ppr_base_table",
-    "run_ppr_lanes", "run_sharded_lanes", "run_stacked_lanes",
+    "init_lane_values", "make_ppr_delta_round", "make_ppr_round",
+    "make_sharded_lanes_fn", "make_sharded_min_round",
+    "make_sharded_ppr_round", "make_stacked_lanes_fn", "ppr_base_table",
+    "run_ppr_delta_lanes", "run_ppr_lanes", "run_sharded_lanes",
+    "run_stacked_lanes",
 ]

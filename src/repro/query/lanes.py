@@ -172,6 +172,55 @@ def make_stacked_lanes_fn(part: Partition,
     return fn
 
 
+def _lane_q_pad(q: int) -> int:
+    """Lane-PADDED width of a laned fused launch (sizes the worklist
+    planner's residency choice and DMA byte mirror)."""
+    from repro.kernels import ops as kops
+    from repro.kernels.fused_relax_reduce import _lane_pad
+    return _lane_pad(q, interpret=kops._interpret())
+
+
+def _run_stacked_lanes_hostloop(part, arrays, cfg, sem, init_val,
+                                lane_unitw, init_chg):
+    """Worklist-mode laned fixpoint: a Python round loop so the
+    OR-across-lanes frontier can plan each round's sparse launch —
+    identical values and LaneStats to the traced ``while_loop``
+    (min lanes are bit-identical)."""
+    S, R_max = part.S, part.R_max
+    q = init_val.shape[-1]
+    planner = engine.launch_planner(part, cfg, q_pad=_lane_q_pad(q))
+    vol = _volume(part, cfg)
+
+    @jax.jit
+    def round_fn(val, chg, worklist):
+        return exchange.fixpoint_round_stacked(
+            sem, arrays, cfg, S, R_max, val, chg, lane_unitw=lane_unitw,
+            worklist=worklist)
+
+    val, chg = init_val, init_chg
+    chg_h = np.asarray(chg).reshape(-1, q)   # ONE download per round
+    rounds = np.zeros(q, np.int64)
+    messages = np.zeros(q, np.int64)
+    work = np.zeros(q, np.int64)
+    exchanged = np.zeros(q, np.int64)
+    it = 0
+    while it < cfg.max_iters:
+        live = chg_h.any(axis=0)
+        if not live.any():
+            break
+        wl = engine.plan_round_worklist(planner, cfg, chg_h.any(axis=1))
+        val, chg, counts = round_fn(val, chg, wl)
+        chg_h = np.asarray(chg).reshape(-1, q)
+        rounds += live
+        messages += np.asarray(counts, np.int64)
+        work += chg_h.sum(axis=0)
+        exchanged += live.astype(np.int64) * vol
+        it += 1
+    stats = LaneStats(*(jnp.asarray(x, jnp.int32) for x in
+                        (rounds, messages, work, exchanged)))
+    return val, stats
+
+
 def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
                       cfg: EngineConfig = EngineConfig(),
                       init_changed=None, sem: Semiring = actions.SSSP):
@@ -179,7 +228,11 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
     float32 — one query per lane; ``lane_unitw`` (Q,) marks BFS-style
     lanes (relax with weight 1.0).  A lane converges when no slot of its
     column improves; the round keeps running while any lane is live.
-    Returns ((S, R_max, Q) values, per-lane ``LaneStats``)."""
+    Returns ((S, R_max, Q) values, per-lane ``LaneStats``).
+
+    Under ``cfg.grid_mode='worklist'|'auto'`` (fused only) rounds run
+    host-driven and each round's OR-across-lanes frontier plans a
+    sparse worklist launch (see ``engine.run_stacked``)."""
     init_val = jnp.asarray(init_val, jnp.float32)
     if init_val.ndim != 3:
         raise ValueError(f"init_val must be (S, R_max, Q); got "
@@ -187,7 +240,6 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
     q = init_val.shape[-1]
     lane_unitw = (jnp.zeros((q,), jnp.int32) if lane_unitw is None
                   else jnp.asarray(lane_unitw, jnp.int32).reshape(q))
-    fn = make_stacked_lanes_fn(part, cfg, sem)
     slot_valid = jnp.asarray(part.slot_vertex >= 0)
     if init_changed is not None:
         init_chg = jnp.asarray(init_changed) & slot_valid[..., None]
@@ -195,6 +247,13 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
         init_chg = sem.improved(
             init_val, jnp.full_like(init_val, sem.identity)
         ) & slot_valid[..., None]
+    if cfg.wants_worklist:
+        _check_cfg(cfg)
+        _check_min(sem)
+        arrays = DeviceArrays.from_partition(part)
+        return _run_stacked_lanes_hostloop(
+            part, arrays, cfg, sem, init_val, lane_unitw, init_chg)
+    fn = make_stacked_lanes_fn(part, cfg, sem)
     return fn(init_val, lane_unitw, init_chg)
 
 
@@ -457,6 +516,93 @@ def run_ppr_lanes(part: Partition, seeds, dampings,
         (jnp.asarray(val0), jnp.ones((q,), bool), jnp.zeros((), jnp.int32),
          _zero_stats(q)))
     return val, stats
+
+
+def make_ppr_delta_round(part: Partition,
+                         cfg: EngineConfig = EngineConfig(),
+                         arrays: DeviceArrays | None = None):
+    """Builds the jitted laned **delta-PPR** round: (rank, delta,
+    damping, tol, worklist) -> (new_rank, new_delta, new_changed,
+    (Q,) counts) — ``new_changed`` is the next round's per-lane
+    frontier, returned so the driver never recomputes (or re-downloads)
+    the (S, R_max, Q) predicate host-side.
+
+    The laned twin of ``exchange.delta_pagerank_round_stacked``: each
+    lane propagates only residual deltas above its own tolerance, so the
+    per-lane frontier — and with it the OR-across-lanes chunk skip and
+    any worklist launch — shrinks as lanes converge, instead of every
+    lane diffusing every slot every round (``make_ppr_round``)."""
+    _check_cfg(cfg)
+    if arrays is None:
+        arrays = DeviceArrays.from_partition(part)
+    S, R_max = part.S, part.R_max
+    sem = actions.PAGERANK
+    total = S * R_max
+
+    @jax.jit
+    def round_fn(rank, delta, damping, tol, worklist=None):
+        q = rank.shape[-1]
+        chg = (delta > tol[None, None, :]) & arrays.slot_valid[..., None]
+        total_in, counts = exchange.stacked_total_in(
+            sem, arrays, cfg, S, R_max, delta.reshape(total, q),
+            chg.reshape(total, q), worklist=worklist)
+        new_delta = jnp.where(arrays.slot_valid[..., None],
+                              damping[None, None, :] * total_in, 0.0)
+        new_chg = (new_delta > tol[None, None, :]) \
+            & arrays.slot_valid[..., None]
+        return rank + new_delta, new_delta, new_chg, counts
+
+    return round_fn
+
+
+def run_ppr_delta_lanes(part: Partition, seeds, dampings,
+                        cfg: EngineConfig = EngineConfig(), tol=1e-7,
+                        max_rounds: int = 256):
+    """Lane-batched delta-PPR to tolerance: like ``run_ppr_lanes`` but
+    push-based over residuals — a lane's frontier is the slots whose
+    delta still exceeds its ``tol`` (scalar broadcasts; per-lane array
+    accepted), so late rounds diffuse only the few still-hot vertices of
+    the few still-live lanes.  Host-driven (the per-lane frontier steers
+    termination and, under ``grid_mode='worklist'|'auto'``, the sparse
+    launch plan).  Returns ((S, R_max, Q) scores, ``LaneStats``)."""
+    q = len(seeds)
+    dampings = np.broadcast_to(
+        np.asarray(dampings, np.float32), (q,)).copy()
+    tols = np.broadcast_to(np.asarray(tol, np.float32), (q,)).copy()
+    base = ppr_base_table(part, seeds, dampings)
+    rank = delta = jnp.asarray(base)
+    round_fn = make_ppr_delta_round(part, cfg)
+    planner = (engine.launch_planner(part, cfg, q_pad=_lane_q_pad(q))
+               if cfg.wants_worklist else None)
+    vol = _volume(part, cfg)
+    slot_valid = np.asarray(part.slot_vertex >= 0)
+
+    rounds = np.zeros(q, np.int64)
+    messages = np.zeros(q, np.int64)
+    work = np.zeros(q, np.int64)
+    exchanged = np.zeros(q, np.int64)
+    it = 0
+    damp_j, tol_j = jnp.asarray(dampings), jnp.asarray(tols)
+    # each round returns next round's per-lane frontier — computed on
+    # device, downloaded ONCE per round for planning + accounting alike
+    chg_h = (base > tols[None, None, :]) & slot_valid[..., None]
+    while it < max_rounds:
+        live = chg_h.any(axis=(0, 1))
+        if not live.any():
+            break
+        wl = (engine.plan_round_worklist(
+            planner, cfg, chg_h.reshape(-1, q).any(axis=1))
+            if planner is not None else None)
+        rank, delta, chg, counts = round_fn(rank, delta, damp_j, tol_j, wl)
+        chg_h = np.asarray(chg)
+        rounds += live
+        messages += np.asarray(counts, np.int64)
+        work += chg_h.sum(axis=(0, 1))
+        exchanged += live.astype(np.int64) * vol
+        it += 1
+    stats = LaneStats(*(jnp.asarray(x, jnp.int32) for x in
+                        (rounds, messages, work, exchanged)))
+    return rank, stats
 
 
 # --------------------------------------------------------------------------

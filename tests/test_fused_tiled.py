@@ -16,6 +16,12 @@ Also covers the budget-based path selection (``select_kernel_path``,
 ``REPRO_VMEM_BUDGET``) and the 128-lane-tile padding regression (a Q=5
 batch padded to the full TPU lane tile is bit-identical to unpadded jnp
 lanes).
+
+ISSUE 5 extends the harness: every differential case ALSO runs the
+``grid_mode='worklist'`` twins (pinned + tiled) — values must match the
+oracle bit-identically for min kinds, and the worklist kernels'
+``with_debug`` executed-cell / issued-DMA counters must EXACTLY equal
+the ``fused_grid_cells(grid_mode='worklist')`` host mirror.
 """
 import numpy as np
 import pytest
@@ -43,6 +49,40 @@ except ImportError:                                       # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 TINY_BUDGET = 256        # bytes: forces the tiled path for every table
+
+
+def _assert_worklist_parity(gval, gchg, src, w, mask, ids, nseg, relax,
+                            kind, vblk, want, unitw=None):
+    """ISSUE-5 harness leg: the worklist twins (pinned + tiled) of this
+    case agree with the oracle (bit-identical for min) and the kernel
+    debug counters equal the host planner mirror exactly."""
+    gchg_np = np.asarray(gchg)
+    lane_width = 1
+    if gchg_np.ndim == 2:
+        gchg_np = gchg_np.any(axis=-1)
+        lane_width = FR._lane_pad(np.asarray(gval).shape[-1],
+                                  interpret=True)
+    mirror = fused_grid_cells(np.asarray(ids), np.asarray(mask),
+                              np.asarray(src), gchg_np, nseg, vblk=vblk,
+                              lane_width=lane_width, grid_mode="worklist")
+    for path, vb in (("pinned", None), ("tiled", vblk)):
+        if unitw is None:
+            got, dbg = fused_relax_reduce_pallas(
+                gval, gchg, src, w, mask, ids, nseg, relax, kind,
+                grid_mode="worklist", path=path, vblk=vb, with_debug=True)
+        else:
+            got, dbg = fused_relax_reduce_lanes_pallas(
+                gval, gchg, unitw, src, w, mask, ids, nseg, relax, kind,
+                grid_mode="worklist", path=path, vblk=vb, with_debug=True)
+        if kind == "min":
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-6)
+        assert int(dbg[0]) == mirror["wl_cells"]
+        assert int(dbg[1]) == (mirror["wl_tile_dmas"] if path == "tiled"
+                               else 0)
 
 
 def _skewed_case(v, e, nseg, frontier_frac, seed, q=None):
@@ -103,6 +143,8 @@ def test_tiled_matches_pinned_and_ref(relax, kind, v, e, nseg, vblk):
     tiled = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids, nseg,
                                       relax, kind, path="tiled", vblk=vblk)
     _assert_all_equal(kind, tiled, pinned, want)
+    _assert_worklist_parity(gval, gchg, src, w, mask, ids, nseg, relax,
+                            kind, vblk, want)
 
 
 @pytest.mark.parametrize("frontier_frac", [0.0, 0.05, 1.0])
@@ -123,6 +165,8 @@ def test_tiled_frontier_densities(frontier_frac):
         assert int(dbg[0]) == 0 and int(dbg[1]) == 0   # no cells, no DMAs
     else:
         assert int(dbg[1]) >= int(dbg[0]) > 0          # >=1 tile per cell
+    _assert_worklist_parity(gval, gchg, src, w, mask, ids, 700, "add_w",
+                            "min", 128, want)
 
 
 def test_tiled_unsorted_ids_still_correct():
@@ -161,6 +205,8 @@ if HAVE_HYPOTHESIS:
                                           path="tiled", vblk=vblk)
         np.testing.assert_array_equal(np.asarray(pinned), np.asarray(want))
         np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+        _assert_worklist_parity(gval, gchg, src, w, mask, ids, nseg,
+                                "add_w", "min", vblk, want)
 
 
 # --------------------------------------------------------------------------
@@ -185,6 +231,8 @@ def test_tiled_lanes_match_pinned_and_ref(q):
         path="tiled", vblk=128)
     np.testing.assert_array_equal(np.asarray(pinned), np.asarray(want))
     np.testing.assert_array_equal(np.asarray(tiled), np.asarray(want))
+    _assert_worklist_parity(gval, gchg, src, w, mask, ids, nseg, "add_w",
+                            "min", 128, want, unitw=unitw)
 
 
 def test_lane_padding_to_full_tile_bit_identical():
@@ -246,14 +294,20 @@ def test_engine_budget_forces_tiled_bit_identical():
     cfg_p = engine.EngineConfig(use_pallas=True)
     cfg_t = engine.EngineConfig(use_pallas=True,
                                 vmem_budget_bytes=TINY_BUDGET)
+    cfg_w = engine.EngineConfig(use_pallas=True, grid_mode="worklist",
+                                vmem_budget_bytes=TINY_BUDGET)
     for app in (bfs, sssp):
         out_j, st_j, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_j)
         out_p, st_p, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_p)
         out_t, st_t, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_t)
+        out_w, st_w, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_w)
         np.testing.assert_array_equal(out_t, out_j)
         np.testing.assert_array_equal(out_t, out_p)
+        np.testing.assert_array_equal(out_w, out_j)
         assert int(st_t.messages) == int(st_j.messages)
         assert int(st_t.iterations) == int(st_j.iterations)
+        assert int(st_w.messages) == int(st_j.messages)
+        assert int(st_w.iterations) == int(st_j.iterations)
     np.testing.assert_array_equal(
         bfs(g, root, num_shards=8, rpvo_max=4, cfg=cfg_j)[0],
         reference.bfs_levels(g, root))
@@ -297,10 +351,17 @@ def test_laned_engine_tiled_matches_jnp(exchange):
     cfg_j = engine.EngineConfig(exchange=exchange)
     cfg_t = engine.EngineConfig(exchange=exchange, use_pallas=True,
                                 vmem_budget_bytes=TINY_BUDGET)
+    cfg_w = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                grid_mode="worklist",
+                                vmem_budget_bytes=TINY_BUDGET)
     val_j, st_j = run_stacked_lanes(part, init, unitw, cfg=cfg_j)
     val_t, st_t = run_stacked_lanes(part, init, unitw, cfg=cfg_t)
+    val_w, st_w = run_stacked_lanes(part, init, unitw, cfg=cfg_w)
     np.testing.assert_array_equal(np.asarray(val_t), np.asarray(val_j))
     np.testing.assert_array_equal(np.asarray(st_t.messages),
+                                  np.asarray(st_j.messages))
+    np.testing.assert_array_equal(np.asarray(val_w), np.asarray(val_j))
+    np.testing.assert_array_equal(np.asarray(st_w.messages),
                                   np.asarray(st_j.messages))
 
 

@@ -1,0 +1,446 @@
+"""Worklist-launch differential tests (ISSUE 5 tentpole).
+
+The fused kernel's dense grid launches every (num_sblk, num_chunks) cell
+and early-exits the dead ones; ``grid_mode='worklist'`` launches a 1-D
+grid over just the live cells, with per-cell dst-filtered tile lists and
+2-slot tile reuse on the tiled path.  Every case here drives the
+worklist twins against the dense kernels and the jnp oracle — min
+semirings must agree **bit-identically**, sum up to the partial
+scatter's reassociation — and asserts the host-side planner mirror
+(``fused_grid_cells(grid_mode='worklist')``) EXACTLY equals the
+kernel-side ``with_debug`` executed-cell / issued-DMA counters.
+"""
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.apps import bfs, sssp
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators, reference
+from repro.kernels.fused_relax_reduce import (
+    EBLK, SBLK, WL_PAD, WorklistPlanner, fused_grid_cells,
+    fused_relax_reduce_lanes_pallas, fused_relax_reduce_pallas,
+    select_kernel_path, smem_table_bytes,
+)
+from repro.kernels.ref import (
+    fused_relax_reduce_lanes_ref, fused_relax_reduce_ref,
+)
+from repro.query.lanes import init_lane_values, run_stacked_lanes
+
+
+def _hub_case(v, e, nseg, frontier_frac, seed, q=None):
+    # NOT test_fused_tiled._skewed_case: sources here are drawn from a
+    # small permuted hub pool (max v//8 distinct sources), concentrating
+    # edges in few slot tiles so the per-cell dst filter and 2-slot
+    # reuse have structure to bite on
+    rng = np.random.default_rng(seed)
+    shape = (v,) if q is None else (v, q)
+    gval = rng.uniform(0.0, 10.0, shape).astype(np.float32)
+    gchg = rng.random(shape) < frontier_frac
+    src = rng.permutation(v)[rng.integers(0, max(v // 8, 1), e)] \
+        .astype(np.int32)
+    w = rng.uniform(0.1, 2.0, e).astype(np.float32)
+    mask = rng.random(e) < 0.9
+    ids = np.sort(rng.integers(0, nseg, e)).astype(np.int32)
+    return tuple(jnp.asarray(x) for x in (gval, gchg, src, w, mask, ids))
+
+
+def _wl_mirror(src, mask, ids, gchg, nseg, vblk=128, lane_width=1):
+    gchg = np.asarray(gchg)
+    if gchg.ndim == 2:
+        gchg = gchg.any(axis=-1)
+    return fused_grid_cells(np.asarray(ids), np.asarray(mask),
+                            np.asarray(src), gchg, nseg, vblk=vblk,
+                            lane_width=lane_width, grid_mode="worklist")
+
+
+# --------------------------------------------------------------------------
+# kernel-level differential: worklist == dense == ref, mirror exact
+# --------------------------------------------------------------------------
+
+WL_SHAPES = [
+    # (v, e, nseg, vblk)
+    (1, 1, 1, 128),
+    (127, 300, 50, 128),
+    (129, 300, 50, 128),
+    (257, 2 * EBLK + 13, SBLK + 5, 128),
+    (500, 3 * EBLK + 9, 2 * SBLK + 1, 128),
+    (300, 1000, 400, 256),
+]
+
+
+@pytest.mark.parametrize("relax,kind", [
+    ("add_w", "min"), ("add_one", "min"), ("mul_w", "sum")])
+@pytest.mark.parametrize("v,e,nseg,vblk", WL_SHAPES)
+def test_worklist_matches_dense_and_ref(relax, kind, v, e, nseg, vblk):
+    gval, gchg, src, w, mask, ids = _hub_case(v, e, nseg, 0.4,
+                                                 seed=v + e + nseg)
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, nseg,
+                                  relax, kind)
+    mirror = _wl_mirror(src, mask, ids, gchg, nseg, vblk=vblk)
+    wl_p, dbg_p = fused_relax_reduce_pallas(
+        gval, gchg, src, w, mask, ids, nseg, relax, kind,
+        grid_mode="worklist", path="pinned", with_debug=True)
+    wl_t, dbg_t = fused_relax_reduce_pallas(
+        gval, gchg, src, w, mask, ids, nseg, relax, kind,
+        grid_mode="worklist", path="tiled", vblk=vblk, with_debug=True)
+    if kind == "min":
+        dense = fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids,
+                                          nseg, relax, kind, path="pinned")
+        np.testing.assert_array_equal(np.asarray(wl_p), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(wl_p), np.asarray(dense))
+        np.testing.assert_array_equal(np.asarray(wl_t), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(wl_p), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(wl_t), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+    # the planner IS the launch: kernel counters must mirror it exactly
+    assert int(dbg_p[0]) == mirror["wl_cells"]
+    assert int(dbg_p[1]) == 0
+    assert int(dbg_t[0]) == mirror["wl_cells"]
+    assert int(dbg_t[1]) == mirror["wl_tile_dmas"]
+    # dst filtering can only shrink the launch; reuse only the DMAs
+    assert mirror["wl_cells"] <= mirror["fused_live"]
+    assert mirror["wl_tile_dmas"] <= mirror["wl_tile_needed"]
+    assert mirror["wl_tile_needed"] <= mirror["fused_tile_dmas"]
+    assert mirror["wl_dma_bytes"] <= mirror["dma_bytes"]
+
+
+@pytest.mark.parametrize("frontier_frac", [0.0, 0.05, 1.0])
+def test_worklist_frontier_densities(frontier_frac):
+    gval, gchg, src, w, mask, ids = _hub_case(400, 3 * EBLK + 9, 700,
+                                                 frontier_frac, seed=5)
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, 700,
+                                  "add_w", "min")
+    got, dbg = fused_relax_reduce_pallas(
+        gval, gchg, src, w, mask, ids, 700, "add_w", "min",
+        grid_mode="worklist", path="tiled", vblk=128, with_debug=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    mirror = _wl_mirror(src, mask, ids, gchg, 700)
+    if frontier_frac == 0.0:
+        # an empty frontier launches only the WL_PAD dead pad cells
+        assert mirror["wl_cells"] == 0
+        assert mirror["wl_launched"] == WL_PAD
+        assert int(dbg[0]) == 0 and int(dbg[1]) == 0
+        assert np.all(np.asarray(got) == np.inf)
+    else:
+        assert int(dbg[0]) == mirror["wl_cells"] > 0
+
+
+def test_worklist_padding_is_power_of_two_bucket():
+    gval, gchg, src, w, mask, ids = _hub_case(500, 3 * EBLK + 9,
+                                                 2 * SBLK + 1, 0.5, seed=8)
+    mirror = _wl_mirror(src, mask, ids, gchg, 2 * SBLK + 1)
+    launched = mirror["wl_launched"]
+    assert launched >= max(mirror["wl_cells"], WL_PAD)
+    assert launched & (launched - 1) == 0      # power of two
+    assert launched < 2 * max(mirror["wl_cells"], WL_PAD)
+
+
+def test_dst_filter_drops_cells_and_tiles():
+    """Multi-dst-block case where a chunk's range spans blocks but each
+    block only needs some of the chunk's tiles: the per-cell filter must
+    strictly beat the per-chunk tile lists."""
+    v, nseg = 1024, 4 * SBLK
+    # hub sources in distinct vblk tiles, each aimed at ONE dst block
+    src = np.concatenate([np.full(64, t * 128, np.int32)
+                          for t in range(8)])
+    ids = np.concatenate([np.full(64, b * SBLK, np.int32)
+                          for b in range(4)] * 2)
+    order = np.argsort(ids, kind="stable")
+    src, ids = src[order], ids[order]
+    e = src.shape[0]
+    gval = jnp.asarray(np.random.default_rng(0)
+                       .uniform(0, 10, v).astype(np.float32))
+    gchg = jnp.ones(v, bool)
+    w = jnp.ones(e, jnp.float32)
+    mask = jnp.ones(e, bool)
+    mirror = _wl_mirror(src, mask, ids, np.ones(v, bool), nseg)
+    # every (block, tile) pairing is narrower than the chunk's union
+    assert mirror["wl_tile_needed"] < mirror["fused_tile_dmas"]
+    assert mirror["wl_dma_bytes"] < mirror["dma_bytes"]
+    want = fused_relax_reduce_ref(gval, gchg, jnp.asarray(src), w, mask,
+                                  jnp.asarray(ids), nseg, "add_w", "min")
+    got, dbg = fused_relax_reduce_pallas(
+        gval, gchg, jnp.asarray(src), w, mask, jnp.asarray(ids), nseg,
+        "add_w", "min", grid_mode="worklist", path="tiled", vblk=128,
+        with_debug=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(dbg[1]) == mirror["wl_tile_dmas"]
+
+
+def test_j_major_tile_reuse_across_cells():
+    """One edge chunk spanning several dst blocks, all edges from one
+    slot tile: consecutive worklist cells share chunk j, so only the
+    FIRST cell fetches the tile — the 2-slot reuse the planner schedules
+    and the kernel executes."""
+    v, nseg = 256, 4 * SBLK
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 100, 400).astype(np.int32)    # one 128-tile
+    ids = np.sort(rng.integers(0, nseg, 400)).astype(np.int32)
+    gval = jnp.asarray(rng.uniform(0, 10, v).astype(np.float32))
+    gchg = jnp.ones(v, bool)
+    w = jnp.ones(400, jnp.float32)
+    mask = jnp.ones(400, bool)
+    mirror = _wl_mirror(src, mask, ids, np.ones(v, bool), nseg)
+    assert mirror["wl_cells"] > 1           # several dst blocks live
+    assert mirror["wl_tile_dmas"] == 1      # but the tile rides once
+    assert mirror["wl_tile_needed"] == mirror["wl_cells"]
+    got, dbg = fused_relax_reduce_pallas(
+        gval, gchg, jnp.asarray(src), w, mask, jnp.asarray(ids), nseg,
+        "add_w", "min", grid_mode="worklist", path="tiled", vblk=128,
+        with_debug=True)
+    assert int(dbg[1]) == 1
+    want = fused_relax_reduce_ref(gval, gchg, jnp.asarray(src), w, mask,
+                                  jnp.asarray(ids), nseg, "add_w", "min")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_worklist_under_tracing_requires_plan():
+    import jax
+    gval, gchg, src, w, mask, ids = _hub_case(64, 100, 40, 0.5, seed=2)
+
+    @jax.jit
+    def f(gval, gchg):
+        return fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids,
+                                         40, "add_w", "min",
+                                         grid_mode="worklist")
+
+    with pytest.raises(ValueError, match="host-side"):
+        f(gval, gchg)
+
+
+# --------------------------------------------------------------------------
+# laned worklist twins
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q", [1, 3, 128])
+def test_worklist_lanes_match_ref(q):
+    v, e, nseg = (40, 200, 60) if q == 128 else (260, 900, 300)
+    gval, gchg, src, w, mask, ids = _hub_case(v, e, nseg, 0.4,
+                                                 seed=q, q=q)
+    unitw = jnp.asarray(np.arange(q) % 2, jnp.int32)
+    want = fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask,
+                                        ids, nseg, "add_w", "min")
+    mirror = _wl_mirror(src, mask, ids, gchg, nseg)
+    for path, vblk in (("pinned", None), ("tiled", 128)):
+        got, dbg = fused_relax_reduce_lanes_pallas(
+            gval, gchg, unitw, src, w, mask, ids, nseg, "add_w", "min",
+            grid_mode="worklist", path=path, vblk=vblk, with_debug=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(dbg[0]) == mirror["wl_cells"]
+        assert int(dbg[1]) == (mirror["wl_tile_dmas"] if path == "tiled"
+                               else 0)
+
+
+def test_worklist_lanes_sum_semiring_close():
+    q = 5
+    gval, gchg, src, w, mask, ids = _hub_case(100, 400, 150, 0.6,
+                                                 seed=9, q=q)
+    unitw = jnp.zeros(q, jnp.int32)
+    want = fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask,
+                                        ids, 150, "mul_w", "sum")
+    got = fused_relax_reduce_lanes_pallas(
+        gval, gchg, unitw, src, w, mask, ids, 150, "mul_w", "sum",
+        grid_mode="worklist", path="tiled", vblk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# SMEM-footprint guard (ISSUE 5 satellite)
+# --------------------------------------------------------------------------
+
+def test_smem_table_bytes_shapes():
+    assert smem_table_bytes(10) == 10 * 3 * 4
+    assert smem_table_bytes(10, t_max=4) == (10 * 3 + 10 * 5) * 4
+    assert smem_table_bytes(10, t_max=0, wl_cells=8) == (30 + 17) * 4
+    dense_tiled = smem_table_bytes(10, t_max=4)
+    wl_tiled = smem_table_bytes(10, t_max=4, wl_cells=8)
+    assert wl_tiled == (10 * 3 + 2 * 8 + 1 + 8 * 13) * 4
+    assert wl_tiled > dense_tiled - 10 * 5 * 4   # chunk lists swap for cells
+
+
+def test_select_kernel_path_smem_guard_widens_vblk():
+    # 10k chunks of tile lists at vblk=128 overflow a 64 KiB SMEM budget;
+    # the guard must warn and widen the tile until the tables fit
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        path, vblk = select_kernel_path(
+            200_000, 1, 1024, n_chunks=10_000, smem_budget_bytes=64 * 1024)
+    assert path == "tiled" and vblk > 128
+    assert any("smem_budget_bytes" in str(w.message) for w in rec)
+    t_max = -(-200_000 // vblk)
+    assert smem_table_bytes(10_000, min(t_max, EBLK)) <= 64 * 1024 \
+        or vblk >= 200_000
+    # an ample budget leaves the decision untouched, silently
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        same = select_kernel_path(200_000, 1, 1024, n_chunks=10,
+                                  smem_budget_bytes=10**9)
+    assert same == ("tiled", 128) and not rec
+
+
+def test_select_kernel_path_returns_info():
+    path, vblk, info = select_kernel_path(
+        10_000, 1, 8192, n_chunks=100, smem_budget_bytes=10**9,
+        return_info=True)
+    assert (path, vblk) == ("tiled", 1024)
+    assert info["smem_table_bytes"] == smem_table_bytes(
+        100, min(-(-10_240 // 1024), EBLK))
+    assert fused_grid_cells(
+        np.zeros(10, np.int64), np.ones(10, bool), np.zeros(10, np.int64),
+        np.ones(16, bool), 8, vblk=128)["smem_table_bytes"] > 0
+
+
+def test_planner_warns_when_worklist_tables_exceed_smem_budget():
+    """The frontier-dependent worklist tables can only be priced at plan
+    time: a planner armed with smem_budget_bytes warns once when a
+    round's tables would overflow it."""
+    gval, gchg, src, w, mask, ids = _hub_case(300, 2 * EBLK, 400, 1.0,
+                                                 seed=4)
+    planner = WorklistPlanner(np.asarray(ids), np.asarray(mask),
+                              np.asarray(src), 400, num_slots=300,
+                              path="tiled", vblk=128,
+                              smem_budget_bytes=64)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        _, info = planner.plan(np.asarray(gchg))
+        planner.plan(np.asarray(gchg))           # warned once, not twice
+    assert info.smem_table_bytes > 64
+    assert sum("smem_budget_bytes" in str(r.message) for r in rec) == 1
+    # an unarmed planner stays silent
+    quiet = WorklistPlanner(np.asarray(ids), np.asarray(mask),
+                            np.asarray(src), 400, num_slots=300,
+                            path="tiled", vblk=128)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        quiet.plan(np.asarray(gchg))
+    assert not rec
+
+
+def test_engine_config_grid_mode_validation():
+    with pytest.raises(ValueError, match="grid_mode"):
+        engine.EngineConfig(grid_mode="sparse")
+    with pytest.raises(ValueError, match="smem_budget_bytes"):
+        engine.EngineConfig(smem_budget_bytes=0)
+    assert not engine.EngineConfig(grid_mode="worklist").wants_worklist
+    assert engine.EngineConfig(grid_mode="worklist",
+                               use_pallas=True).wants_worklist
+
+
+# --------------------------------------------------------------------------
+# engine-level: host-driven worklist rounds == traced dense rounds
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange", ["dense", "compact"])
+def test_engine_worklist_matches_dense(exchange):
+    g = generators.ba_skewed(260, m_per=4, seed=9).with_random_weights(
+        seed=9)
+    root = int(np.argmax(g.out_degrees()))
+    cfg_d = engine.EngineConfig(exchange=exchange, use_pallas=True)
+    cfg_w = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                grid_mode="worklist")
+    cfg_a = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                grid_mode="auto")
+    for app in (bfs, sssp):
+        out_d, st_d, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_d)
+        for cfg in (cfg_w, cfg_a):
+            out_w, st_w, _ = app(g, root, num_shards=8, rpvo_max=4,
+                                 cfg=cfg)
+            np.testing.assert_array_equal(out_w, out_d)
+            assert int(st_w.messages) == int(st_d.messages)
+            assert int(st_w.iterations) == int(st_d.iterations)
+            assert int(st_w.work_actions) == int(st_d.work_actions)
+    np.testing.assert_array_equal(
+        bfs(g, root, num_shards=8, rpvo_max=4, cfg=cfg_w)[0],
+        reference.bfs_levels(g, root))
+
+
+def test_engine_worklist_tiled_budget_forced():
+    """worklist × tiled composition: the slot table over the VMEM budget
+    AND the sparse launch, bit-identical to the jnp path."""
+    g = generators.ba_skewed(260, m_per=4, seed=9).with_random_weights(
+        seed=9)
+    root = int(np.argmax(g.out_degrees()))
+    cfg_j = engine.EngineConfig()
+    cfg_wt = engine.EngineConfig(use_pallas=True, grid_mode="worklist",
+                                 vmem_budget_bytes=256)
+    for app in (bfs, sssp):
+        out_j, st_j, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_j)
+        out_w, st_w, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_wt)
+        np.testing.assert_array_equal(out_w, out_j)
+        assert int(st_w.messages) == int(st_j.messages)
+
+
+def test_worklist_launches_track_frontier_on_ring():
+    """BFS on a ring: one live vertex per round, so every round's
+    worklist is a handful of cells while the dense grid stays fixed —
+    the ISSUE-5 acceptance shape (4 cells vs 96)."""
+    g = generators.ring(4 * EBLK)
+    part = build_partition(g, PartitionConfig(num_shards=4, rpvo_max=1))
+    sem = actions.BFS
+    arrays = engine.DeviceArrays.from_partition(part)
+    init = engine.init_values(part, sem, {0: 0.0})
+    val = jnp.asarray(init)
+    chg = sem.improved(val, jnp.full_like(val, sem.identity)) \
+        & arrays.slot_valid
+    cfg = engine.EngineConfig(use_pallas=True, grid_mode="worklist")
+    planner = engine.launch_planner(part, cfg)
+    total = part.S * part.R_max
+    for _ in range(6):
+        gchg = np.asarray(chg).reshape(-1)
+        wl, info = planner.plan(gchg)
+        mirror = fused_grid_cells(part.edge_dst_flat, part.edge_mask,
+                                  part.edge_src_root_flat, gchg, total)
+        assert info.cells <= mirror["fused_live"]
+        assert info.launched <= max(2 * max(info.cells, 1), WL_PAD)
+        assert info.launched < mirror["total_fused"] or \
+            mirror["total_fused"] <= WL_PAD
+        val, chg, _ = engine._fixpoint_round_stacked(
+            sem, arrays, cfg, part.S, part.R_max, val, chg, worklist=wl)
+    # deep in the ring walk the frontier is ONE vertex: a worklist of a
+    # couple of cells vs the dense grid's full launch
+    assert info.cells <= 4
+
+
+@pytest.mark.parametrize("exchange", ["dense", "compact"])
+def test_laned_engine_worklist_matches_dense(exchange):
+    g = generators.ba_skewed(200, m_per=3, seed=4).with_random_weights(
+        seed=4)
+    part = build_partition(g, PartitionConfig(num_shards=4, rpvo_max=4))
+    init, unitw = init_lane_values(
+        part, [("bfs", 0), ("sssp", 5), ("bfs", [1, 7])])
+    cfg_d = engine.EngineConfig(exchange=exchange, use_pallas=True)
+    cfg_w = engine.EngineConfig(exchange=exchange, use_pallas=True,
+                                grid_mode="worklist")
+    val_d, st_d = run_stacked_lanes(part, init, unitw, cfg=cfg_d)
+    val_w, st_w = run_stacked_lanes(part, init, unitw, cfg=cfg_w)
+    np.testing.assert_array_equal(np.asarray(val_w), np.asarray(val_d))
+    np.testing.assert_array_equal(np.asarray(st_w.messages),
+                                  np.asarray(st_d.messages))
+    np.testing.assert_array_equal(np.asarray(st_w.rounds),
+                                  np.asarray(st_d.rounds))
+    np.testing.assert_array_equal(np.asarray(st_w.work_actions),
+                                  np.asarray(st_d.work_actions))
+
+
+def test_planner_live_fraction_and_auto_threshold():
+    gval, gchg, src, w, mask, ids = _hub_case(300, 1000, 400, 1.0,
+                                                 seed=3)
+    planner = WorklistPlanner(np.asarray(ids), np.asarray(mask),
+                              np.asarray(src), 400, num_slots=300)
+    dense_frac = planner.live_fraction(np.asarray(gchg))
+    assert 0.0 < dense_frac <= 1.0
+    assert planner.live_fraction(np.zeros(300, bool)) == 0.0
+    cfg_auto = engine.EngineConfig(use_pallas=True, grid_mode="auto")
+    # a dead frontier is maximally sparse -> auto must plan a worklist
+    assert engine.plan_round_worklist(
+        planner, cfg_auto, np.zeros(300, bool)) is not None
+    if dense_frac >= engine.WORKLIST_AUTO_THRESHOLD:
+        assert engine.plan_round_worklist(
+            planner, cfg_auto, np.asarray(gchg)) is None
