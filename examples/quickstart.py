@@ -98,7 +98,36 @@ assert (served[qids[0]].values == reference.bfs_levels(g, int(deg[0]))).all()
 print(f"QueryServer ok: {len(served)} queries on 2 lanes in {srv.tick} "
       f"round ticks, occupancy {srv.occupancy():.2f}")
 
-# 5. sparsity-proportional execution (ISSUE 5): the worklist grid mode
+# 5. overload-safe serving (ISSUE 6): the same server behind a bounded
+# admission queue with typed overload outcomes — a full queue rejects or
+# sheds (never an exception), a priority-5 request preempts the
+# lowest-priority running lane, an expired deadline evicts mid-flight
+# with partial values, a zero round budget returns the initial values
+# immediately, and repeat roots are served from the root-keyed cache.
+from repro.query import QueryStatus, ServeConfig
+
+srv = QueryServer(part, n_lanes=1, serve=ServeConfig(
+    max_queue=2, overload_policy="reject", cache_size=8, cache_ttl_s=60.0))
+q_slow = srv.submit("bfs", int(deg[0]))
+q_wait = srv.submit("sssp", int(deg[1]))           # fills the queue...
+q_over = srv.submit("bfs", int(deg[2]))            # ...typed rejection
+srv.step()                                         # q_slow takes the lane
+q_hot = srv.submit("bfs", int(deg[3]), priority=5)  # preempts q_slow
+q_zero = srv.submit("sssp", int(deg[1]), max_rounds=0)  # initial values
+served = srv.run()
+assert served[q_over].status == QueryStatus.REJECTED
+assert served[q_zero].status == QueryStatus.BUDGET_EXHAUSTED
+assert served[q_zero].partial and served[q_hot].status == QueryStatus.OK
+assert served[q_slow].preemptions == 1             # restarted, still right
+assert (served[q_slow].values == reference.bfs_levels(g, int(deg[0]))).all()
+q_again = srv.submit("bfs", int(deg[0]))           # repeat root: cache hit
+assert srv.results[q_again].cached                 # resolved at submit
+print(f"overload-safe serving ok: statuses "
+      f"{sorted({r.status for r in served.values()})}, "
+      f"{srv.counters['cache_hits']} cache hit, "
+      f"{srv.counters['preemptions']} preemption — no exceptions")
+
+# 6. sparsity-proportional execution (ISSUE 5): the worklist grid mode
 # launches only the frontier-live kernel cells (grid_mode='auto' plans a
 # sparse launch whenever the live fraction is thin), and delta-PageRank
 # diffuses only residuals above a tolerance — the engine's diffusion

@@ -81,11 +81,20 @@ def stacked_collapse(sem: Semiring, arrays, cfg, table):
 
 
 def fixpoint_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
-                           val, chg, lane_unitw=None, worklist=None):
+                           val, chg, lane_unitw=None, worklist=None,
+                           lane_mask=None):
     """One stacked fixpoint round: relax → exchange → combine → eager
     rhizome collapse → predicate.  ``val``/``chg``: (S, R_max) or
-    (S, R_max, Q).  Returns (new val, new changed, message count)."""
+    (S, R_max, Q).  Returns (new val, new changed, message count).
+
+    ``lane_mask`` ((Q,) bool) freezes masked-off lanes for this round —
+    their frontier reads all-False (no relax work, no messages) and they
+    emit no next-round frontier, while their values carry through
+    unchanged.  This is the per-request round-budget plumbing: a lane
+    past its budget is silenced in-round instead of torn down."""
     laned = val.ndim == 3
+    if lane_mask is not None:
+        chg = chg & lane_mask[None, None, :]
     gval, gchg = _flat(val), _flat(chg)
     inbox, counts = stacked_inbox(
         sem, arrays, cfg, S, R_max, gval, gchg, lane_unitw, worklist)
@@ -94,6 +103,9 @@ def fixpoint_round_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
         cand = stacked_collapse(sem, arrays, cfg, cand)
     slot = arrays.slot_valid[..., None] if laned else arrays.slot_valid
     new_chg = sem.improved(cand, val) & slot
+    if lane_mask is not None:
+        cand = jnp.where(lane_mask[None, None, :], cand, val)
+        new_chg = new_chg & lane_mask[None, None, :]
     return cand, new_chg, counts
 
 
@@ -195,17 +207,23 @@ def shard_collapse(sem: Semiring, arrays_s, cfg, table, gather, R_max: int):
 def make_shard_fixpoint_round(sem: Semiring, arrays_s, cfg, S: int,
                               R_max: int, axis_names, lane_unitw=None):
     """Builds the per-shard fixpoint round body (runs inside shard_map):
-    (val, chg) → (new val, new changed, message count), with the same
-    collective plan for unlaned (R_max,) and laned (R_max, Q) tables —
-    value/changed ``all_gather`` (the diffusion fan-out), inbox
-    ``all_to_all``, sibling collapse over the gathered table."""
+    (val, chg[, lane_mask]) → (new val, new changed, message count), with
+    the same collective plan for unlaned (R_max,) and laned (R_max, Q)
+    tables — value/changed ``all_gather`` (the diffusion fan-out), inbox
+    ``all_to_all``, sibling collapse over the gathered table.
+
+    The optional ``lane_mask`` ((Q,) bool, replicated) is the round-budget
+    plumbing (see ``fixpoint_round_stacked``): masked-off lanes relax
+    nothing, ship nothing, and carry their values through unchanged."""
     axis_names = axis_tuple(axis_names)
 
     def gather(x):
         return lax.all_gather(x, axis_names, tiled=True)
 
-    def round_fn(val, chg):
+    def round_fn(val, chg, lane_mask=None):
         laned = val.ndim == 2
+        if lane_mask is not None:
+            chg = chg & lane_mask[None, :]
         gval, gchg = gather(val), gather(chg)
         inbox, counts = shard_inbox(
             sem, arrays_s, cfg, S, R_max, axis_names, gval, gchg,
@@ -216,6 +234,9 @@ def make_shard_fixpoint_round(sem: Semiring, arrays_s, cfg, S: int,
         slot = arrays_s.slot_valid[..., None] if laned \
             else arrays_s.slot_valid
         new_chg = sem.improved(cand, val) & slot
+        if lane_mask is not None:
+            cand = jnp.where(lane_mask[None, :], cand, val)
+            new_chg = new_chg & lane_mask[None, :]
         return cand, new_chg, counts
 
     return round_fn

@@ -1,16 +1,24 @@
 from repro.query.lanes import (
     LaneStats, init_lane_values, make_ppr_delta_round, make_ppr_round,
     make_sharded_lanes_fn, make_sharded_min_round, make_sharded_ppr_round,
-    make_stacked_lanes_fn, ppr_base_table, run_ppr_delta_lanes,
-    run_ppr_lanes, run_sharded_lanes, run_stacked_lanes,
+    make_sharded_ppr_delta_round, make_stacked_lanes_fn, ppr_base_table,
+    run_ppr_delta_lanes, run_ppr_lanes, run_sharded_lanes,
+    run_stacked_lanes,
 )
 from repro.query.server import QueryRequest, QueryResult, QueryServer
+from repro.serve.admission import (
+    AdmissionError, AdmissionQueue, FaultPlan, QueryStatus,
+    QueryValidationError, ResultCache, ServeConfig,
+)
 
 __all__ = [
-    "LaneStats", "QueryRequest", "QueryResult", "QueryServer",
+    "AdmissionError", "AdmissionQueue", "FaultPlan", "LaneStats",
+    "QueryRequest", "QueryResult", "QueryServer", "QueryStatus",
+    "QueryValidationError", "ResultCache", "ServeConfig",
     "init_lane_values", "make_ppr_delta_round", "make_ppr_round",
     "make_sharded_lanes_fn", "make_sharded_min_round",
-    "make_sharded_ppr_round", "make_stacked_lanes_fn", "ppr_base_table",
+    "make_sharded_ppr_round", "make_sharded_ppr_delta_round",
+    "make_stacked_lanes_fn", "ppr_base_table",
     "run_ppr_delta_lanes", "run_ppr_lanes", "run_sharded_lanes",
     "run_stacked_lanes",
 ]

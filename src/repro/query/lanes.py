@@ -131,11 +131,17 @@ def make_stacked_lanes_fn(part: Partition,
                           cfg: EngineConfig = EngineConfig(),
                           sem: Semiring = actions.SSSP):
     """Builds the stacked laned fixpoint as a jitted fn of ((S, R_max, Q)
-    init values, (Q,) lane_unitw, (S, R_max, Q) init changed) ->
-    (values, LaneStats).  Q is encoded in the argument shapes, so one
-    returned fn serves any lane count (jit specializes per Q).  Hold on
-    to the returned fn to amortize tracing across calls — the serving
-    loop and ``benchmarks/query_bench.py`` compile it once."""
+    init values, (Q,) lane_unitw, (S, R_max, Q) init changed[, (Q,)
+    lane_budget]) -> (values, LaneStats).  Q is encoded in the argument
+    shapes, so one returned fn serves any lane count (jit specializes per
+    Q).  Hold on to the returned fn to amortize tracing across calls —
+    the serving loop and ``benchmarks/query_bench.py`` compile it once.
+
+    ``lane_budget`` ((Q,) int32, optional) is a per-lane round budget:
+    a lane that has been live for ``budget`` rounds is frozen in-trace
+    (``exchange.fixpoint_round_stacked``'s ``lane_mask``) — its values
+    stop improving and it costs no further messages, so a pathological
+    query cannot pin the shared fixpoint past its budget."""
     _check_cfg(cfg)
     _check_min(sem)
     arrays = DeviceArrays.from_partition(part)
@@ -143,14 +149,20 @@ def make_stacked_lanes_fn(part: Partition,
     vol = _volume(part, cfg)
 
     @jax.jit
-    def fn(init_val, lane_unitw, init_chg):
+    def fn(init_val, lane_unitw, init_chg, lane_budget=None):
         q = init_val.shape[-1]
 
         def body(carry):
             val, chg, it, stats = carry
             live = chg.reshape(-1, q).any(axis=0)
-            new_val, new_chg, counts = _lane_round_stacked(
-                sem, arrays, cfg, S, R_max, lane_unitw, val, chg)
+            if lane_budget is None:
+                mask = None
+            else:
+                mask = stats.rounds < lane_budget
+                live = live & mask
+            new_val, new_chg, counts = exchange.fixpoint_round_stacked(
+                sem, arrays, cfg, S, R_max, val, chg,
+                lane_unitw=lane_unitw, lane_mask=mask)
             stats = LaneStats(
                 rounds=stats.rounds + live.astype(jnp.int32),
                 messages=stats.messages + counts,
@@ -161,8 +173,13 @@ def make_stacked_lanes_fn(part: Partition,
             return new_val, new_chg, it + 1, stats
 
         def cond(carry):
-            _, chg, it, _ = carry
-            return jnp.any(chg) & (it < cfg.max_iters)
+            _, chg, it, stats = carry
+            if lane_budget is None:
+                anyw = jnp.any(chg)
+            else:
+                anyw = jnp.any(chg.reshape(-1, q)
+                               & (stats.rounds < lane_budget)[None, :])
+            return anyw & (it < cfg.max_iters)
 
         val, chg, it, stats = lax.while_loop(
             cond, body,
@@ -181,21 +198,25 @@ def _lane_q_pad(q: int) -> int:
 
 
 def _run_stacked_lanes_hostloop(part, arrays, cfg, sem, init_val,
-                                lane_unitw, init_chg):
+                                lane_unitw, init_chg, lane_budget=None):
     """Worklist-mode laned fixpoint: a Python round loop so the
     OR-across-lanes frontier can plan each round's sparse launch —
     identical values and LaneStats to the traced ``while_loop``
-    (min lanes are bit-identical)."""
+    (min lanes are bit-identical).  ``lane_budget`` freezes a lane after
+    its budgeted round count, and the worklist planner sees the frozen
+    lane as dead (its cells stop launching)."""
     S, R_max = part.S, part.R_max
     q = init_val.shape[-1]
     planner = engine.launch_planner(part, cfg, q_pad=_lane_q_pad(q))
     vol = _volume(part, cfg)
+    budget = (None if lane_budget is None
+              else np.asarray(lane_budget, np.int64).reshape(q))
 
     @jax.jit
-    def round_fn(val, chg, worklist):
+    def round_fn(val, chg, worklist, lane_mask=None):
         return exchange.fixpoint_round_stacked(
             sem, arrays, cfg, S, R_max, val, chg, lane_unitw=lane_unitw,
-            worklist=worklist)
+            worklist=worklist, lane_mask=lane_mask)
 
     val, chg = init_val, init_chg
     chg_h = np.asarray(chg).reshape(-1, q)   # ONE download per round
@@ -205,11 +226,15 @@ def _run_stacked_lanes_hostloop(part, arrays, cfg, sem, init_val,
     exchanged = np.zeros(q, np.int64)
     it = 0
     while it < cfg.max_iters:
-        live = chg_h.any(axis=0)
+        mask = None if budget is None else rounds < budget
+        eff_chg = chg_h if mask is None else chg_h & mask[None, :]
+        live = eff_chg.any(axis=0)
         if not live.any():
             break
-        wl = engine.plan_round_worklist(planner, cfg, chg_h.any(axis=1))
-        val, chg, counts = round_fn(val, chg, wl)
+        wl = engine.plan_round_worklist(planner, cfg, eff_chg.any(axis=1))
+        val, chg, counts = round_fn(
+            val, chg, wl,
+            None if mask is None else jnp.asarray(mask))
         chg_h = np.asarray(chg).reshape(-1, q)
         rounds += live
         messages += np.asarray(counts, np.int64)
@@ -223,12 +248,18 @@ def _run_stacked_lanes_hostloop(part, arrays, cfg, sem, init_val,
 
 def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
                       cfg: EngineConfig = EngineConfig(),
-                      init_changed=None, sem: Semiring = actions.SSSP):
+                      init_changed=None, sem: Semiring = actions.SSSP,
+                      lane_budget=None):
     """Single-device lane-batched execution. ``init_val``: (S, R_max, Q)
     float32 — one query per lane; ``lane_unitw`` (Q,) marks BFS-style
     lanes (relax with weight 1.0).  A lane converges when no slot of its
     column improves; the round keeps running while any lane is live.
     Returns ((S, R_max, Q) values, per-lane ``LaneStats``).
+
+    ``lane_budget`` ((Q,) int, scalar broadcasts) caps each lane's live
+    rounds: a budget-exhausted lane freezes (partial values carried
+    through, no further cost) while other lanes run to convergence —
+    the runner-level face of the QueryServer's per-request round budget.
 
     Under ``cfg.grid_mode='worklist'|'auto'`` (fused only) rounds run
     host-driven and each round's OR-across-lanes frontier plans a
@@ -240,6 +271,9 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
     q = init_val.shape[-1]
     lane_unitw = (jnp.zeros((q,), jnp.int32) if lane_unitw is None
                   else jnp.asarray(lane_unitw, jnp.int32).reshape(q))
+    if lane_budget is not None:
+        lane_budget = jnp.broadcast_to(
+            jnp.asarray(lane_budget, jnp.int32), (q,))
     slot_valid = jnp.asarray(part.slot_vertex >= 0)
     if init_changed is not None:
         init_chg = jnp.asarray(init_changed) & slot_valid[..., None]
@@ -252,9 +286,10 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
         _check_min(sem)
         arrays = DeviceArrays.from_partition(part)
         return _run_stacked_lanes_hostloop(
-            part, arrays, cfg, sem, init_val, lane_unitw, init_chg)
+            part, arrays, cfg, sem, init_val, lane_unitw, init_chg,
+            lane_budget)
     fn = make_stacked_lanes_fn(part, cfg, sem)
-    return fn(init_val, lane_unitw, init_chg)
+    return fn(init_val, lane_unitw, init_chg, lane_budget)
 
 
 # --------------------------------------------------------------------------
@@ -472,6 +507,58 @@ def make_sharded_ppr_round(S: int, R_max: int, mesh: Mesh,
     fn = shard_map(
         shard_fn, mesh=mesh, in_specs=in_specs,
         out_specs=(spec, spec, spec), check_rep=False,
+    )
+    return jax.jit(fn), NamedSharding(mesh, spec)
+
+
+def make_sharded_ppr_delta_round(S: int, R_max: int, mesh: Mesh,
+                                 axis_names=("data", "model"),
+                                 cfg: EngineConfig = EngineConfig()):
+    """shard_map laned **delta-PPR** round: (DeviceArrays, rank, delta,
+    damping, tol) -> (new_rank, new_delta, new_changed, (Q,) psum'd
+    counts) — the sharded twin of ``make_ppr_delta_round``, closing the
+    ROADMAP leftover that the sharded PPR pool still ran full-frontier
+    rounds.  Each lane diffuses only residual deltas above its own
+    tolerance (value/frontier ``all_gather``, inbox exchange — dense or
+    compact per ``cfg.exchange`` — rhizome-collapse(+)), so the serving
+    tick's relax work shrinks as lanes converge exactly like the stacked
+    delta path.  ``new_changed`` is returned sharded so the server's
+    per-tick liveness probe never recomputes the predicate host-side."""
+    _check_cfg(cfg)
+    axis_names = exchange.axis_tuple(axis_names)
+    sem = actions.PAGERANK
+    spec = P(axis_names)
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = (
+        DeviceArrays.specs(spec),
+        spec, spec,
+        P(),                                   # damping: replicated
+        P(),                                   # tol: replicated
+    )
+
+    def shard_fn(arrays_l: DeviceArrays, rank_l, delta_l, damping, tol):
+        arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
+        rank, delta = rank_l[0], delta_l[0]    # (R_max, Q)
+
+        def gather(x):
+            return lax.all_gather(x, axis_names, tiled=True)
+
+        chg = (delta > tol[None, :]) & arrays_s.slot_valid[..., None]
+        total_in, counts = exchange.shard_total_in(
+            sem, arrays_s, cfg, S, R_max, axis_names,
+            gather(delta), gather(chg))
+        new_delta = jnp.where(arrays_s.slot_valid[..., None],
+                              damping[None, :] * total_in, 0.0)
+        new_chg = (new_delta > tol[None, :]) \
+            & arrays_s.slot_valid[..., None]
+        counts = lax.psum(counts, axis_names)
+        return ((rank + new_delta)[None], new_delta[None], new_chg[None],
+                counts[None])
+
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs,
+        out_specs=(spec, spec, spec, spec), check_rep=False,
     )
     return jax.jit(fn), NamedSharding(mesh, spec)
 

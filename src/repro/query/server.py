@@ -1,5 +1,5 @@
 """Continuous-batching graph query server (ISSUE 2 tentpole; sharded
-serving loop — ISSUE 3).
+serving loop — ISSUE 3; overload-safe serving — ISSUE 6).
 
 The graph-query analog of ``serve.scheduler.ContinuousBatcher``: a pool
 of ``Q`` query lanes shares one compiled round step per semiring class
@@ -23,6 +23,39 @@ inbox ``all_to_all`` — dense or §Perf compact targeted per
 devices.  Lane state lives sharded on the mesh; injection writes a
 column of the distributed table between rounds.
 
+The PPR pool runs **delta rounds** (``make_ppr_delta_round`` stacked,
+``make_sharded_ppr_delta_round`` on a mesh): each lane diffuses only
+residual deltas above its tolerance, so a serving tick's sum-semiring
+work shrinks with the frontier instead of touching every slot of every
+live lane.
+
+**Overload safety (ISSUE 6).**  ``ServeConfig`` wraps the batcher in the
+production-robustness layer — the serving-side analog of the
+CCA-Simulator's ``THROTTLE`` / ``ACTIONQUEUESIZE`` congestion knobs:
+
+* bounded admission queue with a backpressure policy (``'block'`` /
+  ``'reject'`` / ``'shed'`` — see ``serve.admission.AdmissionQueue``);
+* priority- and deadline-aware lane assignment: an urgent request can
+  preempt the lowest-priority running lane (strictly greater priority
+  only); an expired deadline evicts mid-flight with a partial-result
+  flag; queued requests whose deadline passes never occupy a lane;
+* per-request round budgets (``max_rounds``; zero returns immediately
+  with the initial values and a partial status) and wall-clock execution
+  timeouts (``timeout_s``) so a pathological query cannot pin a lane;
+* weighted per-tenant fairness (deficit-ordered admission, see
+  ``AdmissionQueue``) so a heavy tenant cannot starve a light one;
+* a root-keyed LRU result cache with a staleness bound for the highly
+  repetitive PPR/BFS recommendation traffic;
+* deterministic fault injection (``FaultPlan``): an induced lane failure
+  or delayed tick resolves the affected request with a typed
+  ``QueryResult.status`` — never an exception out of the serving loop.
+
+Every overload outcome is a ``QueryStatus`` string on the result.  With
+the default ``ServeConfig`` (unbounded queue, uniform priorities, no
+cache, no faults) the serving loop is trace-identical to the unpoliced
+server — the 8-device parity test in ``tests/test_exchange_unified.py``
+pins this down.
+
 The ``EngineConfig`` handed to the server also governs the fused
 kernel's value-table residency (``vmem_budget_bytes``): a served
 partition whose lane table exceeds the VMEM budget runs every pool
@@ -31,6 +64,7 @@ semantics — the continuous-batching loop never needs to know.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -44,6 +78,10 @@ from repro.core import actions, engine
 from repro.core.engine import EngineConfig
 from repro.core.partition import Partition
 from repro.query import lanes as L
+from repro.serve.admission import (
+    AdmissionError, AdmissionQueue, FaultPlan, QueryStatus,
+    QueryValidationError, ResultCache, ServeConfig,
+)
 
 MIN_KINDS = ("bfs", "sssp", "reachability")
 
@@ -55,6 +93,14 @@ class QueryRequest:
     kind: 'bfs' | 'sssp' | 'reachability' (min-pool) or 'ppr' (sum-pool).
     sources: vertex id, list of vertices (multi-source), or {vertex:
     initial value} dict; for 'ppr' a single personalization seed vertex.
+
+    Robustness fields (ISSUE 6): ``priority`` (higher = more urgent; may
+    preempt a strictly-lower-priority lane), ``tenant`` (fair-share
+    admission id), ``deadline_s`` (SLO from submit, queue wait included —
+    expiry evicts with partial values), ``timeout_s`` (wall-clock
+    execution cap from admission), ``max_rounds`` (round budget; 0
+    returns the initial values immediately).  All malformed inputs raise
+    ``QueryValidationError`` at construction — nothing reaches a lane.
     """
 
     qid: int
@@ -62,29 +108,91 @@ class QueryRequest:
     sources: object
     damping: float = 0.85        # ppr only
     tol: float = 1e-6            # ppr only
+    priority: int = 0
+    tenant: str = "default"
+    deadline_s: float | None = None
+    timeout_s: float | None = None
+    max_rounds: int | None = None
 
     def __post_init__(self):
         if self.kind not in MIN_KINDS + ("ppr",):
-            raise ValueError(f"unknown query kind {self.kind!r}")
-        if self.kind == "ppr" \
-                and np.asarray(self.sources).reshape(-1).size != 1:
-            raise ValueError(
-                "ppr takes a single personalization seed vertex; "
-                "multi-seed personalization is not supported")
+            raise QueryValidationError(
+                f"unknown query kind {self.kind!r}")
+        if isinstance(self.sources, dict):
+            n_src = len(self.sources)
+            for v, x in self.sources.items():
+                if not np.isfinite(float(x)):
+                    raise QueryValidationError(
+                        f"non-finite initial value {x!r} for source "
+                        f"vertex {v!r}")
+        elif isinstance(self.sources, (list, tuple, np.ndarray)):
+            n_src = int(np.asarray(self.sources).reshape(-1).size)
+        else:
+            n_src = 1
+        if n_src == 0:
+            raise QueryValidationError(
+                "empty sources: a query needs at least one source vertex")
+        if self.kind == "ppr":
+            if n_src != 1:
+                raise QueryValidationError(
+                    "ppr takes a single personalization seed vertex; "
+                    "multi-seed personalization is not supported")
+            d = float(self.damping)
+            if not np.isfinite(d) or not (0.0 < d < 1.0):
+                raise QueryValidationError(
+                    f"ppr damping must be finite and in (0, 1); got "
+                    f"{self.damping!r}")
+            t = float(self.tol)
+            if not np.isfinite(t) or t < 0.0:
+                raise QueryValidationError(
+                    f"ppr tol must be finite and >= 0; got {self.tol!r}")
+        if self.max_rounds is not None and int(self.max_rounds) < 0:
+            raise QueryValidationError(
+                f"max_rounds must be >= 0; got {self.max_rounds!r}")
+        for name in ("deadline_s", "timeout_s"):
+            v = getattr(self, name)
+            if v is not None and (not np.isfinite(float(v)) or v < 0):
+                raise QueryValidationError(
+                    f"{name} must be finite and >= 0; got {v!r}")
 
 
 @dataclasses.dataclass
 class QueryResult:
     qid: int
     kind: str
-    values: np.ndarray           # (n,) levels / distances / bool / scores
+    values: np.ndarray | None    # (n,) levels/distances/bool/scores; None
+    #                              when the outcome carries no values
     rounds: int                  # rounds the lane was live
     messages: int                # actions delivered for this query
-    lane: int                    # lane the query ran in
+    lane: int                    # lane the query ran in (-1: never ran)
     admitted_tick: int
     completed_tick: int
     latency_s: float             # submit -> completion (includes queue wait)
     exchanged: int = 0           # exchange entries shipped while live
+    status: str = QueryStatus.OK  # typed outcome (see QueryStatus)
+    partial: bool = False        # values are a mid-flight snapshot
+    cached: bool = False         # served from the result cache
+    tenant: str = "default"
+    priority: int = 0
+    preemptions: int = 0         # times this request was preempted
+    submitted_tick: int = 0
+
+
+def _cache_key(req: QueryRequest):
+    """Canonical root key: list order and dict insertion order never
+    split cache entries for the same logical query."""
+    if isinstance(req.sources, dict):
+        src = tuple(sorted((int(v), float(x))
+                           for v, x in req.sources.items()))
+    elif isinstance(req.sources, (list, tuple, np.ndarray)):
+        src = tuple(sorted(int(v) for v in
+                           np.asarray(req.sources).reshape(-1)))
+    else:
+        src = (int(req.sources),)
+    key = (req.kind, src)
+    if req.kind == "ppr":
+        key += (float(req.damping), float(req.tol))
+    return key
 
 
 class _LanePool:
@@ -158,10 +266,20 @@ class _MinPool(_LanePool):
         vv = engine.vertex_values(self.part, self.val[:, :, lane])
         return L.decode_min_values(vv, self.reqs[lane].kind)
 
+    def silence(self, lane: int):
+        """Kill a lane's in-flight frontier (eviction before
+        convergence): the lane reads as the absorbing identity until the
+        next injection overwrites it."""
+        self.chg = self._put(self.chg.at[:, :, lane].set(False))
+
 
 class _PprPool(_LanePool):
-    """Sum-semiring lane pool: per-lane seed/damping counted rounds with
-    tolerance-based convergence — stacked, or sharded under a mesh."""
+    """Sum-semiring lane pool on **delta rounds**: per-lane seed/damping
+    residual diffusion with per-lane tolerance frontiers — stacked
+    (``make_ppr_delta_round``) or sharded (``make_sharded_ppr_delta_round``)
+    — so converged and late-stage lanes stop costing relax work instead
+    of diffusing every slot every round (the ROADMAP full-frontier
+    leftover, closed)."""
 
     def __init__(self, part: Partition, n_lanes: int, cfg: EngineConfig,
                  arrays: engine.DeviceArrays, mesh=None,
@@ -171,78 +289,92 @@ class _PprPool(_LanePool):
         self.exchange_volume = L._volume(part, cfg)
         self.damping = np.zeros(n_lanes, np.float32)
         self.tol = np.full(n_lanes, 1e-6, np.float32)
-        self.live_mask = np.zeros(n_lanes, bool)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
         if mesh is None:
-            self._round = L.make_ppr_round(part, cfg, arrays=arrays)
+            self._round = L.make_ppr_delta_round(part, cfg, arrays=arrays)
         else:
-            self._round, self._sharding = L.make_sharded_ppr_round(
+            self._round, self._sharding = L.make_sharded_ppr_delta_round(
                 S, R_max, mesh, axis_names, cfg)
             self._arrays = arrays          # already device_put by the server
-        self.val = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
-        # device-resident like `val`: only an injection touches it, so the
-        # per-tick round must not re-upload a table-sized host array
-        self.base = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
+        self.rank = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
+        self.delta = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
+        self.chg = self._put(jnp.zeros((S, R_max, n_lanes), bool))
 
     def inject(self, lane: int, req: QueryRequest):
         srcs = np.asarray(req.sources).reshape(-1)
         if srcs.size != 1:
-            raise ValueError(
+            raise QueryValidationError(
                 f"ppr takes a single personalization seed; got "
                 f"{srcs.size} sources")
         seed = int(srcs[0])
-        self.base = self._put(self.base.at[:, :, lane].set(jnp.asarray(
-            L.ppr_base_table(self.part, [seed], [req.damping])[..., 0])))
-        col = engine.init_values(self.part, actions.PAGERANK, {seed: 1.0})
-        self.val = self._put(self.val.at[:, :, lane].set(jnp.asarray(col)))
+        base = jnp.asarray(
+            L.ppr_base_table(self.part, [seed], [req.damping])[..., 0])
+        chg_col = (base > np.float32(req.tol)) \
+            & jnp.asarray(self.part.slot_vertex >= 0)
+        self.rank = self._put(self.rank.at[:, :, lane].set(base))
+        self.delta = self._put(self.delta.at[:, :, lane].set(base))
+        self.chg = self._put(self.chg.at[:, :, lane].set(chg_col))
         self.damping[lane] = req.damping
         self.tol[lane] = req.tol
-        self.live_mask[lane] = True
         self.reqs[lane] = req
 
     def live(self) -> np.ndarray:
-        return self.live_mask.copy()
+        return np.asarray(jnp.any(self.chg, axis=(0, 1)))
 
     def step(self) -> np.ndarray:
         if self._sharding is None:
-            self.val, delta, counts = self._round(
-                self.val, self.base, jnp.asarray(self.damping),
-                jnp.asarray(self.live_mask))
-            delta, counts = np.asarray(delta), np.asarray(counts)
-        else:
-            self.val, delta, counts = self._round(
-                self._arrays, self.val, self.base,
-                jnp.asarray(self.damping), jnp.asarray(self.live_mask))
-            # pmax'd / psum'd — identical per shard row
-            delta, counts = np.asarray(delta)[0], np.asarray(counts)[0]
-        self.live_mask &= delta > self.tol
-        return counts
+            self.rank, self.delta, self.chg, counts = self._round(
+                self.rank, self.delta, jnp.asarray(self.damping),
+                jnp.asarray(self.tol))
+            return np.asarray(counts)
+        self.rank, self.delta, self.chg, counts = self._round(
+            self._arrays, self.rank, self.delta,
+            jnp.asarray(self.damping), jnp.asarray(self.tol))
+        return np.asarray(counts)[0]     # psum'd — identical per shard row
 
     def extract(self, lane: int) -> np.ndarray:
         return engine.vertex_values(
-            self.part, self.val[:, :, lane]).astype(np.float64)
+            self.part, self.rank[:, :, lane]).astype(np.float64)
+
+    def silence(self, lane: int):
+        self.delta = self._put(self.delta.at[:, :, lane].set(0.0))
+        self.chg = self._put(self.chg.at[:, :, lane].set(False))
 
 
 class QueryServer:
     """Continuous batcher over query lanes sharing one compiled round.
 
-    ``step()`` is one global round tick: admit queued requests into free
-    lanes, advance each pool one laned round, retire converged lanes.
-    ``run()`` drains the queue.  Occupancy / round / message counters are
-    kept per lane for the serving metrics in ``benchmarks/query_bench.py``.
+    ``step()`` is one global round tick: apply any injected faults,
+    expire queued deadlines, admit queued requests into free lanes
+    (priority / fairness / preemption aware), advance each pool one
+    laned round, retire converged lanes — and evict lanes whose
+    deadline, timeout, or round budget ran out, with typed statuses and
+    partial values.  ``run()`` drains the queue.  Occupancy / round /
+    message counters are kept per lane for the serving metrics in
+    ``benchmarks/query_bench.py`` and ``benchmarks/serve_bench.py``.
 
     With ``mesh=`` the per-tick round is the lanes × shard_map round with
     real collectives (see the module docstring); the batching semantics —
     masked mid-flight injection, eviction on convergence, no head-of-line
     blocking — are identical to the stacked server's.
+
+    ``serve=ServeConfig(...)`` enables the overload-safety layer; the
+    default config reproduces the unpoliced server trace-identically.
+    ``clock`` injects a virtual wall clock (tests); ``server.counters``
+    tallies every typed outcome for the load harness's consistency
+    check.
     """
 
     def __init__(self, part: Partition, n_lanes: int = 8,
                  cfg: EngineConfig = EngineConfig(),
                  ppr_lanes: int | None = None, mesh=None,
-                 axis_names=("data", "model")):
+                 axis_names=("data", "model"),
+                 serve: ServeConfig | None = None, clock=None):
         self.part = part
         self.mesh = mesh
+        self.serve = serve if serve is not None else ServeConfig()
+        self._clock = clock if clock is not None else time.monotonic
+        self._clock_offset = 0.0         # advanced by FaultPlan tick delays
         # one device copy of the static graph tables, shared by both pools
         arrays = engine.DeviceArrays.from_partition(part)
         if mesh is not None:
@@ -254,64 +386,280 @@ class QueryServer:
         self.ppr_pool = _PprPool(
             part, n_lanes if ppr_lanes is None else ppr_lanes, cfg, arrays,
             mesh, axis_names)
-        self.queue: list[QueryRequest] = []
+        self.queue = AdmissionQueue(
+            self.serve.max_queue, self.serve.overload_policy,
+            self.serve.tenant_weights)
+        self.cache = ResultCache(self.serve.cache_size,
+                                 self.serve.cache_ttl_s)
         self.results: dict[int, QueryResult] = {}
+        self.counters = collections.Counter()
         self.tick = 0
         self._next_qid = 0
         self._lane_rounds = {}       # (pool, lane) -> rounds live
         self._lane_msgs = {}
         self._lane_exchanged = {}
-        self._submit_time = {}       # qid -> wall time at submit
+        self._submit_time = {}       # qid -> clock time at submit
+        self._submit_tick = {}       # qid -> tick at submit
+        self._deadline_at = {}       # qid -> absolute clock deadline
         self._admit_tick = {}
+        self._admit_time = {}        # (pool, lane) -> clock time at admit
+        self._seq_of_qid = {}        # qid -> FIFO seq (preemption put-back)
+        self._preempt_count = {}     # qid -> times preempted
         self._pools_used: set[int] = set()
         self.occupancy_trace: list[int] = []   # live lanes per tick
 
+    def now(self) -> float:
+        """Server wall clock (injected faults advance it)."""
+        return self._clock() + self._clock_offset
+
     # ------------------------------------------------------------- submit
     def submit(self, kind: str, sources, damping: float = 0.85,
-               tol: float = 1e-6, qid: int | None = None) -> int:
-        pool = self.ppr_pool if kind == "ppr" else self.min_pool
-        if kind in MIN_KINDS + ("ppr",) and pool.n == 0:
-            raise ValueError(
-                f"no lanes for kind {kind!r}: the request could never be "
-                "admitted (server built with 0 lanes in its pool)")
+               tol: float = 1e-6, qid: int | None = None,
+               priority: int = 0, tenant: str = "default",
+               deadline_s: float | None = None,
+               timeout_s: float | None = None,
+               max_rounds: int | None = None) -> int:
         if qid is None:
             qid = self._next_qid
         self._next_qid = max(self._next_qid, qid) + 1
-        self.queue.append(QueryRequest(qid=qid, kind=kind, sources=sources,
-                                       damping=damping, tol=tol))
-        self._submit_time[qid] = time.perf_counter()
+        req = QueryRequest(qid=qid, kind=kind, sources=sources,
+                           damping=damping, tol=tol, priority=priority,
+                           tenant=tenant, deadline_s=deadline_s,
+                           timeout_s=timeout_s, max_rounds=max_rounds)
+        pool = self.ppr_pool if kind == "ppr" else self.min_pool
+        if pool.n == 0:
+            raise ValueError(
+                f"no lanes for kind {kind!r}: the request could never be "
+                "admitted (server built with 0 lanes in its pool)")
+        self._check_sources_in_range(req)
+        now = self.now()
+        self._submit_time[qid] = now
+        self._submit_tick[qid] = self.tick
+        self.counters["submitted"] += 1
+        if deadline_s is not None:
+            self._deadline_at[qid] = now + deadline_s
+
+        # root-keyed result cache: a fresh hit never touches a lane
+        if self.serve.cache_size:
+            hit = self.cache.get(_cache_key(req), now)
+            if hit is not None:
+                self.counters["cache_hits"] += 1
+                self._finish(req, values=np.array(hit, copy=True),
+                             status=QueryStatus.OK, partial=False,
+                             cached=True, rounds=0)
+                return qid
+            self.counters["cache_misses"] += 1
+
+        # zero round budget: resolve immediately with the initial values
+        if max_rounds is not None and int(max_rounds) == 0:
+            self._finish(req, values=self._initial_values(req),
+                         status=QueryStatus.BUDGET_EXHAUSTED, partial=True,
+                         rounds=0)
+            return qid
+
+        if self.serve.overload_policy == "block" and self.queue.full:
+            spins = 0
+            while self.queue.full:
+                if spins >= self.serve.block_max_ticks:
+                    raise AdmissionError(
+                        f"blocked submit exceeded block_max_ticks="
+                        f"{self.serve.block_max_ticks}")
+                progressed = self.step()
+                spins += 1
+                if not progressed and self.queue.full:
+                    raise AdmissionError(
+                        "blocked submit cannot make progress: queue full "
+                        "and the serving loop is drained")
+        seq = self.queue.next_seq
+        decision, victim = self.queue.offer(req, priority, tenant)
+        if victim is not None:
+            self._finish(victim, values=None, status=QueryStatus.SHED)
+        if decision == "admitted":
+            self._seq_of_qid[qid] = seq
+        elif decision == "rejected":
+            self._finish(req, values=None, status=QueryStatus.REJECTED)
+        elif decision == "shed_incoming":
+            self._finish(req, values=None, status=QueryStatus.SHED)
         return qid
 
+    def _check_sources_in_range(self, req: QueryRequest):
+        if isinstance(req.sources, dict):
+            ids = list(req.sources.keys())
+        elif isinstance(req.sources, (list, tuple, np.ndarray)):
+            ids = np.asarray(req.sources).reshape(-1).tolist()
+        else:
+            ids = [req.sources]
+        n = self.part.n
+        for v in ids:
+            if not (0 <= int(v) < n):
+                raise QueryValidationError(
+                    f"source vertex {int(v)} out of range for a graph "
+                    f"with {n} vertices")
+
+    def _initial_values(self, req: QueryRequest) -> np.ndarray:
+        """The 0-round snapshot: what a lane would hold right after
+        injection (zero-round-budget requests return this)."""
+        if req.kind == "ppr":
+            seed = int(np.asarray(req.sources).reshape(-1)[0])
+            col = L.ppr_base_table(self.part, [seed], [req.damping])[..., 0]
+            return engine.vertex_values(self.part, col).astype(np.float64)
+        kind = "bfs" if req.kind == "reachability" else req.kind
+        init, _ = L.init_lane_values(self.part, [(kind, req.sources)])
+        vv = engine.vertex_values(self.part, init[..., 0])
+        return L.decode_min_values(vv, req.kind)
+
+    def _finish(self, req: QueryRequest, values, status: str,
+                partial: bool = False, cached: bool = False,
+                rounds: int = 0):
+        """Resolve a request that never ran (or ran 0 rounds) with a
+        typed status."""
+        self.results[req.qid] = QueryResult(
+            qid=req.qid, kind=req.kind, values=values, rounds=rounds,
+            messages=0, lane=-1,
+            admitted_tick=-1 if status in (QueryStatus.REJECTED,
+                                           QueryStatus.SHED) else self.tick,
+            completed_tick=self.tick,
+            latency_s=self.now() - self._submit_time[req.qid],
+            status=status, partial=partial, cached=cached,
+            tenant=req.tenant, priority=req.priority,
+            preemptions=self._preempt_count.get(req.qid, 0),
+            submitted_tick=self._submit_tick[req.qid])
+        self.counters[status] += 1
+
     # -------------------------------------------------------------- admit
+    def _tenant_in_flight(self) -> dict:
+        c: dict = {}
+        for pool in (self.min_pool, self.ppr_pool):
+            for r in pool.reqs:
+                if r is not None:
+                    c[r.tenant] = c.get(r.tenant, 0) + 1
+        return c
+
+    def _place(self, pool, lane: int, req: QueryRequest):
+        pool.inject(lane, req)
+        self._pools_used.add(id(pool))
+        key = (id(pool), lane)
+        self._lane_rounds[key] = 0
+        self._lane_msgs[key] = 0
+        self._lane_exchanged[key] = 0
+        self._admit_tick[key] = self.tick
+        self._admit_time[key] = self.now()
+        self.counters["admitted"] += 1
+
+    def _preempt(self, pool, lane: int):
+        """Evict a running lane for a more urgent request: the victim is
+        re-queued at its original FIFO position and restarts."""
+        req = pool.reqs[lane]
+        pool.silence(lane)
+        pool.reqs[lane] = None
+        self._preempt_count[req.qid] = \
+            self._preempt_count.get(req.qid, 0) + 1
+        self.counters["preemptions"] += 1
+        back = self.queue.put_back(
+            req, req.priority, req.tenant,
+            self._seq_of_qid.get(req.qid, self.queue.next_seq))
+        if back is False:
+            self._finish(req, values=None, status=QueryStatus.SHED)
+        elif back is not True:       # a lower-priority queued item displaced
+            self._finish(back, values=None, status=QueryStatus.SHED)
+
     def _admit(self) -> list[int]:
         admitted = []
         for pool, kinds in ((self.min_pool, MIN_KINDS),
                             (self.ppr_pool, ("ppr",))):
+            def pool_pred(r, kinds=kinds):
+                return r.kind in kinds
+
             for lane in range(pool.n):
-                if pool.reqs[lane] is not None or not self.queue:
+                if pool.reqs[lane] is not None or not len(self.queue):
                     continue
-                nxt = next((i for i, r in enumerate(self.queue)
-                            if r.kind in kinds), None)
-                if nxt is None:
+                entry = self.queue.take(pool_pred, self._tenant_in_flight())
+                if entry is None:
                     break
-                req = self.queue.pop(nxt)
-                pool.inject(lane, req)
-                self._pools_used.add(id(pool))
-                key = (id(pool), lane)
-                self._lane_rounds[key] = 0
-                self._lane_msgs[key] = 0
-                self._lane_exchanged[key] = 0
-                self._admit_tick[key] = self.tick
-                admitted.append(req.qid)
+                self._seq_of_qid[entry.item.qid] = entry.seq
+                self._place(pool, lane, entry.item)
+                admitted.append(entry.item.qid)
+            # preemption: the best still-queued candidate may outrank the
+            # lowest-priority running lane (strictly greater only, so
+            # uniform-priority traffic never preempts)
+            while self.serve.preempt and len(self.queue):
+                entry = self.queue.peek(pool_pred, self._tenant_in_flight())
+                if entry is None:
+                    break
+                occ = [(pool.reqs[l].priority,
+                        -self._admit_tick[(id(pool), l)], l)
+                       for l in range(pool.n) if pool.reqs[l] is not None]
+                if not occ:
+                    break
+                victim_pri, _, victim_lane = min(occ)
+                if entry.priority <= victim_pri:
+                    break
+                self.queue.remove(entry)
+                self._preempt(pool, victim_lane)
+                self._seq_of_qid[entry.item.qid] = entry.seq
+                self._place(pool, victim_lane, entry.item)
+                admitted.append(entry.item.qid)
         return admitted
 
     # --------------------------------------------------------------- step
+    def _retire(self, pool, lane: int, status: str, partial: bool):
+        req = pool.reqs[lane]
+        key = (id(pool), lane)
+        keep_values = (status == QueryStatus.OK
+                       or status in QueryStatus.PARTIAL_VALUED)
+        values = pool.extract(lane) if keep_values else None
+        self.results[req.qid] = QueryResult(
+            qid=req.qid, kind=req.kind, values=values,
+            rounds=self._lane_rounds[key],
+            messages=self._lane_msgs[key], lane=lane,
+            admitted_tick=self._admit_tick[key],
+            completed_tick=self.tick,
+            latency_s=self.now() - self._submit_time[req.qid],
+            exchanged=self._lane_exchanged[key],
+            status=status, partial=partial, tenant=req.tenant,
+            priority=req.priority,
+            preemptions=self._preempt_count.get(req.qid, 0),
+            submitted_tick=self._submit_tick[req.qid])
+        self.counters[status] += 1
+        if status == QueryStatus.OK and self.serve.cache_size:
+            self.cache.put(_cache_key(req), np.array(values, copy=True),
+                           self.now())
+        pool.reqs[lane] = None             # lane freed immediately
+        if status != QueryStatus.OK:
+            pool.silence(lane)             # kill the in-flight frontier
+
+    def _evict_overdue(self, pool, occupied, live_before):
+        """Budget / deadline / timeout checks on still-live lanes.  A
+        lane that already converged is retired OK by the normal path —
+        convergence wins the race against a same-tick deadline expiry."""
+        now = self.now()
+        for lane in list(occupied):
+            if not live_before[lane]:
+                continue
+            req = pool.reqs[lane]
+            key = (id(pool), lane)
+            status = None
+            if req.max_rounds is not None \
+                    and self._lane_rounds[key] >= req.max_rounds:
+                status = QueryStatus.BUDGET_EXHAUSTED
+            elif req.deadline_s is not None \
+                    and now >= self._deadline_at[req.qid]:
+                status = QueryStatus.DEADLINE_EXPIRED
+            elif req.timeout_s is not None \
+                    and now >= self._admit_time[key] + req.timeout_s:
+                status = QueryStatus.TIMEOUT
+            if status is not None:
+                self._retire(pool, lane, status, partial=True)
+                occupied.remove(lane)
+                live_before[lane] = False
+
     def _step_pool(self, pool):
         occupied = [lane for lane in range(pool.n)
                     if pool.reqs[lane] is not None]
         if not occupied:
             return 0
-        live_before = pool.live()
+        live_before = np.array(pool.live())   # writable copy: evictions
+        self._evict_overdue(pool, occupied, live_before)  # flip lanes off
         if not any(live_before[lane] for lane in occupied):
             # occupied-but-converged lanes (e.g. empty-frontier queries)
             # still retire below; nothing to relax
@@ -328,28 +676,44 @@ class QueryServer:
                 self._lane_exchanged[key] += pool.exchange_volume
                 n_live += 1
             if not live_after[lane]:           # converged -> evict now
-                req = pool.reqs[lane]
-                self.results[req.qid] = QueryResult(
-                    qid=req.qid, kind=req.kind, values=pool.extract(lane),
-                    rounds=self._lane_rounds[key],
-                    messages=self._lane_msgs[key], lane=lane,
-                    admitted_tick=self._admit_tick[key],
-                    completed_tick=self.tick,
-                    latency_s=time.perf_counter()
-                    - self._submit_time[req.qid],
-                    exchanged=self._lane_exchanged[key],
-                )
-                pool.reqs[lane] = None         # lane freed immediately
+                self._retire(pool, lane, QueryStatus.OK, partial=False)
         return n_live
+
+    def _apply_faults(self):
+        plan = self.serve.faults
+        if plan is None:
+            return
+        delay = plan.delay_at(self.tick)
+        if delay:
+            self._clock_offset += delay    # a stalled tick, without sleeping
+            self.counters["injected_delays"] += 1
+        for pool_name, lane in plan.failures_at(self.tick):
+            pool = self.min_pool if pool_name == "min" else self.ppr_pool
+            if 0 <= lane < pool.n and pool.reqs[lane] is not None:
+                self.counters["injected_lane_failures"] += 1
+                self._retire(pool, lane, QueryStatus.FAILED, partial=True)
+
+    def _expire_queued(self):
+        if not len(self.queue):
+            return
+        now = self.now()
+        expired = self.queue.drain_if(
+            lambda r: r.deadline_s is not None
+            and now >= self._deadline_at[r.qid])
+        for req in expired:
+            self._finish(req, values=None,
+                         status=QueryStatus.DEADLINE_EXPIRED)
 
     def step(self) -> bool:
         """One global round tick. Returns False when fully drained."""
+        self._apply_faults()
+        self._expire_queued()
         self._admit()
         n_live = self._step_pool(self.min_pool) \
             + self._step_pool(self.ppr_pool)
         self.occupancy_trace.append(n_live)
         self.tick += 1
-        return bool(n_live or self.queue
+        return bool(n_live or len(self.queue)
                     or any(r is not None for r in self.min_pool.reqs)
                     or any(r is not None for r in self.ppr_pool.reqs))
 
@@ -368,3 +732,7 @@ class QueryServer:
         cap = sum(pool.n for pool in (self.min_pool, self.ppr_pool)
                   if id(pool) in self._pools_used)
         return float(np.mean(self.occupancy_trace)) / max(cap, 1)
+
+    def in_flight(self) -> int:
+        return sum(r is not None for pool in (self.min_pool, self.ppr_pool)
+                   for r in pool.reqs)

@@ -1,8 +1,18 @@
-"""Serving API: batched prefill/decode with sharded caches.
+"""Serving API: batched prefill/decode with sharded caches, plus the
+shared admission-control layer (bounded queues, overload policies,
+result cache, fault injection — ISSUE 6).
 
 Thin re-exports — the step factories live with the training substrate so
 both share sharding rules; the batched driver is ``repro.launch.serve``.
 """
+from repro.serve.admission import (
+    AdmissionError, AdmissionQueue, FaultPlan, QueryStatus,
+    QueryValidationError, ResultCache, ServeConfig,
+)
 from repro.train.train_step import cache_axes_tree, make_serve_steps
 
-__all__ = ["make_serve_steps", "cache_axes_tree"]
+__all__ = [
+    "AdmissionError", "AdmissionQueue", "FaultPlan", "QueryStatus",
+    "QueryValidationError", "ResultCache", "ServeConfig",
+    "cache_axes_tree", "make_serve_steps",
+]

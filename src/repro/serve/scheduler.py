@@ -9,6 +9,13 @@ an active mask keep the single decode_step exact for ragged progress.
 
 This is the serving-side analog of the paper's always-keep-the-cell-busy
 runtime: slots never idle waiting for the longest sequence in a batch.
+
+Admission control is delegated to the shared ``serve.admission`` layer
+(ISSUE 6): pass ``serve=ServeConfig(max_queue=..., overload_policy=...)``
+to bound the queue — an overflowing submit resolves the request with a
+typed ``status`` ('rejected' / 'shed') instead of growing the queue
+without bound, and priority/tenant-fair ordering applies on dequeue.
+The default config keeps the legacy unbounded-FIFO behavior exactly.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serve.admission import AdmissionQueue, QueryStatus, ServeConfig
 
 
 @dataclasses.dataclass
@@ -30,18 +38,25 @@ class Request:
     eos_id: int = -1              # -1: never
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    priority: int = 0             # higher = dequeued first under overload
+    tenant: str = "default"       # fair-share admission id
+    status: str = QueryStatus.OK  # typed outcome ('rejected'/'shed'/...)
 
 
 class ContinuousBatcher:
-    def __init__(self, model: Model, params, n_slots: int, max_len: int):
+    def __init__(self, model: Model, params, n_slots: int, max_len: int,
+                 serve: ServeConfig | None = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        self.serve = serve if serve is not None else ServeConfig()
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int32)       # next write index
         self.slot_req: list[Request | None] = [None] * n_slots
-        self.queue: list[Request] = []
+        self.queue = AdmissionQueue(
+            self.serve.max_queue, self.serve.overload_policy,
+            self.serve.tenant_weights)
         self.last_tok = np.zeros((n_slots, 1), np.int32)
 
         self._decode = jax.jit(self._decode_step)
@@ -67,12 +82,37 @@ class ContinuousBatcher:
                         out_axes=(0, axes_tree))(toks, caches, positions)
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        """Offer a request to the bounded queue.  Under overload the
+        'reject'/'shed' policies resolve it (or a lower-priority queued
+        victim) immediately with ``req.done=True`` and a typed
+        ``req.status`` — never an exception, never unbounded growth.
+        'block' ticks the decode loop until space frees."""
+        if self.serve.overload_policy == "block":
+            spins = 0
+            while self.queue.full:
+                if spins >= self.serve.block_max_ticks or not self.step():
+                    req.done, req.status = True, QueryStatus.REJECTED
+                    return
+                spins += 1
+        decision, victim = self.queue.offer(req)
+        if victim is not None:
+            victim.done, victim.status = True, QueryStatus.SHED
+        if decision == "rejected":
+            req.done, req.status = True, QueryStatus.REJECTED
+        elif decision == "shed_incoming":
+            req.done, req.status = True, QueryStatus.SHED
+
+    def _in_flight(self) -> dict:
+        c: dict = {}
+        for r in self.slot_req:
+            if r is not None:
+                c[r.tenant] = c.get(r.tenant, 0) + 1
+        return c
 
     def _admit(self):
         for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
+            if self.slot_req[s] is None and len(self.queue):
+                req = self.queue.take(in_flight=self._in_flight()).item
                 self.slot_req[s] = req
                 # prefill the slot: single-sequence prefill into slot s
                 sub_cache = jax.tree.map(lambda c: c[:, s : s + 1]

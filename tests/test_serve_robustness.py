@@ -1,0 +1,537 @@
+"""Overload-safe serving (ISSUE 6 tentpole + satellites).
+
+Covers: submit-time validation (typed errors, nothing reaches a lane),
+bounded-queue overload policies (block / reject / shed), priority
+preemption, deadline and timeout eviction with partial values, round
+budgets (including the zero-budget immediate return), the
+converged-lane-vs-deadline-expiry race, per-tenant fair admission,
+the root-keyed result cache with staleness bounds, fault injection
+(lane failure, delayed tick) surfacing as typed statuses, the
+edge case of a full queue with every lane busy, and trace parity of the
+sharded delta-PPR round vs the stacked delta path (8 host devices,
+subprocess).  The default-config trace parity with the unpoliced server
+is pinned by tests/test_query_server.py and the 8-device parity test in
+tests/test_exchange_unified.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators, reference
+from repro.graph.graph import COOGraph
+from repro.query import (
+    AdmissionError, AdmissionQueue, FaultPlan, QueryServer, QueryStatus,
+    QueryValidationError, ResultCache, ServeConfig,
+)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+UNREACHED = np.iinfo(np.int32).max
+
+
+def _path_graph(n):
+    src = np.arange(n - 1, dtype=np.int32)
+    return COOGraph(n, src, (src + 1).astype(np.int32), None)
+
+
+def _path_part(n=24, num_shards=4, rpvo_max=2):
+    return build_partition(_path_graph(n),
+                           PartitionConfig(num_shards=num_shards,
+                                           rpvo_max=rpvo_max))
+
+
+def _ppr_part():
+    g = generators.rmat(6, edge_factor=4, seed=3)
+    from repro.apps.pagerank import _pr_graph
+    return g, build_partition(_pr_graph(g),
+                              PartitionConfig(num_shards=4, rpvo_max=2))
+
+
+class FakeClock:
+    """Deterministic wall clock: now() returns ``t`` until advanced."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------- validation
+def test_submit_validation_typed_errors():
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1, ppr_lanes=1)
+    with pytest.raises(ValueError, match="unknown query kind"):
+        srv.submit("pagerank-global", 0)
+    with pytest.raises(QueryValidationError, match="empty sources"):
+        srv.submit("bfs", [])
+    with pytest.raises(QueryValidationError, match="out of range"):
+        srv.submit("bfs", part.n + 7)
+    with pytest.raises(QueryValidationError, match="out of range"):
+        srv.submit("sssp", [0, -3])
+    with pytest.raises(QueryValidationError, match="damping"):
+        srv.submit("ppr", 0, damping=float("nan"))
+    with pytest.raises(QueryValidationError, match="damping"):
+        srv.submit("ppr", 0, damping=-0.5)
+    with pytest.raises(QueryValidationError, match="damping"):
+        srv.submit("ppr", 0, damping=1.0)
+    with pytest.raises(QueryValidationError, match="tol"):
+        srv.submit("ppr", 0, tol=float("nan"))
+    with pytest.raises(QueryValidationError, match="max_rounds"):
+        srv.submit("bfs", 0, max_rounds=-1)
+    with pytest.raises(QueryValidationError, match="deadline_s"):
+        srv.submit("bfs", 0, deadline_s=-1.0)
+    with pytest.raises(QueryValidationError, match="non-finite"):
+        srv.submit("sssp", {0: float("nan")})
+    # nothing was admitted, queued, or resolved
+    assert srv.queue == [] and srv.results == {}
+    # QueryValidationError is a ValueError: legacy callers keep working
+    assert issubclass(QueryValidationError, ValueError)
+
+
+# ----------------------------------------------------------- queue policies
+def test_reject_policy_bounded_queue_typed_rejection():
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1,
+                      serve=ServeConfig(max_queue=1,
+                                        overload_policy="reject"))
+    qa = srv.submit("bfs", 0)            # fills the queue
+    qb = srv.submit("bfs", 1)            # bounced, typed — no exception
+    res = srv.run()
+    assert res[qa].status == QueryStatus.OK
+    assert res[qb].status == QueryStatus.REJECTED
+    assert res[qb].values is None and res[qb].lane == -1
+    assert srv.counters["submitted"] == 2
+    assert srv.counters[QueryStatus.OK] == 1
+    assert srv.counters[QueryStatus.REJECTED] == 1
+
+
+def test_shed_policy_evicts_lowest_priority():
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1,
+                      serve=ServeConfig(max_queue=2,
+                                        overload_policy="shed"))
+    q_old = srv.submit("bfs", 0, priority=0)
+    q_low = srv.submit("bfs", 1, priority=0)
+    q_hot = srv.submit("bfs", 2, priority=5)   # sheds q_low (newest lowest)
+    q_meh = srv.submit("bfs", 3, priority=0)   # cannot outrank: shed itself
+    res = srv.run()
+    assert res[q_low].status == QueryStatus.SHED
+    assert res[q_meh].status == QueryStatus.SHED
+    assert res[q_old].status == QueryStatus.OK
+    assert res[q_hot].status == QueryStatus.OK
+    # the urgent one ran before the older default-priority request
+    assert res[q_hot].completed_tick < res[q_old].completed_tick
+    assert srv.counters[QueryStatus.SHED] == 2
+
+
+def test_block_policy_drains_and_safety_valve():
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1,
+                      serve=ServeConfig(max_queue=1,
+                                        overload_policy="block"))
+    qa = srv.submit("bfs", 0)
+    qb = srv.submit("bfs", 1)     # spins the server until space frees
+    res = srv.run()
+    assert res[qa].status == res[qb].status == QueryStatus.OK
+    np.testing.assert_array_equal(
+        res[qb].values, reference.bfs_levels(_path_graph(part.n), 1))
+
+    srv2 = QueryServer(part, n_lanes=1,
+                       serve=ServeConfig(max_queue=1,
+                                         overload_policy="block",
+                                         block_max_ticks=0))
+    srv2.submit("bfs", 0)
+    with pytest.raises(AdmissionError):
+        srv2.submit("bfs", 1)
+
+
+def test_queue_full_and_every_lane_busy():
+    """Satellite edge case: submit when every lane is occupied AND the
+    queue is at capacity — typed rejection, counters consistent."""
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1,
+                      serve=ServeConfig(max_queue=1,
+                                        overload_policy="reject"))
+    qa = srv.submit("bfs", 0)
+    srv.step()                    # qa now occupies the only min lane
+    assert srv.in_flight() == 1 and len(srv.queue) == 0
+    qb = srv.submit("bfs", 1)     # queued
+    qc = srv.submit("bfs", 2)     # lane busy AND queue full
+    res = srv.run()
+    assert res[qc].status == QueryStatus.REJECTED
+    assert res[qa].status == res[qb].status == QueryStatus.OK
+    terminal = [r.status for r in res.values()]
+    assert srv.counters["submitted"] == len(terminal) == 3
+    assert all(s in QueryStatus.TERMINAL for s in terminal)
+
+
+# --------------------------------------------------------------- preemption
+def test_priority_preemption_restarts_victim():
+    part = _path_part(n=24)
+    srv = QueryServer(part, n_lanes=1)
+    q_long = srv.submit("bfs", 0)
+    srv.step(); srv.step()                     # victim is mid-flight
+    q_hot = srv.submit("bfs", part.n - 2, priority=3)
+    res = srv.run()
+    assert res[q_hot].status == res[q_long].status == QueryStatus.OK
+    assert res[q_hot].completed_tick < res[q_long].completed_tick
+    assert res[q_long].preemptions == 1
+    assert srv.counters["preemptions"] == 1
+    # the restarted victim still computes the right answer
+    np.testing.assert_array_equal(
+        res[q_long].values, reference.bfs_levels(_path_graph(part.n), 0))
+    # equal priority never preempts (the trace-parity guarantee)
+    srv2 = QueryServer(part, n_lanes=1)
+    srv2.submit("bfs", 0)
+    srv2.step()
+    srv2.submit("bfs", 1, priority=0)
+    srv2.run()
+    assert srv2.counters["preemptions"] == 0
+
+
+# ------------------------------------------------------ deadlines / budgets
+def test_deadline_evicts_mid_flight_with_partial_values():
+    clk = FakeClock()
+    part = _path_part(n=24)
+    srv = QueryServer(part, n_lanes=1, clock=clk)
+    qid = srv.submit("bfs", 0, deadline_s=10.0)
+    srv.step(); srv.step(); srv.step()         # a few rounds of progress
+    clk.t = 100.0                              # SLO blown mid-flight
+    res = srv.run()
+    r = res[qid]
+    assert r.status == QueryStatus.DEADLINE_EXPIRED and r.partial
+    # partial values are the mid-flight snapshot: a correct BFS prefix
+    want = reference.bfs_levels(_path_graph(part.n), 0)
+    got = r.values
+    reached = got != UNREACHED
+    assert reached.any() and not reached.all()
+    np.testing.assert_array_equal(got[reached], want[reached])
+
+
+def test_deadline_expires_while_queued_returns_no_values():
+    clk = FakeClock()
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1, clock=clk)
+    q_long = srv.submit("bfs", 0)
+    q_slo = srv.submit("bfs", 1, deadline_s=5.0)   # stuck behind q_long
+    srv.step()
+    clk.t = 50.0
+    res = srv.run()
+    assert res[q_slo].status == QueryStatus.DEADLINE_EXPIRED
+    assert res[q_slo].values is None and res[q_slo].lane == -1
+    assert res[q_long].status == QueryStatus.OK
+
+
+class TickClock:
+    """Advances one second on every reading — so a deadline can expire
+    *between* the queued-expiry sweep and the lane eviction check of a
+    single tick, exposing the race."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def test_converged_lane_wins_deadline_race():
+    """Satellite edge case: a lane that has already converged retires OK
+    even when its deadline expired by the time the eviction check runs —
+    completed work is never thrown away.  A still-live lane under the
+    identical schedule is evicted with the deadline status."""
+    g, part = _ppr_part()
+    # deadline_s=2.5: live when the queued sweep looks (t=2 < 3.5),
+    # expired when the lane eviction check looks (t=4 >= 3.5)
+    srv = QueryServer(part, n_lanes=1, ppr_lanes=1, clock=TickClock())
+    # tol=1.0 converges at injection (seed mass is already below tol):
+    # the lane is occupied-but-converged when the eviction check runs
+    qid = srv.submit("ppr", 0, tol=1.0, deadline_s=2.5)
+    res = srv.run()
+    assert res[qid].status == QueryStatus.OK and not res[qid].partial
+    assert res[qid].values is not None
+
+    srv2 = QueryServer(part, n_lanes=1, ppr_lanes=1, clock=TickClock())
+    qid2 = srv2.submit("ppr", 0, tol=1e-9, deadline_s=2.5)  # still live
+    res2 = srv2.run()
+    assert res2[qid2].status == QueryStatus.DEADLINE_EXPIRED
+    assert res2[qid2].partial
+
+
+def test_timeout_evicts_pathological_query():
+    clk = FakeClock()
+    part = _path_part(n=24)
+    srv = QueryServer(part, n_lanes=1, clock=clk)
+    qid = srv.submit("bfs", 0, timeout_s=10.0)
+    srv.step(); srv.step()
+    clk.t = 99.0                    # execution cap blown
+    res = srv.run()
+    assert res[qid].status == QueryStatus.TIMEOUT and res[qid].partial
+    assert res[qid].values is not None
+
+
+def test_zero_round_budget_returns_immediately():
+    """Satellite edge case: max_rounds=0 resolves at submit with the
+    initial values and a partial status — no lane, no tick."""
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1)
+    qid = srv.submit("bfs", 0, max_rounds=0)
+    assert qid in srv.results                 # before any step()
+    r = srv.results[qid]
+    assert r.status == QueryStatus.BUDGET_EXHAUSTED and r.partial
+    assert r.rounds == 0 and r.lane == -1
+    want = np.full(part.n, UNREACHED, np.int64)
+    want[0] = 0
+    np.testing.assert_array_equal(r.values, want)
+    assert srv.step() is False                # nothing was ever queued
+
+
+def test_round_budget_caps_rounds_with_partial_prefix():
+    part = _path_part(n=24)
+    srv = QueryServer(part, n_lanes=1)
+    qid = srv.submit("bfs", 0, max_rounds=3)
+    q_next = srv.submit("bfs", 1)             # reuses the freed lane
+    res = srv.run()
+    r = res[qid]
+    assert r.status == QueryStatus.BUDGET_EXHAUSTED and r.partial
+    assert r.rounds == 3
+    want = reference.bfs_levels(_path_graph(part.n), 0)
+    got = r.values
+    np.testing.assert_array_equal(got[got != UNREACHED],
+                                  want[got != UNREACHED])
+    assert (got != UNREACHED).sum() < part.n
+    assert res[q_next].status == QueryStatus.OK
+
+
+# ----------------------------------------------------------- tenant fairness
+def test_tenant_fair_admission_is_starvation_free():
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=2)
+    a1 = srv.submit("bfs", 0, tenant="heavy")
+    a2 = srv.submit("bfs", 1, tenant="heavy")
+    a3 = srv.submit("bfs", 2, tenant="heavy")
+    b1 = srv.submit("bfs", 3, tenant="light")
+    res = srv.run()
+    # lane 0 takes heavy's first; the deficit rule hands lane 1 to light
+    # ahead of heavy's older second request
+    assert res[b1].admitted_tick == 0
+    assert res[a1].admitted_tick == 0
+    assert res[a2].admitted_tick > 0 and res[a3].admitted_tick > 0
+    assert all(res[q].status == QueryStatus.OK for q in (a1, a2, a3, b1))
+
+
+# ------------------------------------------------------------- result cache
+def test_result_cache_hit_and_staleness_bound():
+    clk = FakeClock()
+    part = _path_part()
+    srv = QueryServer(part, n_lanes=1, clock=clk,
+                      serve=ServeConfig(cache_size=4, cache_ttl_s=30.0))
+    q1 = srv.submit("bfs", 0)
+    srv.run()
+    clk.t = 10.0
+    q2 = srv.submit("bfs", 0)                 # fresh: served from cache
+    assert q2 in srv.results                  # resolved at submit
+    r2 = srv.results[q2]
+    assert r2.cached and r2.status == QueryStatus.OK and r2.rounds == 0
+    np.testing.assert_array_equal(r2.values, srv.results[q1].values)
+    assert srv.counters["cache_hits"] == 1
+    clk.t = 100.0                             # past the staleness bound
+    q3 = srv.submit("bfs", 0)
+    assert q3 not in srv.results              # stale: recomputed on a lane
+    res = srv.run()
+    assert not res[q3].cached
+    assert srv.cache.hits == 1 and srv.cache.misses >= 2
+    # permuted multi-source list hits the same canonical root key
+    srv.submit("bfs", [2, 5])
+    srv.run()
+    q5 = srv.submit("bfs", [5, 2])
+    assert srv.results[q5].cached
+
+
+# ----------------------------------------------------------- fault injection
+def test_fault_injection_lane_failure_is_typed():
+    part = _path_part(n=24)
+    plan = FaultPlan(lane_failures=((2, "min", 0),))
+    srv = QueryServer(part, n_lanes=1, serve=ServeConfig(faults=plan))
+    qid = srv.submit("bfs", 0)
+    q_next = srv.submit("bfs", 1)     # the killed lane is reusable
+    res = srv.run()
+    assert res[qid].status == QueryStatus.FAILED
+    assert res[qid].values is None
+    assert res[q_next].status == QueryStatus.OK
+    assert srv.counters["injected_lane_failures"] == 1
+
+
+def test_fault_injection_delayed_tick_fires_timeout():
+    clk = FakeClock()
+    part = _path_part(n=24)
+    plan = FaultPlan(tick_delays=((2, 60.0),))
+    srv = QueryServer(part, n_lanes=1, clock=clk,
+                      serve=ServeConfig(faults=plan))
+    qid = srv.submit("bfs", 0, timeout_s=30.0)
+    res = srv.run()
+    assert res[qid].status == QueryStatus.TIMEOUT and res[qid].partial
+    assert srv.counters["injected_delays"] == 1
+
+
+# ------------------------------------------------- admission-layer unit tests
+def test_admission_queue_policies_and_order():
+    q = AdmissionQueue(max_queue=2, policy="shed")
+
+    class Item:
+        def __init__(self, name):
+            self.name = name
+    a, b, hot, cold = Item("a"), Item("b"), Item("hot"), Item("cold")
+    assert q.offer(a, 0, "t")[0] == "admitted"
+    assert q.offer(b, 0, "t")[0] == "admitted"
+    decision, victim = q.offer(hot, 9, "t")
+    assert decision == "admitted" and victim is b      # newest lowest out
+    assert q.offer(cold, 0, "t") == ("shed_incoming", None)
+    # priority-first dequeue; FIFO among equals
+    assert q.take().item is hot
+    assert q.take().item is a
+    assert q.take() is None
+
+    q2 = AdmissionQueue(max_queue=1, policy="block")
+    q2.offer(a, 0, "t")
+    assert q2.offer(b, 0, "t") == ("blocked", None)
+    q3 = AdmissionQueue(max_queue=1, policy="reject")
+    q3.offer(a, 0, "t")
+    assert q3.offer(b, 0, "t") == ("rejected", None)
+    with pytest.raises(ValueError, match="overload_policy"):
+        ServeConfig(overload_policy="panic")
+    with pytest.raises(ValueError, match="max_queue"):
+        ServeConfig(max_queue=0)
+
+
+def test_admission_queue_tenant_deficit_order():
+    q = AdmissionQueue()
+
+    class Item:
+        def __init__(self, tenant):
+            self.tenant = tenant
+    h1, h2, l1 = Item("heavy"), Item("heavy"), Item("light")
+    q.offer(h1, 0, "heavy")
+    q.offer(h2, 0, "heavy")
+    q.offer(l1, 0, "light")
+    # heavy already holds a lane: light is served first despite arriving
+    # last; with no lanes held the order is pure FIFO
+    assert q.peek(in_flight={"heavy": 1}).item is l1
+    assert q.peek(in_flight={}).item is h1
+    # a heavier weight absorbs more in-flight before yielding
+    q.tenant_weights = {"heavy": 4.0}
+    assert q.peek(in_flight={"heavy": 1, "light": 1}).item is h1
+
+
+def test_result_cache_lru_and_ttl():
+    c = ResultCache(size=2, ttl_s=10.0)
+    c.put("a", 1, now=0.0)
+    c.put("b", 2, now=0.0)
+    assert c.get("a", now=5.0) == 1            # refreshes LRU position
+    c.put("c", 3, now=5.0)                     # evicts b (least recent)
+    assert c.get("b", now=5.0) is None
+    assert c.get("a", now=20.0) is None        # stale, never served
+    assert c.get("c", now=6.0) == 3
+    assert c.hits == 2 and c.misses == 2
+
+
+# ------------------------------------------------- round-budget plumbing
+def test_lane_budget_freezes_lane_inside_traced_round():
+    """The exchange-level lane_mask plumbing: a budget-exhausted lane
+    freezes inside the traced fixpoint (values carried through, no
+    further rounds) while unbudgeted lanes run to convergence."""
+    from repro.core import engine as eng
+    from repro.query.lanes import (
+        decode_min_values, init_lane_values, run_stacked_lanes,
+    )
+    n = 20
+    part = _path_part(n=n)
+    init, unitw = init_lane_values(part, [("bfs", 0), ("bfs", 0)])
+    val, stats = run_stacked_lanes(part, init, unitw,
+                                   lane_budget=[4, 10_000])
+    _, stats_ref = run_stacked_lanes(part, init, unitw)
+    assert int(stats.rounds[0]) == 4          # frozen exactly at budget
+    # the unbudgeted lane converges exactly as without any budgets
+    assert int(stats.rounds[1]) == int(stats_ref.rounds[1])
+    want = reference.bfs_levels(_path_graph(n), 0)
+    lane0 = decode_min_values(eng.vertex_values(part, val[:, :, 0]), "bfs")
+    lane1 = decode_min_values(eng.vertex_values(part, val[:, :, 1]), "bfs")
+    np.testing.assert_array_equal(lane1, want)          # unaffected lane
+    reached = lane0 != UNREACHED
+    np.testing.assert_array_equal(lane0[reached], want[reached])
+    assert reached.sum() == 5                 # levels 0..4 only
+    # zero budget: initial values out, zero rounds, zero messages
+    val0, stats0 = run_stacked_lanes(part, init, unitw, lane_budget=0)
+    np.testing.assert_array_equal(np.asarray(val0), np.asarray(init))
+    assert int(stats0.rounds.sum()) == 0
+    assert int(stats0.messages.sum()) == 0
+
+
+# -------------------------------------------- sharded delta-PPR trace parity
+CHILD_DELTA = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core import engine
+    from repro.core.partition import PartitionConfig, build_partition
+    from repro.graph import generators
+    from repro.query import lanes as L
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    g = generators.rmat(7, edge_factor=4, seed=11)
+    from repro.apps.pagerank import _pr_graph
+    part = build_partition(_pr_graph(g),
+                           PartitionConfig(num_shards=8, rpvo_max=4))
+    deg = np.argsort(-g.out_degrees())
+    seeds = [int(deg[0]), int(deg[5])]
+    dampings = np.asarray([0.85, 0.6], np.float32)
+    tols = np.asarray([1e-7, 1e-7], np.float32)
+    base = jnp.asarray(L.ppr_base_table(part, seeds, dampings))
+    for exch in ("dense", "compact"):
+        cfg = engine.EngineConfig(exchange=exch)
+        arrays = engine.DeviceArrays.from_partition(part)
+        st_round = L.make_ppr_delta_round(part, cfg, arrays=arrays)
+        sh_round, sharding = L.make_sharded_ppr_delta_round(
+            part.S, part.R_max, mesh, ("data", "model"), cfg)
+        arr_spec = NamedSharding(mesh, P(("data", "model")))
+        arrays_sh = jax.tree.map(
+            lambda x: jax.device_put(x, arr_spec), arrays)
+        r_st = d_st = base
+        r_sh = d_sh = jax.device_put(base, sharding)
+        dmp, tol = jnp.asarray(dampings), jnp.asarray(tols)
+        for rnd in range(6):
+            r_st, d_st, c_st, n_st = st_round(r_st, d_st, dmp, tol)
+            r_sh, d_sh, c_sh, n_sh = sh_round(arrays_sh, r_sh, d_sh,
+                                              dmp, tol)
+            np.testing.assert_allclose(np.asarray(r_sh), np.asarray(r_st),
+                                       rtol=1e-5, atol=1e-9)
+            np.testing.assert_allclose(np.asarray(d_sh), np.asarray(d_st),
+                                       rtol=1e-5, atol=1e-9)
+            np.testing.assert_array_equal(np.asarray(n_sh)[0],
+                                          np.asarray(n_st))
+            r_sh = jax.device_put(np.asarray(r_sh), sharding)
+            d_sh = jax.device_put(np.asarray(d_sh), sharding)
+    print("PPR_DELTA_SHARDED_OK")
+""")
+
+
+def test_sharded_ppr_delta_round_trace_parity_subprocess():
+    """The sharded delta-PPR round replays the stacked delta trace
+    round-for-round (ranks, residuals, message counts) under real
+    8-device collectives — dense and compact exchange."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", CHILD_DELTA], env=env, capture_output=True,
+        text=True, timeout=420)
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "PPR_DELTA_SHARDED_OK" in out.stdout
