@@ -72,3 +72,52 @@ def timed(fn, *args, repeats: int = 1, **kw):
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def add_obs_out_arg(ap):
+    """Grow a bench arg parser an ``--obs-out`` flag: also write the
+    BENCH columns as a Prometheus text exposition rendered from the obs
+    metrics registry (the same registry the engine/serving layers feed)."""
+    ap.add_argument("--obs-out", default=None,
+                    help="also write the report's numeric columns as a "
+                         "Prometheus text exposition (obs registry)")
+    return ap
+
+
+def emit_report_metrics(report: dict, registry=None):
+    """Re-emit every numeric column of a BENCH_*.json report through the
+    obs metrics registry as ``bench_value{bench=...,key=...}`` gauges, so
+    benchmark output and engine/serving telemetry share one exposition
+    path.  Returns the registry used."""
+    from repro import obs
+    reg = registry if registry is not None else obs.registry()
+    bench = str(report.get("bench", "bench"))
+    g = reg.gauge("bench_value",
+                  "numeric BENCH report columns (key = /-joined path)")
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k in ("per_round", "notes"):  # summary columns only
+                    continue
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        elif isinstance(node, (bool, int, float)):
+            g.labels(bench=bench, key=prefix).set(float(node))
+
+    walk("", report)
+    return reg
+
+
+def finish_report(report: dict, obs_out=None):
+    """Common bench epilogue: re-emit the report through the obs registry
+    and, with ``--obs-out``, write the Prometheus exposition next to the
+    BENCH json."""
+    reg = emit_report_metrics(report)
+    if obs_out:
+        with open(obs_out, "w") as fh:
+            fh.write(reg.render_prometheus())
+        print(f"wrote {obs_out}")
+    return reg

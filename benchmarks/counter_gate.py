@@ -1,0 +1,137 @@
+"""Counter-regression gate: exact engine counters on a tiny CI graph.
+
+Runs BFS, SSSP, and delta-PageRank on a fixed-seed RMAT partition with
+the flight recorder installed and compares the *exact* per-run totals —
+rounds, messages, pruned deliveries, live grid cells, DMA bytes — against
+the committed baselines in ``benchmarks/baselines/counter_gate.json``.
+Any drift in message counts or planner-mirror grid accounting (the
+numbers PRs 4–7 assert equal to the kernels' ``with_debug`` counters)
+fails CI with a field-level diff, so a perf "optimization" that silently
+changes how much work the engine does cannot land unnoticed.
+
+Wall-clock never participates: the gate compares only deterministic
+counters, so it is stable across machines.
+
+Usage::
+
+    python benchmarks/counter_gate.py            # compare (CI)
+    python benchmarks/counter_gate.py --update   # rewrite baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import common  # noqa: F401  (pins JAX_PLATFORMS=cpu before jax loads)
+import numpy as np
+
+from repro import obs
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.graph import generators
+
+BASELINE = pathlib.Path(__file__).parent / "baselines" / "counter_gate.json"
+
+# deliberately tiny: the gate must run in CI seconds, and the counters
+# are exact at any scale
+SCALE, EDGE_FACTOR, SEED = 8, 8, 7
+SHARDS, RPVO_MAX = 4, 4
+PR_ITERS, PR_TOL = 8, 3e-5
+
+
+def _totals(rounds, run):
+    rs = [r for r in rounds if r.run == run]
+    return {
+        "rounds": len(rs),
+        "frontier_first": rs[0].frontier if rs else 0,
+        "messages": sum(r.messages for r in rs),
+        "pruned": sum(r.pruned for r in rs),
+        "cells": sum(r.cells for r in rs),
+        "launched": sum(r.launched for r in rs),
+        "tile_dmas": sum(r.tile_dmas for r in rs),
+        "dma_bytes": sum(r.dma_bytes for r in rs),
+        "shard_messages": [sum(col) for col in zip(
+            *(r.shard_messages for r in rs))] if rs else [],
+    }
+
+
+def run_gate() -> dict:
+    g = generators.rmat(SCALE, edge_factor=EDGE_FACTOR, seed=SEED)
+    gw = g.with_random_weights(seed=SEED)
+    root = int(np.argmax(g.out_degrees()))
+    pcfg = PartitionConfig(num_shards=SHARDS, rpvo_max=RPVO_MAX)
+    part = build_partition(gw, pcfg)
+
+    from repro.apps.pagerank import _pr_graph
+    part_pr = build_partition(_pr_graph(g), pcfg)
+
+    out = {"graph": {"scale": SCALE, "edge_factor": EDGE_FACTOR,
+                     "seed": SEED, "n": g.n, "num_edges": g.num_edges,
+                     "root": root},
+           "runs": {}}
+    with obs.recording() as rec:
+        for name, sem in (("bfs", actions.BFS), ("sssp", actions.SSSP)):
+            for grid in ("dense", "worklist"):
+                cfg = engine.EngineConfig(use_pallas=True, grid_mode=grid)
+                init = engine.init_values(part, sem, {root: 0.0})
+                engine.run_stacked(sem, part, init, cfg)
+                key = f"{name}_{grid}"
+                out["runs"][key] = _totals(rec.rounds, sem.name)
+                rec.rounds.clear()
+        engine.run_pagerank_delta(
+            part_pr, tol=PR_TOL, max_rounds=PR_ITERS,
+            cfg=engine.EngineConfig(use_pallas=True, grid_mode="auto"))
+        out["runs"]["pagerank_delta"] = _totals(rec.rounds,
+                                                "pagerank_delta")
+    return out
+
+
+def diff(base: dict, got: dict, path="") -> list[str]:
+    errs = []
+    if isinstance(base, dict) and isinstance(got, dict):
+        for k in sorted(set(base) | set(got)):
+            if k not in base or k not in got:
+                errs.append(f"{path}/{k}: only in "
+                            f"{'baseline' if k in base else 'run'}")
+            else:
+                errs.extend(diff(base[k], got[k], f"{path}/{k}"))
+    elif base != got:
+        errs.append(f"{path}: baseline {base!r} != run {got!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baselines from this run")
+    args = ap.parse_args(argv)
+
+    got = run_gate()
+    if args.update:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        with open(BASELINE, "w") as fh:
+            json.dump(got, fh, indent=1, sort_keys=True)
+        print(f"wrote {BASELINE}")
+        return 0
+
+    if not BASELINE.exists():
+        print(f"missing baseline {BASELINE}; run with --update", flush=True)
+        return 2
+    with open(BASELINE) as fh:
+        base = json.load(fh)
+    errs = diff(base, got)
+    if errs:
+        print("counter gate FAILED — exact-counter drift:")
+        for e in errs:
+            print("  " + e)
+        return 1
+    n = len(base["runs"])
+    msgs = sum(r["messages"] for r in base["runs"].values())
+    print(f"counter gate OK: {n} runs, {msgs} messages, all counters exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -251,6 +251,7 @@ def main():
     ap.add_argument("--lanes", type=int, default=16)
     ap.add_argument("--server-queue", type=int, default=48)
     common.add_seed_arg(ap)
+    common.add_obs_out_arg(ap)
     common.add_grid_mode_arg(ap)
     args = ap.parse_args()
 
@@ -320,6 +321,7 @@ def main():
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"wrote {args.out}")
+    common.finish_report(report, obs_out=args.obs_out)
 
 
 if __name__ == "__main__":

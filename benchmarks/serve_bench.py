@@ -194,6 +194,7 @@ def main():
                     help="CI leg: tiny graph, 2x overload only, hard "
                          "consistency assertions")
     common.add_seed_arg(ap)
+    common.add_obs_out_arg(ap)
     args = ap.parse_args()
     if args.smoke:
         args.nodes, args.lanes = min(args.nodes, 9), 4
@@ -255,6 +256,7 @@ def main():
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"wrote {args.out}")
+    common.finish_report(report, obs_out=args.obs_out)
 
 
 if __name__ == "__main__":

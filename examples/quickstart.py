@@ -148,3 +148,29 @@ assert np.allclose(pr_delta, reference.pagerank(g, iters=200),
 print(f"worklist + delta-PageRank ok: BFS bit-identical under sparse "
       f"launches; delta-PR converged in {int(st_delta.iterations)} rounds, "
       f"{int(st_delta.pruned_actions)} diffusions pruned below tol")
+
+# 7. the flight recorder (ISSUE 7): install a recorder, re-run the BFS
+# fixpoint and a small QueryServer burst under it, and render the run
+# summary.  Recording is off by default and costs nothing when off; on,
+# every round's grid-cell / DMA columns are the same planner mirror the
+# differential tests assert against the kernel's debug counters.
+from repro import obs
+from repro.obs import report
+
+with obs.recording(meta={"demo": "quickstart"}) as recorder:
+    levels_rec, st_rec, _ = bfs(g, root, part=part, cfg=wl_cfg)
+    srv = QueryServer(part, n_lanes=2,
+                      serve=ServeConfig(max_queue=8, cache_size=8))
+    for r in (int(deg[0]), int(deg[1]), int(deg[2])):
+        srv.submit("bfs", r)
+    srv.run()
+    srv.submit("bfs", int(deg[0]))                 # repeat root: cache hit
+    srv.run()
+assert (levels_rec == levels).all()                # recording changes nothing
+assert sum(r.messages for r in recorder.rounds
+           if r.run == "bfs") == int(st_rec.messages)
+recorder.save("quickstart_obs_session.json")       # metrics + trace + rounds
+print("-- flight recorder (python -m repro.obs.report) " + "-" * 22)
+print(report.render(recorder.to_session()), end="")
+print("obs ok: session saved to quickstart_obs_session.json "
+      "(trace loads in Perfetto)")

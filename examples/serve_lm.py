@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models.model import Model
+from repro.lm.configs import get_config
+from repro.lm.models.model import Model
 
 for arch in ("phi3-medium-14b", "granite-moe-1b-a400m", "xlstm-125m"):
     cfg = get_config(arch).reduced()

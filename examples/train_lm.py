@@ -2,18 +2,18 @@
 hundred steps on local devices with checkpointing, then show restart.
 
 Defaults are CPU-sized; on a real slice pass --arch/--steps and a mesh
-via repro.launch.train instead.
+via repro.lm.launch.train instead.
 
   PYTHONPATH=src python examples/train_lm.py --steps 120
 """
 import argparse
 import dataclasses
 
-from repro.configs import get_config
+from repro.lm.configs import get_config
 from repro.data.pipeline import TokenPipeline
-from repro.models.model import Model
-from repro.train.optimizer import AdamW, cosine_schedule
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.lm.models.model import Model
+from repro.lm.train.optimizer import AdamW, cosine_schedule
+from repro.lm.train.trainer import Trainer, TrainerConfig
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=120)

@@ -48,7 +48,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import exchange
+from repro import exchange, obs
 from repro.core.actions import Semiring
 from repro.core.partition import Partition
 
@@ -234,16 +234,53 @@ def launch_planner(part: Partition, cfg: EngineConfig, q_pad: int = 1):
         lane_width=q_pad, smem_budget_bytes=cfg.smem_budget_bytes)
 
 
-def plan_round_worklist(planner, cfg: EngineConfig, gchg):
+def plan_round_worklist(planner, cfg: EngineConfig, gchg,
+                        with_info: bool = False):
     """One round's launch decision for a host-driven loop: a ``Worklist``
     under 'worklist' (and under 'auto' when the frontier is sparse
     enough), else None — the dense early-exit grid.  The auto threshold
     is applied inside ``plan`` so a dense round bails out before any
-    per-cell planning work."""
+    per-cell planning work.  ``with_info=True`` also returns the
+    planner's ``WorklistInfo`` accounting (None for dense rounds) — the
+    flight recorder's per-round mirror, captured for free from the plan
+    the launch actually uses."""
     thresh = (WORKLIST_AUTO_THRESHOLD if cfg.grid_mode == "auto"
               else None)
-    wl, _ = planner.plan(gchg, max_live_fraction=thresh)
-    return wl
+    wl, info = planner.plan(gchg, max_live_fraction=thresh)
+    return (wl, info) if with_info else wl
+
+
+def _obs_record_round(rec, run, part, cfg, planner, rnd, gchg, frontier,
+                      mc, work, wl, info, wall_s):
+    """Build + store one flight-recorder ``RoundRecord``: the grid-cell /
+    DMA columns come from the planner mirror of the launch this round
+    actually made (WorklistInfo for worklist launches, the dense-grid
+    mirror otherwise), plus the per-shard message-volume mirror feeding
+    the skew gauge.  Only ever called with a recorder installed — the
+    obs-off hot path never reaches here."""
+    grid = "dense" if wl is None else "worklist"
+    if planner is not None and cfg.use_pallas \
+            and cfg.pallas_mode == "fused":
+        path = planner.path
+        if wl is not None:
+            cells, launched = info.cells, info.launched
+            tile_dmas, dma_bytes = info.tile_dmas, info.dma_bytes
+        else:
+            d = planner.dense_mirror(gchg)
+            cells, launched = d["cells"], d["launched"]
+            tile_dmas, dma_bytes = d["tile_dmas"], d["dma_bytes"]
+    else:
+        path = cfg.pallas_mode if cfg.use_pallas else "jnp"
+        cells = launched = tile_dmas = dma_bytes = 0
+    shard = exchange.shard_message_mirror(
+        part.edge_mask, part.edge_src_root_flat, gchg)
+    rec.add_round(
+        obs.RoundRecord(
+            run=run, round=rnd, frontier=frontier, messages=mc, work=work,
+            pruned=mc - min(work, mc), grid=grid, path=path, cells=cells,
+            launched=launched, tile_dmas=tile_dmas, dma_bytes=dma_bytes,
+            wall_s=wall_s, shard_messages=[int(x) for x in shard]),
+        frontier_bitmap=gchg.copy() if rec.keep_frontiers else None)
 
 
 # --------------------------------------------------------------------------
@@ -269,7 +306,12 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
             "run_pagerank_stacked for counted sum-semiring rounds")
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
-    if cfg.wants_worklist:
+    # an installed flight recorder also routes through the host-driven
+    # loop (bit-identical values/stats for min semirings — the loop the
+    # worklist grid already runs) so each round can be recorded without
+    # adding syncs to the traced while_loop; with no recorder the
+    # dispatch below is exactly the pre-obs one
+    if cfg.wants_worklist or obs.get_recorder() is not None:
         return _run_stacked_hostloop(sem, part, arrays, cfg, init_val,
                                      init_changed)
 
@@ -324,9 +366,20 @@ def _run_stacked_hostloop(sem, part, arrays, cfg, init_val, init_changed):
     Python loop so each round's frontier can plan its launch host-side.
     One jitted round fn serves every round — jit retraces only when the
     worklist's power-of-two length bucket changes (O(log cells) traces)
-    or a dense round passes ``worklist=None``."""
+    or a dense round passes ``worklist=None``.
+
+    Also the flight-recorder path for ``grid_mode='dense'``: with a
+    recorder installed each round appends a ``RoundRecord`` (frontier,
+    messages, planner-mirror cells/DMA, path decision, wall time) —
+    recorder-only host work, after the round's existing frontier
+    download."""
     S, R_max = part.S, part.R_max
-    planner = launch_planner(part, cfg)
+    rec = obs.get_recorder()
+    planner = (launch_planner(part, cfg)
+               if cfg.wants_worklist
+               or (rec is not None and cfg.use_pallas
+                   and cfg.pallas_mode == "fused")
+               else None)
 
     @jax.jit
     def round_fn(val, chg, worklist):
@@ -344,7 +397,15 @@ def _run_stacked_hostloop(sem, part, arrays, cfg, init_val, init_changed):
     while it < cfg.max_iters:
         if not chg_h.any():
             break
-        wl = plan_round_worklist(planner, cfg, chg_h.reshape(-1))
+        gchg = chg_h.reshape(-1)
+        wl = info = None
+        if cfg.wants_worklist:
+            wl, info = plan_round_worklist(planner, cfg, gchg,
+                                           with_info=True)
+        frontier = int(gchg.sum()) if rec is not None else 0
+        t0 = rec.tracer.now() if rec is not None else 0.0
+        span = (rec.tracer.span("round", track=f"engine/{sem.name}",
+                                round=it + 1) if rec is not None else None)
         val, chg, mc = round_fn(val, chg, wl)
         chg_h = np.asarray(chg)
         mc, work = int(mc), int(chg_h.sum())
@@ -352,6 +413,11 @@ def _run_stacked_hostloop(sem, part, arrays, cfg, init_val, init_changed):
         msgs += mc
         work_total += work
         pruned += mc - min(work, mc)
+        if rec is not None:
+            wall = rec.tracer.now() - t0
+            span.end(frontier=frontier, messages=mc)
+            _obs_record_round(rec, sem.name, part, cfg, planner, it, gchg,
+                              frontier, mc, work, wl, info, wall)
     stats = _host_stats(it, msgs, work_total, pruned)
     if cfg.collapse == "deferred":
         val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
@@ -423,7 +489,12 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
     S, R_max = part.S, part.R_max
     base = (1.0 - damping) / part.n
     tol_t = _tol_table(part, tol)
-    planner = launch_planner(part, cfg) if cfg.wants_worklist else None
+    rec = obs.get_recorder()
+    planner = (launch_planner(part, cfg)
+               if cfg.wants_worklist
+               or (rec is not None and cfg.use_pallas
+                   and cfg.pallas_mode == "fused")
+               else None)
 
     @jax.jit
     def round_fn(rank, delta, worklist):
@@ -439,8 +510,15 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
     while it < max_rounds:
         if not chg_h.any():
             break
-        wl = (plan_round_worklist(planner, cfg, chg_h.reshape(-1))
-              if planner is not None else None)
+        gchg = chg_h.reshape(-1)
+        wl = info = None
+        if cfg.wants_worklist:
+            wl, info = plan_round_worklist(planner, cfg, gchg,
+                                           with_info=True)
+        frontier = int(gchg.sum()) if rec is not None else 0
+        t0 = rec.tracer.now() if rec is not None else 0.0
+        span = (rec.tracer.span("round", track="engine/pagerank_delta",
+                                round=it + 1) if rec is not None else None)
         rank, delta, chg, mc = round_fn(rank, delta, wl)
         chg_h = np.asarray(chg)
         mc, work = int(mc), int(chg_h.sum())
@@ -448,6 +526,11 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
         msgs += mc
         work_total += work
         pruned += mc - min(work, mc)
+        if rec is not None:
+            wall = rec.tracer.now() - t0
+            span.end(frontier=frontier, messages=mc)
+            _obs_record_round(rec, "pagerank_delta", part, cfg, planner,
+                              it, gchg, frontier, mc, work, wl, info, wall)
     return rank, _host_stats(it, msgs, work_total, pruned)
 
 
@@ -505,10 +588,28 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
     rank = jax.device_put(init, sharding)
     delta = jax.device_put(init, sharding)
     it = msgs = work_total = pruned = 0
+    rec = obs.get_recorder()
+    rec_path = "jnp"
+    if rec is not None and cfg.use_pallas and cfg.pallas_mode == "fused":
+        from repro.kernels.fused_relax_reduce import select_kernel_path
+        rec_path, _ = select_kernel_path(
+            part.S * part.R_max, 1, cfg.vmem_budget_bytes,
+            smem_budget_bytes=cfg.smem_budget_bytes)
+    elif cfg.use_pallas:
+        rec_path = cfg.pallas_mode
     # the round's psum'd live-slot count IS the next round's frontier
     # size — only the initial frontier needs a host check
     live = bool(((np.asarray(delta) > tol) & slot_valid).any())
     while live and it < max_rounds:
+        if rec is not None:
+            # recorder-only frontier download: the per-shard message
+            # mirror needs the live-residual bitmap host-side
+            gchg = ((np.asarray(delta) > tol) & slot_valid).reshape(-1)
+            frontier = int(gchg.sum())
+            t0 = rec.tracer.now()
+            span = rec.tracer.span(
+                "round", track="engine/pagerank_delta_sharded",
+                round=it + 1)
         rank, delta, counts, work = fn(arrays_dev, rank, delta)
         mc, w = int(counts[0]), int(work[0])
         it += 1
@@ -516,6 +617,21 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
         work_total += w
         pruned += mc - min(w, mc)
         live = w > 0
+        if rec is not None:
+            wall = rec.tracer.now() - t0
+            span.end(frontier=frontier, messages=mc)
+            shard = exchange.shard_message_mirror(
+                part.edge_mask, part.edge_src_root_flat, gchg)
+            rec.add_round(
+                obs.RoundRecord(
+                    run="pagerank_delta_sharded", round=it,
+                    frontier=frontier, messages=mc, work=w,
+                    pruned=mc - min(w, mc), grid="dense", path=rec_path,
+                    cells=0, launched=0, tile_dmas=0, dma_bytes=0,
+                    wall_s=wall,
+                    shard_messages=[int(x) for x in shard]),
+                frontier_bitmap=gchg.copy() if rec.keep_frontiers
+                else None)
     return rank, _host_stats(it, msgs, work_total, pruned)
 
 

@@ -19,8 +19,9 @@ from repro.exchange.primitives import (
 from repro.exchange.rounds import (
     axis_tuple, delta_pagerank_round_shard, delta_pagerank_round_stacked,
     fixpoint_round_stacked, make_shard_fixpoint_round,
-    pagerank_round_stacked, shard_collapse, shard_inbox, shard_total_in,
-    stacked_collapse, stacked_inbox, stacked_total_in,
+    pagerank_round_stacked, shard_collapse, shard_inbox,
+    shard_message_mirror, shard_total_in, stacked_collapse, stacked_inbox,
+    stacked_total_in,
 )
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "exchange_volume", "fixpoint_round_stacked",
     "make_shard_fixpoint_round", "pagerank_round_stacked", "reduce_axis0",
     "relax", "scatter_inbox", "shard_collapse", "shard_inbox",
-    "shard_total_in", "stacked_collapse", "stacked_compact_partial",
+    "shard_message_mirror", "shard_total_in", "stacked_collapse",
+    "stacked_compact_partial",
     "stacked_dense_inbox", "stacked_inbox", "stacked_total_in",
 ]

@@ -276,3 +276,24 @@ def delta_pagerank_round_shard(sem: Semiring, arrays_s, cfg, S: int,
     new_rank = rank + new_delta
     new_chg = (new_delta > tol) & arrays_s.slot_valid
     return new_rank, new_delta, new_chg, counts
+
+
+# --------------------------------------------------------------------------
+# host-side accounting mirrors (flight-recorder feeds; never traced)
+# --------------------------------------------------------------------------
+
+def shard_message_mirror(edge_mask, edge_src_root_flat, gchg):
+    """Per-shard message-volume mirror: how many live edge messages each
+    shard's edge list delivers this round — ``edge_mask & frontier[src]``
+    summed per shard, exactly the population ``relax`` counts (so the
+    vector sums to the round's kernel-side message count).  Host-side
+    numpy over the (S, E_max) partition arrays; feeds the flight
+    recorder's per-shard skew/balance gauge (the "message balance across
+    workers" axis of the distributed-graph-systems evaluation
+    literature)."""
+    import numpy as np
+
+    mask = np.asarray(edge_mask)
+    srcs = np.asarray(edge_src_root_flat)
+    g = np.asarray(gchg).reshape(-1)
+    return (mask & g[srcs]).sum(axis=tuple(range(1, mask.ndim)))

@@ -986,6 +986,31 @@ class WorklistPlanner:
         _, live = self._live_map(gchg)
         return live.sum() / max(self.total_cells, 1)
 
+    def dense_mirror(self, gchg) -> dict:
+        """Mirror of the DENSE grid's launch for this planner's edge set:
+        live cells under the two-level skip, and — on the tiled path —
+        the per-chunk tile-list DMA schedule (every live (i, j) cell
+        fetches its chunk's distinct active-source tiles), matching
+        ``fused_grid_cells``'s ``fused_live``/``fused_tile_dmas``/
+        ``dma_bytes`` columns exactly.  The flight recorder uses this for
+        rounds that kept the dense grid (grid_mode='dense', or 'auto'
+        above the live-fraction threshold)."""
+        act, live = self._live_map(gchg)
+        out = {"cells": int(live.sum()), "launched": self.total_cells,
+               "tile_dmas": 0, "dma_bytes": 0}
+        if self.path == "tiled":
+            # distinct tiles per chunk among frontier-active edges: the
+            # WorklistPlanner.plan first-occurrence trick, per chunk row
+            t = np.sort(np.where(act, self.tile_of, self.n_tiles), axis=1)
+            first = np.concatenate(
+                [np.ones((t.shape[0], 1), bool), t[:, 1:] != t[:, :-1]],
+                axis=1)
+            ntiles = (first & (t < self.n_tiles)).sum(axis=1)
+            out["tile_dmas"] = int((live * ntiles[None, :]).sum())
+            out["dma_bytes"] = out["tile_dmas"] * self.vblk \
+                * self.lane_width * 4
+        return out
+
     def plan(self, gchg, pad_to: int = WL_PAD, dst_filter: bool = True,
              max_live_fraction: float | None = None):
         """Plan one round's launch from the (V,) bool frontier.

@@ -1,0 +1,10 @@
+"""Quarantined LM scaffolding (seed-era models / training / serving glue).
+
+The graph engine (`core`, `exchange`, `kernels`, `query`, `serve`
+admission/scheduling) must not import anything from this package at
+module-import time: these trees pull in the full transformer stack
+(models, optimizer, train step, launch specs) which the paper
+reproduction does not exercise.  Import `repro.lm.*` explicitly from
+LM entry points (examples/train_lm.py, examples/serve_lm.py, the LM
+test files) only.
+"""

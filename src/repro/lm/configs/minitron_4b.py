@@ -1,0 +1,10 @@
+"""Minitron-4B [arXiv:2407.14679]: pruned Nemotron — 32L d3072 24H GQA
+kv=8, squared-ReLU non-gated FFN d_ff 9216, vocab 256000."""
+from repro.lm.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=9216, vocab=256000,
+    mlp_act="relu2", pos="rope",
+)

@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+for the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh, printing
+``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs/bytes), and
+parsing collective payload bytes from the compiled HLO — the §Roofline
+inputs.
+
+Results are cached as JSON under ``results/dryrun/`` (one file per cell)
+so reruns and the benchmark harness are incremental.
+
+Usage:
+  PYTHONPATH=src python -m repro.lm.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.lm.launch.dryrun --all [--multi-pod] [--graph]
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.configs import ARCHS, SHAPES, cell_applicable, get_config
+from repro.lm.launch.mesh import make_ctx, make_production_mesh
+from repro.lm.launch import specs as SP
+from repro.lm.models.model import Model
+from repro.sharding.specs import ShardCtx, sharding_for
+from repro.lm.train.optimizer import AdamW, cosine_schedule
+from repro.lm.train.train_step import TrainState, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# --- hardware constants (TPU v5e-class, per brief) -------------------------
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*([^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by kind."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or (m.group(3) == "-done"):
+            continue  # count -start (or plain), skip -done duplicates
+        result_part, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(result_part):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DT_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+def _lower_cell(arch: str, shape_name: str, multi_pod: bool,
+                rules: str = "default", opts: tuple = ()):
+    import dataclasses
+    cfg = get_config(arch)
+    if opts:
+        cfg = dataclasses.replace(cfg, opts=tuple(opts))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, rules=rules)
+    model = Model(cfg)
+    batch = SP.input_specs(cfg, shape, ctx)
+
+    if shape.kind == "train":
+        params, axes = SP.abstract_params(model, ctx)
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10000))
+        opt_shapes = SP.abstract_opt_state(opt, params, axes, ctx)
+        step = make_train_step(model, opt, ctx)
+        state = TrainState(params, opt_shapes, None)
+        return jax.jit(step).lower(state, batch), mesh
+
+    params, axes = SP.abstract_params(model, ctx)
+    if shape.kind == "prefill":
+        caches, _ = SP.abstract_caches(
+            model, shape.global_batch,
+            shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0),
+            ctx)
+
+        def prefill(p, b, c):
+            return model.prefill(p, b, c, ctx)
+
+        return jax.jit(prefill).lower(params, batch, caches), mesh
+
+    # decode: one new token against a KV cache of seq_len
+    max_len = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    caches, _ = SP.abstract_caches(model, shape.global_batch, max_len, ctx)
+    if cfg.family == "enc_dec":
+        adt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        caches["enc"] = {
+            "out": jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.encoder.n_frames, cfg.d_model), adt,
+                sharding=sharding_for(("act_batch", None, None), ctx,
+                                      (shape.global_batch,
+                                       cfg.encoder.n_frames, cfg.d_model))),
+            "pos": jax.ShapeDtypeStruct((cfg.encoder.n_frames,), jnp.int32),
+        }
+
+    def decode(p, t, c, i):
+        return model.decode_step(p, t, c, i, ctx)
+
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(decode).lower(params, batch["tokens"], caches, idx), mesh
+
+
+def lower_graph_cell(multi_pod: bool, n_log2: int = 22, edge_factor: int = 16,
+                     rpvo_max: int = 16, mode: str = "rhizome",
+                     compact: bool = False):
+    """The paper's own technique as a dry-run cell: BFS on an RMAT-<n_log2>
+    scale partition, shard_map'd over the full mesh. Shapes are derived
+    analytically (no 128M-edge host build)."""
+    from repro.core import actions
+    from repro.core.engine import DeviceArrays, EngineConfig, make_sharded_fn
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    S = int(np.prod(list(mesh.shape.values())))
+    axis_names = tuple(mesh.axis_names)
+    n = 1 << n_log2
+    E = edge_factor * n
+    # analytic padded dims (balanced allocator ⇒ near-ideal)
+    if mode == "rhizome":
+        R_total = int(n * 1.02) + rpvo_max  # ~2% hub replicas (R22-like)
+        E_max = int(np.ceil(E / S) * 1.05)
+    elif mode == "rpvo":
+        R_total = n
+        E_max = int(np.ceil(E / S) * 1.05)
+    else:  # 'simple': hub out-degree ~ n^0.55 concentrates on one shard
+        R_total = n
+        E_max = int(np.ceil(E / S) * 8)    # measured skew factor for R22
+    R_max = int(np.ceil(R_total / S))
+    K = rpvo_max if mode == "rhizome" else 1
+
+    ecfg = EngineConfig(exchange="compact" if compact else "dense")
+    fn, sharding = make_sharded_fn(
+        actions.BFS, S, R_max, mesh, axis_names, ecfg)
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+    # compact-exchange plan shapes: distinct dsts per (src,tgt) bounded by
+    # E_max/S with 2x pad for skew; rhizome table ~2% of slots
+    P_t = max(int(np.ceil(E_max / S * 2)), 8)
+    R_rz = max(int(np.ceil(R_max * 0.02)), 8) if mode == "rhizome" else 1
+    arrays = DeviceArrays(
+        edge_src_root_flat=sds((S, E_max), jnp.int32),
+        edge_dst_flat=sds((S, E_max), jnp.int32),
+        edge_w=sds((S, E_max), jnp.float32),
+        edge_mask=sds((S, E_max), jnp.bool_),
+        sibling_flat=sds((S, R_max, K), jnp.int32),
+        sibling_mask=sds((S, R_max, K), jnp.bool_),
+        slot_valid=sds((S, R_max), jnp.bool_),
+        edge_dst_compact=sds((S, E_max), jnp.int32),
+        inbox_slot_map=sds((S, S, P_t), jnp.int32),
+        rz_local=sds((S, R_rz), jnp.int32),
+        rz_sibling_idx=sds((S, R_rz, K), jnp.int32),
+        rz_sibling_mask=sds((S, R_rz, K), jnp.bool_),
+    )
+    val = sds((S, R_max), jnp.float32)
+    return fn.lower(arrays, val), mesh
+
+
+def lower_pipeline_cell(n_micro: int = 8, mb: int = 32, d: int = 4096,
+                        layers_per_stage: int = 4):
+    """Pipeline-parallel proof cell: a 2-stage GPipe schedule over the
+    'pod' axis of the production 2x16x16 mesh, transformer-MLP stages."""
+    import jax.numpy as jnp
+    from repro.sharding.pipeline import pipeline_apply
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    mesh = make_production_mesh(multi_pod=True)
+
+    def stage_fn(wp, x):  # wp: (layers_per_stage, d, 4d) + (..., 4d, d)
+        w1, w2 = wp
+        for i in range(layers_per_stage):
+            h = jax.nn.gelu(x @ w1[i])
+            x = x + h @ w2[i]
+        return x
+
+    fn = pipeline_apply(stage_fn, n_stages=2, n_micro=n_micro, mesh=mesh)
+    sh = NamedSharding(mesh, P("pod"))
+    w1 = jax.ShapeDtypeStruct((2, layers_per_stage, d, 4 * d), jnp.bfloat16,
+                              sharding=sh)
+    w2 = jax.ShapeDtypeStruct((2, layers_per_stage, 4 * d, d), jnp.bfloat16,
+                              sharding=sh)
+    x = jax.ShapeDtypeStruct((n_micro, mb, d), jnp.bfloat16,
+                             sharding=NamedSharding(mesh, P()))
+    return jax.jit(fn).lower((w1, w2), x), mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: str = "default", force: bool = False,
+             graph_mode: str | None = None, opts: tuple = ()) -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}__{rules}"
+    if opts:
+        tag += "__" + "-".join(opts)
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "multi_pod": multi_pod, "rules": rules,
+                 "opts": list(opts)}
+    if graph_mode is None:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, reason = cell_applicable(cfg, shape)
+        if not ok:
+            rec["skipped"] = reason
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            return rec
+
+    t0 = time.time()
+    try:
+        if graph_mode is not None:
+            lowered, mesh = lower_graph_cell(
+                multi_pod, mode=graph_mode, compact="compact" in opts)
+        else:
+            lowered, mesh = _lower_cell(arch, shape_name, multi_pod, rules,
+                                        opts)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["xla_cost_raw"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
+        hlo = compiled.as_text()
+        with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as zf:
+            zf.write(hlo)   # re-analyzable without recompiling
+        # trip-count-aware per-device analysis (XLA's cost_analysis counts
+        # while bodies once — useless under scan-over-layers)
+        from repro.lm.launch import hlo_analysis
+        ana = hlo_analysis.analyze(hlo)
+        rec["num_devices"] = int(np.prod(list(mesh.shape.values())))
+        chips = rec["num_devices"]
+        rec["per_device"] = {
+            "flops": ana.flops,
+            "bytes_accessed": ana.bytes_accessed,
+            "collective_bytes": dict(ana.collective_bytes),
+            "collective_total": ana.collective_total,
+            "has_dynamic_loops": ana.has_dynamic_loops,
+            "num_whiles": ana.num_whiles,
+        }
+        rec["collectives"] = parse_collective_bytes(hlo)  # un-scaled reference
+        # roofline terms: per-device program vs per-chip peaks
+        rec["roofline"] = {
+            "compute_s": ana.flops / PEAK_FLOPS,
+            "memory_s": ana.bytes_accessed / HBM_BW,
+            "collective_s": ana.collective_total / ICI_BW,
+        }
+        terms = rec["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: terms[k])
+        rec["roofline"]["dominant"] = dom
+        rec["roofline"]["bound_s"] = terms[dom]
+        if graph_mode is None:
+            mf = SP.model_flops(get_config(arch), SHAPES[shape_name])
+            rec["model_flops"] = mf
+            global_flops = ana.flops * chips
+            rec["useful_compute_ratio"] = (
+                (mf / global_flops) if global_flops else None)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="dry-run the graph engine cells")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="dry-run the 2-stage GPipe cell on the 2x16x16 mesh")
+    ap.add_argument("--graph-mode", default="rhizome",
+                    choices=["rhizome", "rpvo", "simple"])
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--opts", default="",
+                    help="comma list: moe_grouped,attn_chunked,chunked_ce,scan_unroll")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.pipeline:
+        import json as _json
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        t0 = time.time()
+        lowered, mesh = lower_pipeline_cell()
+        compiled = lowered.compile()
+        rec = {"arch": "pipeline-gpipe2", "shape": "micro8x32x4096",
+               "multi_pod": True, "ok": True,
+               "compile_s": round(time.time() - t0, 1),
+               "collectives": parse_collective_bytes(compiled.as_text())}
+        with open(os.path.join(RESULTS_DIR, "pipeline-gpipe2.json"), "w") as f:
+            _json.dump(rec, f, indent=1)
+        print("pipeline-gpipe2 2x16x16 OK",
+              {k: f"{v:.2e}" for k, v in rec["collectives"].items()})
+        return
+    if args.graph:
+        for mp in pods:
+            cells.append((f"graph-bfs-{args.graph_mode}", "rmat22", mp,
+                          args.graph_mode))
+    elif args.all:
+        for arch in sorted(ARCHS):
+            for shape in SHAPES:
+                for mp in pods:
+                    cells.append((arch, shape, mp, None))
+    else:
+        assert args.arch and args.shape
+        for mp in pods:
+            cells.append((args.arch, args.shape, mp, None))
+
+    opts = tuple(o for o in args.opts.split(",") if o)
+    for arch, shape, mp, gm in cells:
+        rec = run_cell(arch, shape, mp, rules=args.rules, force=args.force,
+                       graph_mode=gm, opts=opts)
+        status = ("SKIP " + rec.get("skipped", "")) if "skipped" in rec else \
+            ("OK" if rec.get("ok") else "FAIL " + rec.get("error", ""))
+        r = rec.get("roofline", {})
+        print(f"{arch:24s} {shape:12s} {'pod2' if mp else 'pod1'} "
+              f"{status[:90]}"
+              + (f"  comp={r.get('compute_s', 0):.3e}s "
+                 f"mem={r.get('memory_s', 0):.3e}s "
+                 f"coll={r.get('collective_s', 0):.3e}s "
+                 f"dom={r.get('dominant', '')}" if r else ""))
+
+
+if __name__ == "__main__":
+    main()

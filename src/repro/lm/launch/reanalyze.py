@@ -1,0 +1,51 @@
+"""Recompute roofline terms from cached .hlo.gz files (no recompilation).
+
+  PYTHONPATH=src python -m repro.lm.launch.reanalyze
+"""
+import glob
+import gzip
+import json
+import os
+
+from repro.lm.launch import hlo_analysis
+from repro.lm.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, RESULTS_DIR
+
+
+def main():
+    for jpath in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        with gzip.open(hpath, "rt") as zf:
+            hlo = zf.read()
+        ana = hlo_analysis.analyze(hlo)
+        rec["per_device"] = {
+            "flops": ana.flops, "bytes_accessed": ana.bytes_accessed,
+            "collective_bytes": dict(ana.collective_bytes),
+            "collective_total": ana.collective_total,
+            "has_dynamic_loops": ana.has_dynamic_loops,
+            "num_whiles": ana.num_whiles,
+        }
+        rec["roofline"] = {
+            "compute_s": ana.flops / PEAK_FLOPS,
+            "memory_s": ana.bytes_accessed / HBM_BW,
+            "collective_s": ana.collective_total / ICI_BW,
+        }
+        t = rec["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+        rec["roofline"]["dominant"] = dom
+        rec["roofline"]["bound_s"] = t[dom]
+        if rec.get("model_flops"):
+            g = ana.flops * rec["num_devices"]
+            rec["useful_compute_ratio"] = rec["model_flops"] / g if g else None
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(os.path.basename(jpath), "reanalyzed")
+
+
+if __name__ == "__main__":
+    main()

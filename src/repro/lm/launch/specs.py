@@ -1,0 +1,135 @@
+"""Abstract inputs (ShapeDtypeStructs) + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct stand-ins for every
+model input — no device allocation. ``abstract_train_state`` /
+``abstract_serve_state`` do the same for params/opt/caches via eval_shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.configs.base import ModelConfig, ShapeSpec
+from repro.lm.models.model import Model
+from repro.sharding.specs import ShardCtx, sharding_for, spec_for
+from repro.lm.train.optimizer import AdamW
+from repro.lm.train.train_step import batch_axes, cache_axes_tree
+
+
+def _sds(shape, dtype, axes=None, ctx: ShardCtx | None = None):
+    sh = None
+    if ctx is not None and ctx.mesh is not None and axes is not None:
+        sh = sharding_for(axes, ctx, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                ctx: ShardCtx | None = None) -> dict:
+    """Batch stand-ins for one cell. train/prefill: full (B, S) tokens;
+    decode: (B, 1) next tokens."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    adt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    batch = {"tokens": _sds((B, S), jnp.int32, ("act_batch", None), ctx)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32, ("act_batch", None), ctx)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["patch_embeds"] = _sds(
+            (B, cfg.n_patches, cfg.d_model), adt, ("act_batch", None, None), ctx)
+    if cfg.family == "enc_dec" and shape.kind != "decode":
+        batch["frames"] = _sds(
+            (B, cfg.encoder.n_frames, cfg.d_model), adt,
+            ("act_batch", None, None), ctx)
+    return batch
+
+
+def abstract_params(model: Model, ctx: ShardCtx | None = None):
+    """(param ShapeDtypeStructs with shardings, logical axes tree)."""
+    box = {}
+
+    def f(key):
+        params, axes = model.init(key)
+        box["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    axes = box["axes"]
+    if ctx is not None and ctx.mesh is not None:
+        shapes = jax.tree.map(
+            lambda s, a: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sharding_for(a, ctx, s.shape)),
+            shapes, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return shapes, axes
+
+
+def abstract_opt_state(opt: AdamW, params_shapes, axes, ctx):
+    shapes = jax.eval_shape(opt.init, params_shapes)
+    if ctx is not None and ctx.mesh is not None:
+        def shard_moments(tree):
+            return jax.tree.map(
+                lambda s, a: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=sharding_for(a, ctx, s.shape)),
+                tree, axes,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        shapes = shapes._replace(mu=shard_moments(shapes.mu),
+                                 nu=shard_moments(shapes.nu))
+    return shapes
+
+
+def abstract_caches(model: Model, batch_size: int, max_len: int, ctx,
+                    cache_dtype=None):
+    shapes = jax.eval_shape(
+        functools.partial(model.init_cache, batch_size, max_len,
+                          cache_dtype=cache_dtype))
+    axes = cache_axes_tree(shapes)
+    if ctx is not None and ctx.mesh is not None:
+        shapes = jax.tree.map(
+            lambda s, a: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sharding_for(a, ctx, s.shape)),
+            shapes, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return shapes, axes
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = B·1."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * D
+    D = shape.global_batch * 1
+    return 2.0 * n_active * D
+
+
+def param_count(cfg: ModelConfig) -> float:
+    model = Model(cfg)
+    shapes, _ = abstract_params(model)
+    return float(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Params touched per token (MoE: top_k of routed + shared + backbone)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    # routed expert params per MoE layer
+    per_expert = 3 * cfg.d_model * m.d_expert_ff
+    n_moe_layers = _num_moe_layers(cfg)
+    routed_total = n_moe_layers * m.num_experts * per_expert
+    routed_active = n_moe_layers * m.top_k * per_expert
+    return total - routed_total + routed_active
+
+
+def _num_moe_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.moe.first_dense_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // 2   # MoE every other layer
+    return 0

@@ -1,0 +1,84 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.lm.launch.train --arch minitron-4b --reduced \
+      --steps 50 --global-batch 8 --seq-len 64
+
+Full configs target the production mesh (--mesh data,model sizes must
+match available devices); --reduced runs the smoke-scale variant on
+whatever devices exist (CPU included). Checkpoints/restarts, async
+saves, straggler monitoring and gradient compression are all flags.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.lm.launch.mesh import make_ctx
+from repro.lm.models.model import Model
+from repro.lm.train.optimizer import AdamW, cosine_schedule
+from repro.lm.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4,2' => (data=4, model=2) over local devices")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+
+    ctx = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        dev = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+        mesh = jax.sharding.Mesh(dev, ("data", "model"))
+        ctx = make_ctx(mesh)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
+                         global_batch=args.global_batch, seed=0)
+
+    extra = None
+    if cfg.family == "vlm":
+        def extra(step):
+            k = jax.random.PRNGKey(step)
+            return {"patch_embeds": jax.random.normal(
+                k, (args.global_batch, cfg.n_patches, cfg.d_model),
+                jnp.float32)}
+    elif cfg.family == "enc_dec":
+        def extra(step):
+            k = jax.random.PRNGKey(step)
+            return {"frames": jax.random.normal(
+                k, (args.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                jnp.float32)}
+
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=10, total=args.steps))
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir,
+                         compress_grads=args.compress_grads, log_every=10)
+    trainer = Trainer(model, opt, pipe, tcfg, ctx, extra_batch=extra)
+    trainer.run()
+    for row in trainer.history:
+        print(",".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.lm.models.model import Model
+
+__all__ = ["Model"]

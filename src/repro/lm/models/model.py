@@ -1,0 +1,458 @@
+"""Model assembly: every assigned architecture as a sequence of scanned
+homogeneous *stages*.
+
+Stage kinds:
+  attn_dense   — pre-norm GQA attention + dense MLP (all dense archs)
+  attn_moe     — attention + MoE FFN (granite, deepseek)
+  jamba_period — Jamba period of `hybrid.period` sublayers: Mamba
+                 everywhere except attention at `hybrid.attn_index`;
+                 MoE FFN every other sublayer
+  xlstm_pair   — mLSTM block + sLSTM block (no FFN; d_ff = 0)
+  enc_layer    — bidirectional encoder layer (whisper)
+  dec_layer    — causal self-attn + cross-attn + MLP (whisper decoder)
+
+Within a stage, per-layer params are stacked on a leading axis and the
+stack is folded with ``lax.scan`` (keeps HLO size O(1) in depth); each
+scan body is optionally wrapped in ``jax.checkpoint`` (remat).
+
+Modes: ``loss`` (train), ``prefill`` (build caches, return logits),
+``decode_step`` (one token, O(1) state updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.configs.base import ModelConfig
+from repro.lm.models import layers as L
+from repro.lm.models import moe as M
+from repro.lm.models import ssm as S
+from repro.sharding.specs import ShardCtx, constrain
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    kind: str
+    count: int
+    d_ff: int = 0          # dense-FFN override (deepseek first layer)
+    use_moe: bool = False
+
+
+def build_stages(cfg: ModelConfig) -> list[Stage]:
+    if cfg.family in ("dense", "vlm"):
+        return [Stage("attn_dense", cfg.n_layers)]
+    if cfg.family == "moe":
+        st = []
+        fd = cfg.moe.first_dense_layers
+        if fd:
+            st.append(Stage("attn_dense", fd, d_ff=cfg.moe.first_dense_d_ff))
+        st.append(Stage("attn_moe", cfg.n_layers - fd, use_moe=True))
+        return st
+    if cfg.family == "hybrid":
+        per = cfg.hybrid.period
+        assert cfg.n_layers % per == 0
+        return [Stage("jamba_period", cfg.n_layers // per, use_moe=True)]
+    if cfg.family == "ssm":
+        assert cfg.n_layers % 2 == 0
+        return [Stage("xlstm_pair", cfg.n_layers // 2)]
+    if cfg.family == "enc_dec":
+        return [Stage("enc_layer", cfg.encoder.n_layers),
+                Stage("dec_layer", cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stages = build_stages(cfg)
+        self.pdt = _dt(cfg.param_dtype)
+        self.adt = _dt(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key, stage: Stage):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        norm = lambda: L.ones_init((cfg.d_model,), ("embed",), self.pdt)
+        if stage.kind in ("attn_dense", "attn_moe", "enc_layer"):
+            p = {"ln1": norm(), "attn": L.init_attention(ks[0], cfg, self.pdt),
+                 "ln2": norm()}
+            if stage.use_moe:
+                p["moe"] = M.init_moe(ks[1], cfg, self.pdt)
+            else:
+                p["mlp"] = L.init_mlp(ks[1], cfg, self.pdt,
+                                      d_ff=stage.d_ff or None)
+            return p
+        if stage.kind == "dec_layer":
+            return {
+                "ln1": norm(), "self_attn": L.init_attention(ks[0], cfg, self.pdt),
+                "ln2": norm(), "cross_attn": L.init_attention(ks[1], cfg, self.pdt),
+                "ln3": norm(), "mlp": L.init_mlp(ks[2], cfg, self.pdt),
+            }
+        if stage.kind == "jamba_period":
+            subs = {}
+            hy = cfg.hybrid
+            for i in range(hy.period):
+                kk = jax.random.split(ks[3 + i % 4], 4)
+                sub = {"ln1": norm()}
+                if i == hy.attn_index:
+                    sub["attn"] = L.init_attention(kk[0], cfg, self.pdt)
+                else:
+                    sub["mamba"] = S.init_mamba(kk[0], cfg, self.pdt)
+                sub["ln2"] = norm()
+                if i % 2 == 1 and cfg.moe is not None:
+                    sub["moe"] = M.init_moe(kk[1], cfg, self.pdt)
+                else:
+                    sub["mlp"] = L.init_mlp(kk[1], cfg, self.pdt)
+                subs[f"sub{i}"] = sub
+            return subs
+        if stage.kind == "xlstm_pair":
+            return {
+                "ln_m": norm(), "mlstm": S.init_mlstm(ks[0], cfg, self.pdt),
+                "ln_s": norm(), "slstm": S.init_slstm(ks[1], cfg, self.pdt),
+            }
+        raise ValueError(stage.kind)
+
+    def init(self, key):
+        """Returns (params, logical_axes) pytrees."""
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.stages) + 3)
+        tree = {"embed": L.init_embedding(keys[0], cfg, self.pdt),
+                "unembed": L.init_unembed(keys[1], cfg, self.pdt),
+                "ln_f": L.ones_init((cfg.d_model,), ("embed",), self.pdt)}
+        is_leaf = lambda x: isinstance(x, L.Leaf)
+        for si, stage in enumerate(self.stages):
+            lkeys = jax.random.split(keys[2 + si], stage.count)
+            per = [self._init_layer(lkeys[i], stage) for i in range(stage.count)]
+            stacked = jax.tree.map(
+                lambda *ls: L.Leaf(jnp.stack([l.value for l in ls]),
+                                   ("layers",) + ls[0].axes),
+                *per, is_leaf=is_leaf)
+            tree[f"stage{si}"] = stacked
+        return L.split_tree(tree)
+
+    # -------------------------------------------------------------- sublayers
+    def _attn_block(self, p, x, positions, mask_fn, ctx, cache, cache_index,
+                    names=("ln1", "attn")):
+        cfg = self.cfg
+        h = L.rms_norm(x, p[names[0]], cfg.norm_eps)
+        out, new_cache = L.apply_attention(
+            p[names[1]], cfg, h, positions, mask_fn, ctx,
+            cache=cache, cache_index=cache_index)
+        return x + out, new_cache
+
+    def _ffn_block(self, p, x, ctx):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            out, aux = M.apply_moe(p["moe"], cfg, h, ctx)
+        else:
+            out, aux = L.apply_mlp(p["mlp"], cfg, h, ctx), {}
+        return x + out, aux
+
+    def _apply_layer(self, stage: Stage, p, x, positions, mask_fn, ctx,
+                     cache, cache_index, mode, enc_out=None, enc_pos=None):
+        """One scanned layer. Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        aux = {}
+        if stage.kind in ("attn_dense", "attn_moe", "enc_layer"):
+            mfn = L.full_mask if stage.kind == "enc_layer" else mask_fn
+            x, new_cache = self._attn_block(
+                p, x, positions, mfn, ctx, cache, cache_index)
+            x, aux = self._ffn_block(p, x, ctx)
+            return x, new_cache, aux
+        if stage.kind == "dec_layer":
+            x, new_self = self._attn_block(
+                p, x, positions, mask_fn, ctx,
+                cache.get("self") if cache else None, cache_index,
+                names=("ln1", "self_attn"))
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            co, _ = L.apply_attention(
+                p["cross_attn"], cfg, h, positions, L.full_mask, ctx,
+                kv_override=(enc_out, enc_pos))
+            x = x + co
+            h = L.rms_norm(x, p["ln3"], cfg.norm_eps)
+            x = x + L.apply_mlp(p["mlp"], cfg, h, ctx)
+            return x, ({"self": new_self} if new_self else None), aux
+        if stage.kind == "jamba_period":
+            hy = cfg.hybrid
+            new_cache = {}
+            for i in range(hy.period):
+                sp = p[f"sub{i}"]
+                sub_cache = cache.get(f"sub{i}") if cache else None
+                if i == hy.attn_index:
+                    x, nc = self._attn_block(
+                        sp, x, positions, mask_fn, ctx, sub_cache, cache_index)
+                else:
+                    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+                    if mode == "decode":
+                        out, nc = S.mamba_step(sp["mamba"], cfg, h, sub_cache, ctx)
+                    else:
+                        out, nc = S.apply_mamba(sp["mamba"], cfg, h, ctx)
+                    x = x + out
+                x, a = self._ffn_block(sp, x, ctx)
+                for k, v in a.items():
+                    aux[k] = aux.get(k, 0.0) + v
+                if nc is not None:
+                    new_cache[f"sub{i}"] = nc
+            return x, (new_cache or None), aux
+        if stage.kind == "xlstm_pair":
+            h = L.rms_norm(x, p["ln_m"], cfg.norm_eps)
+            if mode == "decode":
+                out, ncm = S.mlstm_step(p["mlstm"], cfg, h,
+                                        cache["m"] if cache else None, ctx)
+            else:
+                out, ncm = S.apply_mlstm(p["mlstm"], cfg, h, ctx)
+            x = x + out
+            h = L.rms_norm(x, p["ln_s"], cfg.norm_eps)
+            if mode == "decode":
+                out, ncs = S.slstm_step(p["slstm"], cfg, h,
+                                        cache["s"] if cache else None, ctx)
+            else:
+                out, ncs = S.apply_slstm(p["slstm"], cfg, h, ctx)
+            x = x + out
+            return x, {"m": ncm, "s": ncs}, aux
+        raise ValueError(stage.kind)
+
+    # ---------------------------------------------------------------- stages
+    def _run_stage(self, si, stage, params, x, positions, mask_fn, ctx,
+                   caches, cache_index, mode, enc_out=None, enc_pos=None):
+        """Scan the stacked layers of one stage."""
+        p_st = params[f"stage{si}"]
+        cache_st = caches.get(f"stage{si}") if caches else None
+        aux_zero = self._aux_zero(stage)
+
+        def body(x, layer_in):
+            p_layer, cache_layer = layer_in
+            x = constrain(x, ("act_batch", "act_seq", None), ctx)
+            x, new_cache, aux = self._apply_layer(
+                stage, p_layer, x, positions, mask_fn, ctx, cache_layer,
+                cache_index, mode, enc_out, enc_pos)
+            aux = {**aux_zero, **{k: jnp.asarray(v, jnp.float32)
+                                  for k, v in aux.items()}}
+            return x, (new_cache, aux)
+
+        if self.cfg.remat and mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, (p_st, cache_st))
+        aux = {k: v.sum() for k, v in auxs.items()}
+        return x, new_caches, aux
+
+    def _aux_zero(self, stage):
+        if stage.use_moe and self.cfg.moe is not None:
+            return {"moe_load_balance": jnp.zeros((), jnp.float32),
+                    "moe_router_z": jnp.zeros((), jnp.float32),
+                    "moe_drop_fraction": jnp.zeros((), jnp.float32)}
+        return {}
+
+    # ---------------------------------------------------------------- fronts
+    def _embed_tokens(self, params, batch, ctx, pos_offset=0):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], cfg).astype(self.adt)
+        if cfg.pos == "sinusoidal":  # whisper decoder-style table positions
+            S = x.shape[1]
+            table = L.sinusoidal_positions(pos_offset + S, cfg.d_model, self.adt)
+            x = x + table[None, pos_offset:pos_offset + S]
+        prefix_len = 0
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(self.adt)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = patches.shape[1]
+        x = constrain(x, ("act_batch", "act_seq", None), ctx)
+        return x, prefix_len
+
+    def _encoder(self, params, batch, ctx):
+        """Whisper encoder over stub frame embeddings."""
+        cfg = self.cfg
+        frames = batch["frames"].astype(self.adt)
+        F = frames.shape[1]
+        pos_table = L.sinusoidal_positions(F, cfg.d_model, self.adt)
+        x = frames + pos_table[None]
+        positions = jnp.arange(F)
+        x, _, _ = self._run_stage(0, self.stages[0], params, x, positions,
+                                  L.full_mask, ctx, None, None, "train")
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return x, positions
+
+    # ----------------------------------------------------------------- modes
+    def _backbone(self, params, x, positions, mask_fn, ctx, caches,
+                  cache_index, mode, enc_out=None, enc_pos=None):
+        new_caches = {}
+        aux = {}
+        for si, stage in enumerate(self.stages):
+            if stage.kind == "enc_layer":
+                continue  # encoder handled separately
+            x, nc, a = self._run_stage(
+                si, stage, params, x, positions, mask_fn, ctx, caches,
+                cache_index, mode, enc_out, enc_pos)
+            if nc is not None:
+                new_caches[f"stage{si}"] = nc
+            for k, v in a.items():
+                aux[k] = aux.get(k, 0.0) + v
+        return x, new_caches, aux
+
+    def loss(self, params, batch, ctx: ShardCtx | None = None):
+        """Next-token CE (+ MoE aux). batch: tokens (B,S) [, labels (B,S),
+        patch_embeds, frames]."""
+        cfg = self.cfg
+        labels = batch.get("labels", batch["tokens"])
+        enc_out = enc_pos = None
+        if cfg.family == "enc_dec":
+            enc_out, enc_pos = self._encoder(params, batch, ctx)
+        x, prefix_len = self._embed_tokens(params, batch, ctx)
+        Stot = x.shape[1]
+        positions = jnp.arange(Stot)
+        mask_fn = (L.prefix_lm_mask(prefix_len) if prefix_len
+                   else L.causal_mask)
+        x, _, aux = self._backbone(params, x, positions, mask_fn, ctx,
+                                   None, None, "train", enc_out, enc_pos)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        if "chunked_ce" in cfg.opts:
+            ce = self._chunked_ce(params, x[:, :-1], labels[:, 1:], ctx)
+        else:
+            logits = L.unembed(params["unembed"], params["embed"], x, cfg, ctx)
+            lg = logits[:, :-1].astype(jnp.float32)
+            tg = labels[:, 1:]
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            ll = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+            ce = (lse - ll).mean()
+        total = ce
+        metrics = {"ce": ce}
+        for k, v in aux.items():
+            metrics[k] = v
+            if k in ("moe_load_balance", "moe_router_z"):
+                total = total + v
+        metrics["loss"] = total
+        return total, metrics
+
+    def _chunked_ce(self, params, x, labels, ctx, chunk: int = 256):
+        """§Perf: CE over sequence chunks under a rematerialized scan — the
+        (B, S, V) logits tensor never materializes (peak logits buffer is
+        (B, chunk, V)). Exact same loss value as the dense path."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        nc = S // chunk if S % chunk == 0 else 1
+        ck = S // nc
+        xc = jnp.moveaxis(x.reshape(B, nc, ck, d), 1, 0)
+        tc = jnp.moveaxis(labels.reshape(B, nc, ck), 1, 0)
+
+        def body(acc, inp):
+            xb, tb = inp
+            logits = L.unembed(params["unembed"], params["embed"], xb,
+                               cfg, ctx).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+            return acc + (lse - ll).sum(), None
+
+        body = jax.checkpoint(body)
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+        return total / (B * S)
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   cache_dtype=None, enc_frames: int | None = None):
+        """Zeroed cache pytree (use under jax.eval_shape for dry-runs)."""
+        cfg = self.cfg
+        cdt = cache_dtype or self.adt
+        KV, hd = cfg.n_kv_heads, cfg.hd
+
+        def attn_cache():
+            return {"k": jnp.zeros((batch_size, max_len, KV, hd), cdt),
+                    "v": jnp.zeros((batch_size, max_len, KV, hd), cdt)}
+
+        caches = {}
+        for si, stage in enumerate(self.stages):
+            if stage.kind in ("attn_dense", "attn_moe"):
+                caches[f"stage{si}"] = jax.tree.map(
+                    lambda x: jnp.zeros((stage.count,) + x.shape, x.dtype),
+                    attn_cache())
+            elif stage.kind == "dec_layer":
+                caches[f"stage{si}"] = jax.tree.map(
+                    lambda x: jnp.zeros((stage.count,) + x.shape, x.dtype),
+                    {"self": attn_cache()})
+            elif stage.kind == "jamba_period":
+                hy = cfg.hybrid
+                per = {}
+                di = cfg.mamba.expand * cfg.d_model
+                for i in range(hy.period):
+                    if i == hy.attn_index:
+                        per[f"sub{i}"] = attn_cache()
+                    else:
+                        per[f"sub{i}"] = {
+                            "conv": jnp.zeros(
+                                (batch_size, cfg.mamba.d_conv - 1, di), cdt),
+                            "ssm": jnp.zeros(
+                                (batch_size, di, cfg.mamba.d_state),
+                                jnp.float32)}
+                caches[f"stage{si}"] = jax.tree.map(
+                    lambda x: jnp.zeros((stage.count,) + x.shape, x.dtype), per)
+            elif stage.kind == "xlstm_pair":
+                H = cfg.n_heads
+                per = {
+                    "m": {"C": jnp.zeros((batch_size, H, hd, hd), jnp.float32),
+                          "n": jnp.zeros((batch_size, H, hd), jnp.float32),
+                          "m": jnp.zeros((batch_size, H), jnp.float32)},
+                    "s": {"c": jnp.zeros((batch_size, H, hd), jnp.float32),
+                          "n": jnp.zeros((batch_size, H, hd), jnp.float32),
+                          "m": jnp.full((batch_size, H), -30.0, jnp.float32)},
+                }
+                caches[f"stage{si}"] = jax.tree.map(
+                    lambda x: jnp.zeros((stage.count,) + x.shape, x.dtype), per)
+        return caches
+
+    def prefill(self, params, batch, caches, ctx: ShardCtx | None = None):
+        """Fill caches from a prompt; returns (last-token logits, caches).
+        For enc_dec, also computes encoder output (stored under 'enc')."""
+        cfg = self.cfg
+        enc_out = enc_pos = None
+        if cfg.family == "enc_dec":
+            enc_out, enc_pos = self._encoder(params, batch, ctx)
+        x, prefix_len = self._embed_tokens(params, batch, ctx)
+        positions = jnp.arange(x.shape[1])
+        mask_fn = (L.prefix_lm_mask(prefix_len) if prefix_len
+                   else L.causal_mask)
+        x, new_caches, _ = self._backbone(
+            params, x, positions, mask_fn, ctx, caches, 0, "prefill",
+            enc_out, enc_pos)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["unembed"], params["embed"],
+                           x[:, -1:], cfg, ctx)
+        if cfg.family == "enc_dec":
+            new_caches["enc"] = {"out": enc_out, "pos": enc_pos}
+        return logits, new_caches
+
+    def decode_step(self, params, tokens_t, caches, index,
+                    ctx: ShardCtx | None = None):
+        """tokens_t: (B,1) next-token ids; index: scalar current length."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens_t, cfg).astype(self.adt)
+        positions = jnp.asarray(index)[None]
+        enc_out = enc_pos = None
+        if cfg.family == "enc_dec":
+            enc_out = caches["enc"]["out"]
+            enc_pos = caches["enc"]["pos"]
+        if cfg.pos == "sinusoidal":
+            smax = jax.tree.leaves(
+                {k: v for k, v in caches.items() if k != "enc"})[0].shape[2]
+            table = L.sinusoidal_positions(smax, cfg.d_model, self.adt)
+            x = x + jax.lax.dynamic_slice_in_dim(table, index, 1)[None]
+        x, new_caches, _ = self._backbone(
+            params, x, positions, L.causal_mask, ctx, caches, index,
+            "decode", enc_out, enc_pos)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["unembed"], params["embed"], x, cfg, ctx)
+        if cfg.family == "enc_dec":
+            new_caches["enc"] = caches["enc"]
+        return logits, new_caches

@@ -1,0 +1,369 @@
+"""State-space / recurrent blocks: Mamba (selective SSM) and xLSTM
+(mLSTM chunked linear attention + sLSTM scalar recurrence).
+
+All blocks expose two forms:
+* sequence form  — ``apply_*(p, cfg, x)`` over (B, S, d) for train/prefill;
+* step form      — ``*_step(p, cfg, x_t, state)`` for O(1) decode, which
+  is what makes the ssm/hybrid archs eligible for the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lm.models import layers as L
+from repro.sharding.specs import constrain
+
+MLSTM_CHUNK = 256
+
+
+def _unroll(cfg, length):
+    """§Perf 'scan_unroll': unroll recurrent scans so the carry is written
+    back to HBM once per U steps instead of every step."""
+    if "scan_unroll" in cfg.opts:
+        for u in (32, 16, 8, 4):
+            if length % u == 0:
+                return u
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, mamba-1 style as used by Jamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    ks = jax.random.split(key, 7)
+    dt_rank = max(d // 16, 1)
+    a = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * di), ("embed", "mamba_inner"), dtype),
+        "conv_w": L.dense_init(ks[1], (mc.d_conv, di), (None, "mamba_inner"),
+                               dtype, fan_in=mc.d_conv),
+        "conv_b": L.zeros_init((di,), ("mamba_inner",), dtype),
+        "x_proj": L.dense_init(ks[2], (di, dt_rank + 2 * mc.d_state),
+                               ("mamba_inner", None), dtype, fan_in=di),
+        "dt_proj": L.dense_init(ks[3], (dt_rank, di), (None, "mamba_inner"),
+                                dtype, fan_in=dt_rank),
+        "dt_bias": L.zeros_init((di,), ("mamba_inner",), dtype),
+        "A_log": L.Leaf(jnp.log(a).astype(jnp.float32), ("mamba_inner", None)),
+        "D": L.ones_init((di,), ("mamba_inner",), jnp.float32),
+        "out_proj": L.dense_init(ks[4], (di, d), ("mamba_inner", "embed"),
+                                 dtype, fan_in=di),
+    }
+
+
+def _mamba_scan_inputs(p, cfg, xz):
+    """Shared front: conv + projections. xz: (B,S,2*di) -> (u,dt,Bm,Cm,z)."""
+    mc = cfg.mamba
+    di = p["conv_b"].shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+    u, z = jnp.split(xz, 2, axis=-1)                # (B,S,di) each
+    # causal depthwise conv along S
+    pad = mc.d_conv - 1
+    up = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    u = sum(up[:, i : i + u.shape[1]] * p["conv_w"][i]
+            for i in range(mc.d_conv)) + p["conv_b"]
+    u = jax.nn.silu(u)
+    proj = jnp.einsum("bsi,ij->bsj", u, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(
+        proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]) + p["dt_bias"])
+    return u, dt, Bm, Cm, z
+
+
+def apply_mamba(p, cfg, x, ctx=None):
+    """Sequence form. x: (B,S,d). Returns (y, final_state) so prefill can
+    hand the recurrent state to the decode loop."""
+    mc = cfg.mamba
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = constrain(xz, ("act_batch", None, "act_mamba_inner"), ctx)
+    u_raw = jnp.split(xz, 2, axis=-1)[0]
+    u, dt, Bm, Cm, z = _mamba_scan_inputs(p, cfg, xz)
+    A = -jnp.exp(p["A_log"])                        # (di, N)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp                   # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A)           # (B,di,N)
+        dBu = dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+        h = h * dA + dBu
+        # keep the carry (and hence the grad stash) sharded over d_inner —
+        # otherwise GSPMD replicates the whole recurrence per tp shard
+        h = constrain(h, ("act_batch", "act_mamba_inner", None), ctx)
+        y = jnp.einsum("bin,bn->bi", h, C_t)
+        return h, y
+
+    B, S, di = u.shape
+    h0 = jnp.zeros((B, di, mc.d_state), jnp.float32)
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    xs = (constrain(xs[0], (None, "act_batch", "act_mamba_inner"), ctx),
+          constrain(xs[1], (None, "act_batch", "act_mamba_inner"), ctx),
+          xs[2], xs[3])
+    h_last, ys = jax.lax.scan(step, h0, xs, unroll=_unroll(cfg, S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype) + u * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    # final conv state: last (d_conv-1) pre-conv inputs
+    pad = max(mc.d_conv - 1 - S, 0)
+    tail = u_raw[:, S - (mc.d_conv - 1 - pad):]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"conv": tail.astype(u_raw.dtype), "ssm": h_last}
+    return out, state
+
+
+def mamba_init_state(p, cfg, batch, dtype):
+    mc = cfg.mamba
+    di = p["conv_b"].shape[0]
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_step(p, cfg, x_t, state, ctx=None):
+    """x_t: (B,1,d). O(1) decode update."""
+    mc = cfg.mamba
+    xz = jnp.einsum("bsd,de->bse", x_t, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)                # (B,1,di)
+    conv_buf = jnp.concatenate([state["conv"], u], axis=1)  # (B,d_conv,di)
+    u1 = (jnp.einsum("bci,ci->bi", conv_buf, p["conv_w"]) + p["conv_b"])[:, None]
+    u1 = jax.nn.silu(u1)
+    dt_rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsi,ij->bsj", u1, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+    dBu = (dt[:, 0, :, None] * Bm[:, 0, None, :] * u1[:, 0, :, None]).astype(jnp.float32)
+    h = state["ssm"] * dA + dBu
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(x_t.dtype) + u1 * p["D"].astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": conv_buf[:, 1:], "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM, chunkwise-parallel linear attention w/ gating)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wk": L.dense_init(ks[1], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wv": L.dense_init(ks[2], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wi": L.dense_init(ks[3], (d, H), ("embed", "heads"), dtype, scale=0.1),
+        "wf": L.dense_init(ks[4], (d, H), ("embed", "heads"), dtype, scale=0.1),
+        "f_bias": L.Leaf(jnp.full((H,), 3.0, jnp.float32), ("heads",)),
+        "wo": L.dense_init(ks[5], (H, hd, d), ("heads", "head_dim", "embed"),
+                           dtype, fan_in=H * hd),
+        "norm": L.ones_init((H, hd), ("heads", "head_dim"), dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["wf"]).astype(jnp.float32)
+        + p["f_bias"])
+    logi = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    return logi, logf
+
+
+def apply_mlstm(p, cfg, x, ctx=None):
+    """Chunkwise-parallel mLSTM. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) * hd ** -0.5
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]) * hd ** -0.5
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    logi, logf = _mlstm_gates(p, x)
+
+    Lc = min(MLSTM_CHUNK, S)
+    nc = -(-S // Lc)
+    pad = nc * Lc - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk(t):
+        return jnp.moveaxis(
+            t.reshape(B, nc, Lc, *t.shape[2:]), 1, 0)  # (nc,B,Lc,...)
+
+    qc, kc, vc, lic, lfc = map(chunk, (q, k, v, logi, logf))
+
+    def step(carry, inp):
+        Cst, nst, mst = carry          # (B,H,hd,hd),(B,H,hd),(B,H)
+        qb, kb, vb, li, lf = inp
+        # cumulative log-forget within the chunk
+        F = jnp.cumsum(lf, axis=1)                     # (B,Lc,H)
+        # intra-chunk decay matrix D[t,s] = exp(F_t - F_s + i_s) for s<=t
+        logD = (F[:, :, None, :] - F[:, None, :, :]
+                + li[:, None, :, :])                   # (B,Lq,Ls,H)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        # inter-chunk: state decayed by exp(F_t), query it
+        m_intra = logD.max(axis=2)                     # (B,Lq,H)
+        m_inter = mst[:, None, :] + F                  # (B,Lq,H)
+        m_all = jnp.maximum(m_intra, m_inter)
+        Dn = jnp.exp(logD - m_all[:, :, None, :])
+        scores = jnp.einsum("bqhk,bshk->bqsh", qb, kb) * Dn
+        h_intra = jnp.einsum("bqsh,bshk->bqhk", scores, vb)
+        w_inter = jnp.exp(m_inter - m_all)             # (B,Lq,H)
+        h_inter = jnp.einsum("bqhk,bhkx->bqhx", qb * w_inter[..., None], Cst)
+        norm_intra = scores.sum(axis=2)                # (B,Lq,H)
+        norm_inter = jnp.einsum("bqhk,bhk->bqh", qb * w_inter[..., None], nst)
+        h = h_intra + h_inter
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter),
+                            jnp.exp(-m_all))[..., None]
+        out = h / denom
+        # ---- state update to end of chunk ----
+        Fend = F[:, -1, :]                             # (B,H)
+        m_new = jnp.maximum(mst + Fend, (Fend[:, None, :] - F + li).max(axis=1))
+        decay_state = jnp.exp(mst + Fend - m_new)      # (B,H)
+        wk_ = jnp.exp(Fend[:, None, :] - F + li - m_new[:, None, :])  # (B,Ls,H)
+        C_new = (Cst * decay_state[..., None, None]
+                 + jnp.einsum("bsh,bshk,bshx->bhkx", wk_, kb, vb))
+        n_new = (nst * decay_state[..., None]
+                 + jnp.einsum("bsh,bshk->bhk", wk_, kb))
+        return (C_new, n_new, m_new), out
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (Cf, nf, mf), outs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (qc.astype(jnp.float32), kc.astype(jnp.float32),
+         vc.astype(jnp.float32), lic, lfc))  # chunked already: nc is small
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nc * Lc, H, hd)[:, :S]
+    out = L.rms_norm(out, p["norm"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_init_state(p, cfg, batch, dtype):
+    H, hd = cfg.n_heads, cfg.hd
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_step(p, cfg, x_t, state, ctx=None):
+    """x_t: (B,1,d); O(1) recurrent update."""
+    B = x_t.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bd,dhk->bhk", x_t[:, 0], p["wq"]) * hd ** -0.5
+    k = jnp.einsum("bd,dhk->bhk", x_t[:, 0], p["wk"]) * hd ** -0.5
+    v = jnp.einsum("bd,dhk->bhk", x_t[:, 0], p["wv"])
+    logi, logf = _mlstm_gates(p, x_t)
+    logi, logf = logi[:, 0], logf[:, 0]              # (B,H)
+    m_new = jnp.maximum(state["m"] + logf, logi)
+    fdec = jnp.exp(state["m"] + logf - m_new)
+    iw = jnp.exp(logi - m_new)
+    C = state["C"] * fdec[..., None, None] + jnp.einsum(
+        "bhk,bhx->bhkx", (k * iw[..., None]).astype(jnp.float32),
+        v.astype(jnp.float32))
+    n = state["n"] * fdec[..., None] + (k * iw[..., None]).astype(jnp.float32)
+    h = jnp.einsum("bhk,bhkx->bhx", q.astype(jnp.float32), C)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n)),
+        jnp.exp(-m_new))[..., None]
+    out = (h / denom)[:, None]                       # (B,1,H,hd)
+    out = L.rms_norm(out, p["norm"], cfg.norm_eps).astype(x_t.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": L.dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wi": L.dense_init(ks[1], (d, H), ("embed", "heads"), dtype, scale=0.1),
+        "wf": L.dense_init(ks[2], (d, H), ("embed", "heads"), dtype, scale=0.1),
+        "wo_gate": L.dense_init(ks[3], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "f_bias": L.Leaf(jnp.full((H,), 3.0, jnp.float32), ("heads",)),
+        "wo": L.dense_init(ks[4], (H, hd, d), ("heads", "head_dim", "embed"),
+                           dtype, fan_in=H * hd),
+    }
+
+
+def _slstm_step_math(p, z_t, o_t, logi, logf, state):
+    c, n, m = state                                  # (B,H,hd),(B,H,hd),(B,H)
+    m_new = jnp.maximum(logf + m, logi)
+    fw = jnp.exp(logf + m - m_new)[..., None]
+    iw = jnp.exp(logi - m_new)[..., None]
+    c_new = fw * c + iw * jnp.tanh(z_t)
+    n_new = fw * n + iw
+    h = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return h, (c_new, n_new, m_new)
+
+
+def apply_slstm(p, cfg, x, ctx=None):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    z = jnp.einsum("bsd,dhk->bshk", x, p["wz"]).astype(jnp.float32)
+    o = jnp.einsum("bsd,dhk->bshk", x, p["wo_gate"]).astype(jnp.float32)
+    logi = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    logf = (jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["wf"]).astype(jnp.float32))
+        + p["f_bias"])
+
+    def step(carry, inp):
+        z_t, o_t, li, lf = inp
+        h, carry = _slstm_step_math(p, z_t, o_t, li, lf, carry)
+        return carry, h
+
+    c0 = jnp.zeros((B, H, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -30.0, jnp.float32)
+    (cf, nf, mf), hs = jax.lax.scan(
+        step, (c0, n0, m0),
+        (jnp.moveaxis(z, 1, 0), jnp.moveaxis(o, 1, 0),
+         jnp.moveaxis(logi, 1, 0), jnp.moveaxis(logf, 1, 0)),
+        unroll=_unroll(cfg, S))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)       # (B,S,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", h, p["wo"])
+    return out, {"c": cf, "n": nf, "m": mf}
+
+
+def slstm_init_state(p, cfg, batch, dtype):
+    H, hd = cfg.n_heads, cfg.hd
+    return {
+        "c": jnp.zeros((batch, H, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -30.0, jnp.float32),
+    }
+
+
+def slstm_step(p, cfg, x_t, state, ctx=None):
+    z = jnp.einsum("bd,dhk->bhk", x_t[:, 0], p["wz"]).astype(jnp.float32)
+    o = jnp.einsum("bd,dhk->bhk", x_t[:, 0], p["wo_gate"]).astype(jnp.float32)
+    logi = jnp.einsum("bd,dh->bh", x_t[:, 0], p["wi"]).astype(jnp.float32)
+    logf = (jax.nn.log_sigmoid(
+        jnp.einsum("bd,dh->bh", x_t[:, 0], p["wf"]).astype(jnp.float32))
+        + p["f_bias"])
+    h, (c, n, m) = _slstm_step_math(
+        p, z, o, logi, logf, (state["c"], state["n"], state["m"]))
+    out = jnp.einsum("bhk,hkd->bd", h.astype(x_t.dtype), p["wo"])[:, None]
+    return out, {"c": c, "n": n, "m": m}

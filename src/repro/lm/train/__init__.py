@@ -1,0 +1,4 @@
+from repro.lm.train.optimizer import AdamW, OptState, cosine_schedule
+from repro.lm.train.train_step import make_train_step
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "make_train_step"]

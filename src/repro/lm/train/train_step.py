@@ -1,0 +1,126 @@
+"""Sharded train / serve step factories.
+
+``make_train_step`` builds the pjit-able step: value_and_grad over the
+model loss, optional int8 gradient compression (error feedback carried in
+the step state), AdamW update. Sharding comes from the params' logical
+axes + ruleset; batch is DP-sharded; activations SP via the model's
+internal constraints. GSPMD inserts the FSDP all-gathers/reduce-scatters.
+
+``make_serve_steps`` builds the prefill and decode steps with a sharded
+KV cache (sequence dim over 'tp' by default — exact for any kv-head
+count, incl. MQA).
+"""
+from __future__ import annotations
+
+import functools
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.models.model import Model
+from repro.sharding import compression
+from repro.sharding.specs import ShardCtx, constrain, spec_for
+from repro.lm.train.optimizer import AdamW
+
+
+class TrainState(typing.NamedTuple):
+    params: typing.Any
+    opt: typing.Any
+    residuals: typing.Any    # grad-compression error feedback (or None)
+
+
+def make_train_step(model: Model, opt: AdamW, ctx: ShardCtx | None = None,
+                    compress_grads: bool = False, accum_steps: int = 1):
+    """Returns step(state: TrainState, batch) -> (state, metrics).
+
+    ``accum_steps > 1`` splits the batch into microbatches and accumulates
+    gradients under a rematerialized scan — peak activation memory scales
+    with the microbatch, the update is numerically the full-batch mean."""
+
+    def _grads(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(state: TrainState, batch):
+        if accum_steps > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, m), g = _grads(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            gsum, (losses, ms) = jax.lax.scan(
+                jax.checkpoint(body), zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        else:
+            (loss, metrics), grads = _grads(state.params, batch)
+        residuals = state.residuals
+        if compress_grads:
+            grads, residuals = compression.compress_decompress(
+                grads, residuals)
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state.opt, state.params)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(new_params, new_opt, residuals), metrics
+
+    return step
+
+
+def batch_axes(cfg) -> dict:
+    """Logical axes for each batch field (DP batch, replicated seq)."""
+    ax = {"tokens": ("act_batch", None), "labels": ("act_batch", None)}
+    if cfg.family == "vlm":
+        ax["patch_embeds"] = ("act_batch", None, None)
+    if cfg.family == "enc_dec":
+        ax["frames"] = ("act_batch", None, None)
+    return ax
+
+
+def cache_axes_tree(caches):
+    """Logical axes for a cache pytree: KV tensors get their sequence dim
+    sharded 'tp' (act_kv_seq), recurrent states shard the inner dim."""
+    def axes_for(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        nd = leaf.ndim
+        if names[-1] in ("k", "v"):
+            # (layers, B, S, KV, hd)
+            return ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)[:nd]
+        if names[-1] in ("conv",):
+            return ("layers", "act_batch", None, "act_mamba_inner")[:nd]
+        if names[-1] in ("ssm",):
+            return ("layers", "act_batch", "act_mamba_inner", None)[:nd]
+        if names[-1] in ("C",):
+            return ("layers", "act_batch", "act_heads", None, None)[:nd]
+        if names[-1] in ("n", "c"):
+            return ("layers", "act_batch", "act_heads", None)[:nd]
+        if names[-1] in ("m",):
+            return ("layers", "act_batch", "act_heads")[:nd]
+        if names[-1] == "out":   # encoder output (B, F, d)
+            return ("act_batch", None, None)[:nd]
+        if names[-1] == "pos":
+            return (None,)[:nd]
+        return tuple([None] * nd)
+
+    return jax.tree_util.tree_map_with_path(axes_for, caches)
+
+
+def make_serve_steps(model: Model, ctx: ShardCtx | None = None):
+    """Returns (prefill_fn, decode_fn)."""
+
+    def prefill(params, batch, caches):
+        return model.prefill(params, batch, caches, ctx)
+
+    def decode(params, tokens_t, caches, index):
+        logits, caches = model.decode_step(params, tokens_t, caches, index, ctx)
+        return logits, caches
+
+    return prefill, decode

@@ -1,0 +1,92 @@
+"""Training loop with checkpoint/restart, async saves, and elastic hooks.
+
+The loop is deliberately boring: everything interesting lives in the
+substrates it composes (train_step, CheckpointManager, TokenPipeline,
+StragglerMonitor). ``run`` resumes from the latest valid checkpoint
+automatically; a simulated failure raised by ``failure_hook`` exercises
+the restore path in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.lm.models.model import Model
+from repro.runtime.elastic import StragglerMonitor
+from repro.sharding.specs import ShardCtx
+from repro.lm.train.optimizer import AdamW
+from repro.lm.train.train_step import TrainState, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    async_ckpt: bool = True
+    log_every: int = 10
+    compress_grads: bool = False
+
+
+class Trainer:
+    def __init__(self, model: Model, opt: AdamW, pipeline: TokenPipeline,
+                 tcfg: TrainerConfig, ctx: ShardCtx | None = None,
+                 extra_batch: typing.Callable | None = None):
+        self.model = model
+        self.opt = opt
+        self.pipeline = pipeline
+        self.tcfg = tcfg
+        self.ctx = ctx
+        self.extra_batch = extra_batch  # vlm/enc_dec stub inputs per step
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.straggler = StragglerMonitor()
+        self.step_fn = jax.jit(make_train_step(
+            model, opt, ctx, compress_grads=tcfg.compress_grads))
+        self.history: list[dict] = []
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        params, _ = self.model.init(jax.random.PRNGKey(seed))
+        residuals = None
+        if self.tcfg.compress_grads:
+            from repro.sharding import compression
+            residuals = compression.init_residuals(params)
+        return TrainState(params, self.opt.init(params), residuals)
+
+    def run(self, state: TrainState | None = None,
+            failure_hook: typing.Callable | None = None):
+        if state is None:
+            state = self.init_state()
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            start = latest
+            state = self.ckpt.restore(latest, state)
+        for step in range(start, self.tcfg.steps):
+            if failure_hook is not None:
+                failure_hook(step)  # may raise SimulatedFailure
+            batch = self.pipeline.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if self.extra_batch is not None:
+                batch.update(self.extra_batch(step))
+            t0 = time.time()
+            state, metrics = self.step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            self.straggler.record(self.pipeline.host_id, time.time() - t0)
+            if (step + 1) % self.tcfg.log_every == 0 or step == start:
+                self.history.append({"step": step + 1, **metrics})
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, state,
+                               blocking=not self.tcfg.async_ckpt)
+        self.ckpt.wait()
+        return state
+
+
+class SimulatedFailure(RuntimeError):
+    pass

@@ -73,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import exchange
+from repro import exchange, obs
 from repro.core import actions, engine
 from repro.core.engine import EngineConfig
 from repro.core.partition import Partition
@@ -407,6 +407,8 @@ class QueryServer:
         self._preempt_count = {}     # qid -> times preempted
         self._pools_used: set[int] = set()
         self.occupancy_trace: list[int] = []   # live lanes per tick
+        self._obs_submit_t = {}      # qid -> tracer time at submit
+        self._obs_admit_t = {}       # qid -> tracer time at admission
 
     def now(self) -> float:
         """Server wall clock (injected faults advance it)."""
@@ -436,12 +438,22 @@ class QueryServer:
         self._submit_time[qid] = now
         self._submit_tick[qid] = self.tick
         self.counters["submitted"] += 1
+        rec = obs.get_recorder()
+        if rec is not None:
+            self._obs_submit_t[qid] = rec.tracer.now()
+            rec.registry.counter(
+                "serve_submitted_total",
+                "requests submitted").labels(kind=kind).inc()
         if deadline_s is not None:
             self._deadline_at[qid] = now + deadline_s
 
         # root-keyed result cache: a fresh hit never touches a lane
         if self.serve.cache_size:
             hit = self.cache.get(_cache_key(req), now)
+            if rec is not None:
+                rec.registry.counter(
+                    "serve_cache_total", "result-cache events").labels(
+                        event="hit" if hit is not None else "miss").inc()
             if hit is not None:
                 self.counters["cache_hits"] += 1
                 self._finish(req, values=np.array(hit, copy=True),
@@ -525,6 +537,56 @@ class QueryServer:
             preemptions=self._preempt_count.get(req.qid, 0),
             submitted_tick=self._submit_tick[req.qid])
         self.counters[status] += 1
+        self._obs_request_end(req, status, cached=cached)
+
+    def _obs_request_end(self, req: QueryRequest, status: str,
+                         cached: bool = False):
+        """Terminal-status metrics + the request's lifecycle spans
+        (queued→admitted→terminal) — no-op without an installed
+        recorder."""
+        rec = obs.get_recorder()
+        if rec is None:
+            return
+        rec.registry.counter(
+            "serve_requests_total", "terminal request statuses").labels(
+                status=status, kind=req.kind).inc()
+        rec.registry.histogram(
+            "serve_latency_seconds",
+            "submit -> terminal latency (queue wait included)").labels(
+                kind=req.kind).observe(
+                    self.now() - self._submit_time[req.qid])
+        end = rec.tracer.now()
+        t0 = self._obs_submit_t.pop(req.qid, None)
+        ta = self._obs_admit_t.pop(req.qid, None)
+        if t0 is not None:
+            rec.tracer.complete(
+                "queued", track="requests", start=t0,
+                end=ta if ta is not None else end,
+                qid=req.qid, kind=req.kind)
+        if ta is not None or cached:
+            # cache hits never touch a lane: a zero-duration run at the
+            # terminal instant keeps every lifecycle ending in a 'run'
+            rec.tracer.complete(
+                "run", track="requests",
+                start=ta if ta is not None else end, end=end,
+                qid=req.qid, kind=req.kind, status=status,
+                cached=cached)
+
+    # ---------------------------------------------------------- cache ops
+    def invalidate_cache(self, root: int | None = None) -> int:
+        """Invalidate cached results — rooted at ``root``, or the whole
+        cache with None (the streaming-graph mutation hook).  Returns
+        entries dropped; tallied in ``counters['cache_invalidations']``
+        and the obs ``serve_cache_total{event="invalidation"}`` counter."""
+        n = (self.cache.invalidate_all() if root is None
+             else self.cache.invalidate(root))
+        self.counters["cache_invalidations"] += n
+        rec = obs.get_recorder()
+        if rec is not None and n:
+            rec.registry.counter(
+                "serve_cache_total", "result-cache events").labels(
+                    event="invalidation").inc(n)
+        return n
 
     # -------------------------------------------------------------- admit
     def _tenant_in_flight(self) -> dict:
@@ -545,6 +607,13 @@ class QueryServer:
         self._admit_tick[key] = self.tick
         self._admit_time[key] = self.now()
         self.counters["admitted"] += 1
+        rec = obs.get_recorder()
+        if rec is not None:
+            self._obs_admit_t[req.qid] = rec.tracer.now()
+            rec.registry.counter(
+                "serve_admitted_total",
+                "requests admitted into a lane").labels(
+                    kind=req.kind).inc()
 
     def _preempt(self, pool, lane: int):
         """Evict a running lane for a more urgent request: the victim is
@@ -555,6 +624,16 @@ class QueryServer:
         self._preempt_count[req.qid] = \
             self._preempt_count.get(req.qid, 0) + 1
         self.counters["preemptions"] += 1
+        rec = obs.get_recorder()
+        if rec is not None:
+            rec.registry.counter(
+                "serve_preemptions_total", "running lanes preempted").inc()
+            ta = self._obs_admit_t.pop(req.qid, None)
+            if ta is not None:     # close the preempted stint's run span
+                rec.tracer.complete("run", track="requests", start=ta,
+                                    qid=req.qid, kind=req.kind,
+                                    status="preempted")
+            rec.tracer.instant("preempt", track="requests", qid=req.qid)
         back = self.queue.put_back(
             req, req.priority, req.tenant,
             self._seq_of_qid.get(req.qid, self.queue.next_seq))
@@ -621,6 +700,7 @@ class QueryServer:
             preemptions=self._preempt_count.get(req.qid, 0),
             submitted_tick=self._submit_tick[req.qid])
         self.counters[status] += 1
+        self._obs_request_end(req, status)
         if status == QueryStatus.OK and self.serve.cache_size:
             self.cache.put(_cache_key(req), np.array(values, copy=True),
                            self.now())
@@ -706,6 +786,9 @@ class QueryServer:
 
     def step(self) -> bool:
         """One global round tick. Returns False when fully drained."""
+        rec = obs.get_recorder()
+        span = (rec.tracer.span("tick", track="server", tick=self.tick)
+                if rec is not None else None)
         self._apply_faults()
         self._expire_queued()
         self._admit()
@@ -713,6 +796,17 @@ class QueryServer:
             + self._step_pool(self.ppr_pool)
         self.occupancy_trace.append(n_live)
         self.tick += 1
+        if rec is not None:
+            depth = len(self.queue)
+            span.end(live=n_live, queue=depth)
+            rec.registry.counter("serve_ticks_total",
+                                 "server round ticks").inc()
+            rec.registry.gauge("serve_queue_depth",
+                               "queued requests after the tick").set(depth)
+            rec.registry.gauge("serve_live_lanes",
+                               "live lanes this tick").set(n_live)
+            rec.tracer.counter("server",
+                               {"queue_depth": depth, "live_lanes": n_live})
         return bool(n_live or len(self.queue)
                     or any(r is not None for r in self.min_pool.reqs)
                     or any(r is not None for r in self.ppr_pool.reqs))

@@ -1,18 +1,31 @@
-"""Serving API: batched prefill/decode with sharded caches, plus the
-shared admission-control layer (bounded queues, overload policies,
-result cache, fault injection — ISSUE 6).
+"""Serving API: the shared admission-control layer (bounded queues,
+overload policies, result cache, fault injection — ISSUE 6), plus lazy
+re-exports of the LM serving glue.
 
-Thin re-exports — the step factories live with the training substrate so
-both share sharding rules; the batched driver is ``repro.launch.serve``.
+The admission layer is part of the graph-engine surface and imports
+eagerly.  The LM step factories (``cache_axes_tree`` / ``make_serve_steps``)
+live with the quarantined training substrate under ``repro.lm`` so both
+share sharding rules; they are resolved lazily here so that importing
+``repro.serve`` (or any of its submodules, which executes this package
+``__init__``) does not drag the transformer stack onto the graph-engine
+import surface.
 """
 from repro.serve.admission import (
     AdmissionError, AdmissionQueue, FaultPlan, QueryStatus,
     QueryValidationError, ResultCache, ServeConfig,
 )
-from repro.train.train_step import cache_axes_tree, make_serve_steps
+
+_LM_EXPORTS = {"cache_axes_tree", "make_serve_steps"}
 
 __all__ = [
     "AdmissionError", "AdmissionQueue", "FaultPlan", "QueryStatus",
     "QueryValidationError", "ResultCache", "ServeConfig",
     "cache_axes_tree", "make_serve_steps",
 ]
+
+
+def __getattr__(name):
+    if name in _LM_EXPORTS:
+        from repro.lm.train import train_step
+        return getattr(train_step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -286,6 +286,7 @@ class ResultCache:
         self._d: collections.OrderedDict = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
 
     def __len__(self):
         return len(self._d)
@@ -312,3 +313,30 @@ class ResultCache:
         self._d.move_to_end(key)
         while len(self._d) > self.size:
             self._d.popitem(last=False)
+
+    @staticmethod
+    def _key_vertices(key):
+        """Vertex ids a canonical cache key depends on: the sources
+        element holds ints (min-pool) or (vertex, value) pairs (dict
+        sources / ppr seeds)."""
+        for item in key[1]:
+            yield item[0] if isinstance(item, tuple) else item
+
+    def invalidate(self, root: int) -> int:
+        """Drop every cached result whose source set touches ``root`` —
+        the hook streaming-graph mutation needs: an edge change at a
+        vertex stales exactly the queries rooted there.  Returns the
+        number of entries dropped (also tallied in ``invalidations``)."""
+        root = int(root)
+        doomed = [k for k in self._d if root in self._key_vertices(k)]
+        for k in doomed:
+            del self._d[k]
+        self.invalidations += len(doomed)
+        return len(doomed)
+
+    def invalidate_all(self) -> int:
+        """Flush the cache (whole-graph mutation); returns entries dropped."""
+        n = len(self._d)
+        self._d.clear()
+        self.invalidations += n
+        return n

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Model
+from repro import obs
+from repro.lm.models.model import Model
 from repro.serve.admission import AdmissionQueue, QueryStatus, ServeConfig
 
 
@@ -58,6 +59,9 @@ class ContinuousBatcher:
             self.serve.max_queue, self.serve.overload_policy,
             self.serve.tenant_weights)
         self.last_tok = np.zeros((n_slots, 1), np.int32)
+        self.tick = 0
+        self._retired: list[Request] = []
+        self._obs_submit_t: dict[int, float] = {}
 
         self._decode = jax.jit(self._decode_step)
 
@@ -87,20 +91,45 @@ class ContinuousBatcher:
         victim) immediately with ``req.done=True`` and a typed
         ``req.status`` — never an exception, never unbounded growth.
         'block' ticks the decode loop until space frees."""
+        rec = obs.get_recorder()
+        if rec is not None:
+            self._obs_submit_t[req.rid] = rec.tracer.now()
+            rec.registry.counter(
+                "lm_submitted_total",
+                "LM requests offered to the batcher queue",
+            ).labels(tenant=req.tenant).inc()
         if self.serve.overload_policy == "block":
             spins = 0
             while self.queue.full:
                 if spins >= self.serve.block_max_ticks or not self.step():
                     req.done, req.status = True, QueryStatus.REJECTED
+                    self._obs_request_end(req)
                     return
                 spins += 1
         decision, victim = self.queue.offer(req)
         if victim is not None:
             victim.done, victim.status = True, QueryStatus.SHED
+            self._obs_request_end(victim)
+            self._retired.append(victim)
         if decision == "rejected":
             req.done, req.status = True, QueryStatus.REJECTED
+            self._obs_request_end(req)
         elif decision == "shed_incoming":
             req.done, req.status = True, QueryStatus.SHED
+            self._obs_request_end(req)
+
+    def _obs_request_end(self, req: Request):
+        rec = obs.get_recorder()
+        t0 = self._obs_submit_t.pop(req.rid, None)
+        if rec is None:
+            return
+        rec.registry.counter(
+            "lm_requests_total", "LM requests resolved, by outcome",
+        ).labels(status=req.status, tenant=req.tenant).inc()
+        if t0 is not None:
+            rec.tracer.complete("request", track="lm/requests", start=t0,
+                                rid=req.rid, tenant=req.tenant,
+                                status=req.status, tokens=len(req.out))
 
     def _in_flight(self) -> dict:
         c: dict = {}
@@ -110,10 +139,22 @@ class ContinuousBatcher:
         return c
 
     def _admit(self):
+        rec = obs.get_recorder()
         for s in range(self.n_slots):
             if self.slot_req[s] is None and len(self.queue):
+                # priority / tenant-fair order comes from the shared
+                # AdmissionQueue — high-priority prompts prefill first
                 req = self.queue.take(in_flight=self._in_flight()).item
                 self.slot_req[s] = req
+                span = None
+                if rec is not None:
+                    rec.registry.counter(
+                        "lm_admitted_total",
+                        "LM requests admitted to a decode slot",
+                    ).labels(tenant=req.tenant).inc()
+                    span = rec.tracer.span(
+                        "prefill", track="lm", rid=req.rid, slot=s,
+                        priority=req.priority, prompt_len=len(req.tokens))
                 # prefill the slot: single-sequence prefill into slot s
                 sub_cache = jax.tree.map(lambda c: c[:, s : s + 1]
                                          if c.ndim > 1 else c, self.caches)
@@ -126,13 +167,22 @@ class ContinuousBatcher:
                 self.pos[s] = len(req.tokens)
                 self.last_tok[s, 0] = int(jnp.argmax(logits[0, -1]))
                 req.out.append(int(self.last_tok[s, 0]))
+                if span is not None:
+                    span.end()
 
     def step(self):
         """One global decode tick: admit, decode active slots, retire."""
+        rec = obs.get_recorder()
+        self.tick += 1
+        span = None
+        if rec is not None:
+            span = rec.tracer.span("tick", track="lm", tick=self.tick)
         self._admit()
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
         if not active:
+            if span is not None:
+                span.end(active=0, queue=len(self.queue))
             return False
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_tok[:, 0]), self.caches,
@@ -148,13 +198,28 @@ class ContinuousBatcher:
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
                 self.slot_req[s] = None      # slot freed immediately
+                self._obs_request_end(req)
+                self._retired.append(req)
+        if rec is not None:
+            span.end(active=len(active), queue=len(self.queue))
+            rec.registry.counter(
+                "lm_ticks_total", "LM batcher decode ticks").inc()
+            rec.registry.gauge(
+                "lm_queue_depth", "LM batcher queue depth",
+            ).set(len(self.queue))
+            rec.tracer.counter("lm", {"queue_depth": len(self.queue),
+                                      "active_slots": len(active)})
         return True
 
     def run(self, max_ticks: int = 1000) -> list[Request]:
-        done: list[Request] = []
+        """Tick until the queue and all slots drain (or ``max_ticks``);
+        returns the requests that reached a terminal state during the
+        run — retired sequences plus any shed queue victims."""
+        self._retired.clear()
         for _ in range(max_ticks):
             if not self.step() and not self.queue:
                 break
+        done, self._retired = self._retired, []
         return done
 
 

@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS
-from repro.models.model import Model
+from repro.lm.configs import ARCHS
+from repro.lm.models.model import Model
 
 
 def _batch(cfg, key, B=2, S=16):

@@ -5,11 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.lm.configs import get_config
 from repro.data.pipeline import TokenPipeline
-from repro.models.model import Model
-from repro.train.optimizer import AdamW
-from repro.train.train_step import TrainState, make_train_step
+from repro.lm.models.model import Model
+from repro.lm.train.optimizer import AdamW
+from repro.lm.train.train_step import TrainState, make_train_step
 
 
 def test_accum_matches_full_batch():

@@ -9,8 +9,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.configs import get_config
-from repro.models import layers as L
+from repro.lm.configs import get_config
+from repro.lm.models import layers as L
 
 
 def test_rms_norm_unit_scale():
@@ -45,7 +45,7 @@ def test_chunked_attention_equals_plain():
     v = jax.random.normal(jax.random.PRNGKey(5), (B, Sk, 2, hd))
     qp, kp = jnp.arange(Sq), jnp.arange(Sk)
     plain = L._plain_attention(q, k, v, L.causal_mask, qp, kp, hd ** -0.5)
-    import repro.models.layers as LL
+    import repro.lm.models.layers as LL
     old = LL.KV_CHUNK
     LL.KV_CHUNK = 16
     try:
@@ -57,7 +57,7 @@ def test_chunked_attention_equals_plain():
 
 
 def test_chunked_ce_equals_dense():
-    from repro.models.model import Model
+    from repro.lm.models.model import Model
     cfg = get_config("minitron-4b").reduced()
     model = Model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
@@ -81,8 +81,8 @@ def test_prefix_lm_mask():
 
 
 def test_scan_unroll_preserves_mamba_numerics():
-    import repro.models.ssm as S
-    from repro.models.layers import split_tree
+    import repro.lm.models.ssm as S
+    from repro.lm.models.layers import split_tree
     cfg = get_config("jamba-v0.1-52b").reduced()
     params, _ = split_tree(S.init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.models import moe as M
-from repro.models.model import Model
+from repro.lm.configs import get_config
+from repro.lm.models import moe as M
+from repro.lm.models.model import Model
 
 
 def _setup(seed=0):
@@ -16,7 +16,7 @@ def _setup(seed=0):
     model = Model(cfg)
     key = jax.random.PRNGKey(seed)
     p = M.init_moe(key, cfg, jnp.float32)
-    from repro.models.layers import split_tree
+    from repro.lm.models.layers import split_tree
     params, _ = split_tree(p)
     x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model))
     return cfg, params, x
@@ -60,7 +60,7 @@ def test_shared_experts_always_on():
     drop every token (capacity ~ 0)."""
     cfg = get_config("deepseek-moe-16b").reduced()
     key = jax.random.PRNGKey(0)
-    from repro.models.layers import split_tree
+    from repro.lm.models.layers import split_tree
     p = M.init_moe(key, cfg, jnp.float32)
     params, _ = split_tree(p)
     x = jax.random.normal(key, (1, 8, cfg.d_model))

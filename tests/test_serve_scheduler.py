@@ -3,8 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models.model import Model
+from repro import obs
+from repro.lm.configs import get_config
+from repro.lm.models.model import Model
+from repro.serve.admission import ServeConfig
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
@@ -59,3 +61,39 @@ def test_slots_are_reused():
     b.run()
     assert all(r.done for r in reqs)
     assert all(len(r.out) == 3 for r in reqs)
+
+
+def test_priority_prefill_order_and_run_returns_done():
+    """High-priority prompts prefill first via the shared AdmissionQueue,
+    run() returns the retired requests, and obs spans record the flow."""
+    cfg = get_config("minitron-4b").reduced()
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+
+    def mk(rid, prio):
+        return Request(rid=rid, priority=prio, max_new=2,
+                       tokens=rng.integers(0, cfg.vocab, size=4)
+                       .astype(np.int32))
+
+    # 1 slot: admission order is fully observable through prefill spans
+    b = ContinuousBatcher(model, params, n_slots=1, max_len=24,
+                          serve=ServeConfig(max_queue=8))
+    reqs = [mk(0, 0), mk(1, 5), mk(2, 1)]
+    with obs.recording() as rec:
+        for r in reqs:
+            b.submit(r)
+        done = b.run()
+
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(r.done for r in done)
+
+    prefills = [e for e in rec.tracer.events() if e["name"] == "prefill"]
+    assert [e["args"]["rid"] for e in prefills] == [1, 2, 0]  # priority order
+
+    snap = rec.registry.snapshot()
+    admitted = sum(snap["lm_admitted_total"]["series"].values())
+    finished = sum(snap["lm_requests_total"]["series"].values())
+    assert admitted == 3 and finished == 3
+    assert len([e for e in rec.tracer.events() if e["name"] == "tick"]) \
+        == b.tick

@@ -6,11 +6,11 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_config
+from repro.lm.configs import get_config
 from repro.data.pipeline import TokenPipeline
-from repro.models.model import Model
-from repro.train.optimizer import AdamW
-from repro.train.trainer import SimulatedFailure, Trainer, TrainerConfig
+from repro.lm.models.model import Model
+from repro.lm.train.optimizer import AdamW
+from repro.lm.train.trainer import SimulatedFailure, Trainer, TrainerConfig
 
 
 def _small_setup(tmp_path, steps=30, compress=False, ckpt_every=10):
