@@ -46,14 +46,44 @@ def add_grid_mode_arg(ap, default: str = "worklist"):
     """Grow a bench arg parser a ``--grid-mode`` flag: the fused kernel's
     launch shape for the worklist-capable bench variants (ISSUE 5) —
     'dense' (the classic early-exit grid), 'worklist' (host-planned
-    live-cell launches), or 'auto'.  Recorded in the emitted BENCH json
-    so the perf trajectory distinguishes dense from worklist runs."""
+    live-cell launches), 'auto', or 'device_worklist' (on-device frontier
+    compaction, ISSUE 8).  Recorded in the emitted BENCH json so the perf
+    trajectory distinguishes dense from worklist runs.
+
+    The default can be overridden without touching the command line via
+    the ``REPRO_GRID_MODE`` env var — the CI device-worklist leg sets
+    ``REPRO_GRID_MODE=device_worklist`` and reruns the tier-1 suite and
+    bench smokes unchanged."""
+    env = os.environ.get("REPRO_GRID_MODE")
+    if env:
+        default = env
     ap.add_argument("--grid-mode", default=default,
-                    choices=("dense", "worklist", "auto"),
+                    choices=("dense", "worklist", "auto",
+                             "device_worklist"),
                     help="fused-kernel grid mode for worklist-capable "
-                         f"variants (default {default}; recorded in the "
+                         f"variants (default {default}; env "
+                         "REPRO_GRID_MODE overrides; recorded in the "
                          "report)")
     return ap
+
+
+def disp_snap():
+    """Snapshot the obs registry's engine dispatch / host-sync counters
+    (summed over run labels) — the benches' ``dispatches_total`` and
+    ``host_syncs_per_round`` columns are registry deltas across each
+    variant's run, the same counters the shipped runners feed."""
+    from repro import obs
+    reg = obs.registry()
+    d = sum(reg.counter("engine_dispatches_total").snapshot_values()
+            .values())
+    s = sum(reg.counter("engine_host_syncs_total").snapshot_values()
+            .values())
+    return d, s
+
+
+def disp_delta(before):
+    after = disp_snap()
+    return after[0] - before[0], after[1] - before[1]
 
 
 def reversed_graph(g):

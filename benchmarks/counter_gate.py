@@ -73,7 +73,10 @@ def run_gate() -> dict:
            "runs": {}}
     with obs.recording() as rec:
         for name, sem in (("bfs", actions.BFS), ("sssp", actions.SSSP)):
-            for grid in ("dense", "worklist"):
+            # device_worklist records per-WINDOW rows (rounds = window
+            # count); its additive counters must stay exactly equal to
+            # the host-driven runs' totals, so the gate pins all three
+            for grid in ("dense", "worklist", "device_worklist"):
                 cfg = engine.EngineConfig(use_pallas=True, grid_mode=grid)
                 init = engine.init_values(part, sem, {root: 0.0})
                 engine.run_stacked(sem, part, init, cfg)
@@ -85,6 +88,13 @@ def run_gate() -> dict:
             cfg=engine.EngineConfig(use_pallas=True, grid_mode="auto"))
         out["runs"]["pagerank_delta"] = _totals(rec.rounds,
                                                 "pagerank_delta")
+        rec.rounds.clear()
+        engine.run_pagerank_delta(
+            part_pr, tol=PR_TOL, max_rounds=PR_ITERS,
+            cfg=engine.EngineConfig(use_pallas=True,
+                                    grid_mode="device_worklist"))
+        out["runs"]["pagerank_delta_device"] = _totals(
+            rec.rounds, "pagerank_delta")
     return out
 
 

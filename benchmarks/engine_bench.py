@@ -46,11 +46,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from common import disp_delta, disp_snap
 from repro.core import actions, engine
 from repro.core.partition import PartitionConfig, build_partition
 from repro.graph import generators
 from repro.kernels.fused_relax_reduce import (
-    fused_grid_cells, fused_relax_reduce_pallas, select_kernel_path,
+    _wl_pad_len, fused_grid_cells, fused_relax_reduce_pallas,
+    select_kernel_path,
 )
 
 
@@ -194,6 +196,9 @@ def bench_rounds(sem, part, sources, cfg, max_rounds, fixed_rounds=None,
             nstate[0].block_until_ready()
             dt = min(dt, time.perf_counter() - t0)
         state = nstate
+        # one *logical* dispatch + host sync per host-driven round (the
+        # timing repeats re-execute the same round and are not counted)
+        engine._count_dispatches("bench", 1, 1)
         row = {
             "wall_s": dt,
             "messages": int(msg_count),
@@ -240,6 +245,72 @@ def summarize(rounds, cell_key):
         out["wl_launched_total"] = sum(r["grid_wl_launched"]
                                       for r in rounds)
     return out
+
+
+def _device_debug_check(part, sem, gval, gchg, total):
+    """Launch the fused kernel once in ``grid_mode='device_worklist'``
+    with ``with_debug`` and assert the kernel-side executed-cell / DMA
+    counters equal the host mirror for the device-compacted launch —
+    the CI device-worklist smoke leg's assertion."""
+    cells = fused_grid_cells(
+        part.edge_dst_flat, part.edge_mask, part.edge_src_root_flat,
+        gchg, total, grid_mode="device_worklist")
+    _, dbg = fused_relax_reduce_pallas(
+        jnp.asarray(gval), jnp.asarray(gchg),
+        jnp.asarray(part.edge_src_root_flat.reshape(-1)),
+        jnp.asarray(part.edge_w.reshape(-1), jnp.float32),
+        jnp.asarray(part.edge_mask.reshape(-1)),
+        jnp.asarray(part.edge_dst_flat.reshape(-1)),
+        total, sem.relax_kind, sem.segment,
+        grid_mode="device_worklist", with_debug=True)
+    assert int(dbg[0]) == cells["wl_cells"], (int(dbg[0]), cells)
+    assert int(dbg[1]) == cells["wl_tile_dmas"], (int(dbg[1]), cells)
+
+
+def bench_device_fixpoint(name, sem, part, sources, max_rounds,
+                          damping=0.85, delta_tol=None):
+    """Run the WHOLE fixpoint through the shipped device-resident runner
+    (``grid_mode='device_worklist'``, no recorder → one traced
+    ``lax.while_loop``) and report wall time plus the obs-registry
+    dispatch counters — the ISSUE-8 acceptance row: ``dispatches_total``
+    must be exactly 1 for the full fixpoint."""
+    cfg = engine.EngineConfig(use_pallas=True,
+                              grid_mode="device_worklist")
+    if delta_tol is not None:
+        def run():
+            return engine.run_pagerank_delta(
+                part, damping=damping, tol=delta_tol, cfg=cfg,
+                max_rounds=max_rounds)
+    else:
+        init = engine.init_values(part, sem, sources)
+
+        def run():
+            return engine.run_stacked(sem, part, init, cfg)
+
+    run()                               # compile outside timing
+    snap = disp_snap()
+    t0 = time.perf_counter()
+    val, stats = run()
+    jax.block_until_ready(val)
+    wall = time.perf_counter() - t0
+    dd, ds = disp_delta(snap)
+    assert dd == 1, f"{name}: device fixpoint took {dd} dispatches"
+    rounds = int(stats.iterations)
+    planner = engine.launch_planner(
+        part, engine.EngineConfig(use_pallas=True, grid_mode="worklist"))
+    l_pad = _wl_pad_len(planner.total_cells)
+    return {
+        "rounds": rounds,
+        "wall_s_total": wall,
+        "wall_s_per_round": wall / max(rounds, 1),
+        "messages_total": int(stats.messages),
+        "messages_per_s": int(stats.messages) / max(wall, 1e-12),
+        "grid_cells_executed": 0,   # on device; exactness asserted in
+                                    # tests/test_worklist.py vs planner
+        "wl_launched_total": l_pad * rounds,
+        "dispatches_total": int(dd),
+        "host_syncs_per_round": ds / max(rounds, 1),
+    }
 
 
 def main():
@@ -290,7 +361,12 @@ def main():
             "against pagerank at the same round count. wl_tiled's "
             "per-cell dst-filtered tile lists + j-major reuse cut "
             "dma_bytes below tiled's per-chunk baseline "
-            "(dst_filter_dma_reduction)."),
+            "(dst_filter_dma_reduction). dispatches_total / "
+            "host_syncs_per_round are obs-registry deltas: host-driven "
+            "variants pay one dispatch+sync per round; the "
+            "device_worklist row runs the WHOLE fixpoint as one traced "
+            "lax.while_loop dispatch (asserted == 1) with on-device "
+            "frontier compaction."),
         "apps": {},
     }
 
@@ -333,29 +409,62 @@ def main():
              "grid_fused_live", vblk),
         ]
         if args.grid_mode != "dense":
+            # the per-round host-planned variants need a host planner —
+            # under --grid-mode device_worklist they keep planning with
+            # 'worklist' and the device_worklist row below covers the
+            # device-compacted whole-fixpoint dispatch
+            host_mode = args.grid_mode \
+                if args.grid_mode in ("worklist", "auto") else "worklist"
             variants += [
                 ("worklist",
                  engine.EngineConfig(use_pallas=True,
-                                     grid_mode=args.grid_mode),
+                                     grid_mode=host_mode),
                  "grid_wl_cells", None),
                 ("wl_tiled",
                  engine.EngineConfig(use_pallas=True,
-                                     grid_mode=args.grid_mode,
+                                     grid_mode=host_mode,
                                      vmem_budget_bytes=budget),
                  "grid_wl_cells", vblk),
             ]
         for label, cfg, cell_key, use_vblk in variants:
+            snap = disp_snap()
             rounds = bench_rounds(
                 sem, p, sources, cfg, args.max_rounds, fixed_rounds=fixed,
                 repeats=args.repeats, vblk=use_vblk, delta_tol=dtol,
                 check_debug=label.startswith(("worklist", "wl_", "fused",
                                               "tiled")))
+            dd, ds = disp_delta(snap)
             entry[label] = summarize(rounds, cell_key)
+            entry[label]["dispatches_total"] = int(dd)
+            entry[label]["host_syncs_per_round"] = \
+                ds / max(len(rounds), 1)
             print(f"{name:15s} {label:8s} "
                   f"rounds={entry[label]['rounds']:3d} "
                   f"wall/round={entry[label]['wall_s_per_round']*1e3:8.2f}ms "
                   f"msgs/s={entry[label]['messages_per_s']:.3e} "
                   f"cells={entry[label]['grid_cells_executed']}")
+        if args.grid_mode != "dense" and name != "pagerank":
+            # ISSUE-8 acceptance row: the whole fixpoint as ONE traced
+            # dispatch, plus the device-compaction mirror assertion on
+            # the first frontier (kernel with_debug == host mirror)
+            if dtol is None:
+                init = engine.init_values(p, sem, sources)
+                arrays0 = engine.DeviceArrays.from_partition(p)
+                val0 = jnp.asarray(init)
+                chg0 = sem.improved(
+                    val0, jnp.full_like(val0, sem.identity)) \
+                    & arrays0.slot_valid
+                _device_debug_check(p, sem, np.asarray(val0).reshape(-1),
+                                    np.asarray(chg0).reshape(-1), slots)
+            entry["device_worklist"] = bench_device_fixpoint(
+                name, sem, p, sources, args.max_rounds
+                if fixed is None else fixed, delta_tol=dtol)
+            dw = entry["device_worklist"]
+            print(f"{name:15s} {'device':8s} "
+                  f"rounds={dw['rounds']:3d} "
+                  f"wall/round={dw['wall_s_per_round']*1e3:8.2f}ms "
+                  f"msgs/s={dw['messages_per_s']:.3e} "
+                  f"dispatches={dw['dispatches_total']}")
         f, u, t = entry["fused"], entry["unfused"], entry["tiled"]
         entry["tiled_vs_pinned"] = {
             "wall_s_per_round_tiled": t["wall_s_per_round"],

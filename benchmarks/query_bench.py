@@ -70,14 +70,23 @@ def bench_batch_vs_serial(part, queries, cfg, repeats=3):
     if cfg.wants_worklist:
         # host-driven laned runner: per-round worklist launches planned
         # from the OR-across-lanes frontier (ISSUE 5) — same values and
-        # LaneStats as the traced fixpoint
+        # LaneStats as the traced fixpoint; feeds the dispatch counters
+        # itself (one dispatch + host sync per round)
         from repro.query.lanes import run_stacked_lanes
 
         def fn(init, unitw, chg):
             return run_stacked_lanes(part, init, unitw, cfg=cfg,
                                      init_changed=chg)
     else:
-        fn = make_stacked_lanes_fn(part, cfg)
+        # traced whole-fixpoint runner (dense grid, or device-compacted
+        # worklist under grid_mode='device_worklist'): one dispatch with
+        # one result sync per call — counted through the same registry
+        raw = make_stacked_lanes_fn(part, cfg)
+
+        def fn(init, unitw, chg):
+            out = raw(init, unitw, chg)
+            engine._count_dispatches("bench_lanes", 1, 1)
+            return out
     slot_valid = jnp.asarray(part.slot_vertex >= 0)
 
     def prep(qs):
@@ -90,34 +99,50 @@ def bench_batch_vs_serial(part, queries, cfg, repeats=3):
     # batched: all queries as lanes of one fixpoint
     init, unitw, chg = prep(queries)
     fn(init, unitw, chg)[0].block_until_ready()      # compile Q=K
-    (val_b, stats_b), wall_batch = _timed_run(fn, init, unitw, chg, repeats)
+    snap = common.disp_snap()
+    (val_b, stats_b), wall_batch = _timed_run(fn, init, unitw, chg, 1)
+    dd_b, ds_b = common.disp_delta(snap)
+    if repeats > 1:
+        (val_b, stats_b), wall_batch = _timed_run(fn, init, unitw, chg,
+                                                  repeats)
 
     # serial: one compiled Q=1 runner reused across the workload
     solo = [prep([qr]) for qr in queries]
     fn(*solo[0])[0].block_until_ready()              # compile Q=1
     wall_serial = np.inf
     serial_rounds = 0
-    for _ in range(repeats):
+    snap = common.disp_snap()
+    for rep in range(repeats):
+        if rep == 1:
+            dd_s, ds_s = common.disp_delta(snap)
         t0 = time.perf_counter()
         serial_rounds = 0
         for args in solo:
             _, st = fn(*args)
             serial_rounds += int(st.rounds[0])
         wall_serial = min(wall_serial, time.perf_counter() - t0)
+    if repeats == 1:
+        dd_s, ds_s = common.disp_delta(snap)
 
     k = len(queries)
     rounds_q = np.asarray(stats_b.rounds)
+    rounds_b = int(rounds_q.max())
     return {
         "queries": k,
         "serial": {"wall_s": wall_serial,
                    "queries_per_s": k / wall_serial,
-                   "rounds_total": serial_rounds},
+                   "rounds_total": serial_rounds,
+                   "dispatches_total": int(dd_s),
+                   "host_syncs_per_round":
+                       ds_s / max(serial_rounds, 1)},
         "batched": {"wall_s": wall_batch,
                     "queries_per_s": k / wall_batch,
-                    "rounds_total": int(rounds_q.max()),
+                    "rounds_total": rounds_b,
                     "rounds_per_query": rounds_q.tolist(),
                     "messages_per_query":
-                        np.asarray(stats_b.messages).tolist()},
+                        np.asarray(stats_b.messages).tolist(),
+                    "dispatches_total": int(dd_b),
+                    "host_syncs_per_round": ds_b / max(rounds_b, 1)},
         "batched_speedup": wall_serial / wall_batch,
         "batched_beats_serial": wall_batch < wall_serial,
     }
@@ -211,21 +236,28 @@ def bench_exchange_volume(part, queries, use_pallas=False):
     return out
 
 
-def bench_server(part, queries, n_lanes, cfg):
-    srv = QueryServer(part, n_lanes=n_lanes, ppr_lanes=0, cfg=cfg)
+def bench_server(part, queries, n_lanes, cfg, tick_rounds=1):
+    srv = QueryServer(part, n_lanes=n_lanes, ppr_lanes=0, cfg=cfg,
+                      tick_rounds=tick_rounds)
+    snap = common.disp_snap()
     t0 = time.perf_counter()
     for kind, root in queries:
         srv.submit(kind, root)
     results = srv.run()
     wall = time.perf_counter() - t0
+    dd, ds = common.disp_delta(snap)
     lat = np.array([r.latency_s for r in results.values()])
     rounds = np.array([r.rounds for r in results.values()])
     return {
         "queries": len(queries),
         "lanes": n_lanes,
+        "tick_rounds": tick_rounds,
         "wall_s": wall,
         "queries_per_s": len(queries) / wall,
         "ticks": srv.tick,
+        "rounds_driven": srv.rounds_driven,
+        "dispatches_total": int(dd),
+        "host_syncs_per_round": ds / max(srv.rounds_driven, 1),
         "lane_occupancy": srv.occupancy(),
         "latency_s": {
             "p50": float(np.percentile(lat, 50)),
@@ -250,6 +282,10 @@ def main():
     ap.add_argument("--rpvo-max", type=int, default=4)
     ap.add_argument("--lanes", type=int, default=16)
     ap.add_argument("--server-queue", type=int, default=48)
+    ap.add_argument("--tick-rounds", type=int, default=4,
+                    help="K-round window for the windowed-server row "
+                         "(one dispatch advances every live lane K "
+                         "rounds)")
     common.add_seed_arg(ap)
     common.add_obs_out_arg(ap)
     common.add_grid_mode_arg(ap)
@@ -278,16 +314,30 @@ def main():
             "OR-frontier chunk skip vs the sum a serial fused loop "
             "executes. The fused variant is reported under CPU interpret "
             "mode, where kernel Python overhead dominates; the batching "
-            "ratio is the portable signal."),
+            "ratio is the portable signal. dispatches_total / "
+            "host_syncs_per_round are obs-registry deltas: fused_dev "
+            "(grid_mode='device_worklist') runs the whole laned fixpoint "
+            "as ONE traced dispatch; server_windowed ticks in "
+            "tick_rounds-round windows — one dispatch per window instead "
+            "of one per round."),
         "variants": {},
     }
 
     variants = [("jnp", engine.EngineConfig()),
                 ("fused", engine.EngineConfig(use_pallas=True))]
     if args.grid_mode != "dense":
-        variants.append(
+        host_mode = args.grid_mode \
+            if args.grid_mode in ("worklist", "auto") else "worklist"
+        variants += [
             ("fused_wl", engine.EngineConfig(use_pallas=True,
-                                             grid_mode=args.grid_mode)))
+                                             grid_mode=host_mode)),
+            # on-device frontier compaction: the whole laned fixpoint is
+            # ONE traced dispatch (ISSUE 8) — compare dispatches_total
+            # against fused_wl's one-per-round
+            ("fused_dev",
+             engine.EngineConfig(use_pallas=True,
+                                 grid_mode="device_worklist")),
+        ]
     for label, cfg in variants:
         entry = bench_batch_vs_serial(part, workload, cfg,
                                       repeats=3 if label == "jnp" else 1)
@@ -317,6 +367,17 @@ def main():
           f"{sv['queries_per_s']:.1f} q/s occupancy={sv['lane_occupancy']:.2f} "
           f"p50={sv['latency_s']['p50']*1e3:.1f}ms "
           f"p99={sv['latency_s']['p99']*1e3:.1f}ms")
+
+    # K-round window ticks (ISSUE 8): one dispatch advances every live
+    # lane tick_rounds rounds — same results, ~1/K the host syncs
+    report["server_windowed"] = bench_server(
+        part, deep_queue, args.lanes, engine.EngineConfig(),
+        tick_rounds=args.tick_rounds)
+    sw = report["server_windowed"]
+    print(f"server tick_rounds={sw['tick_rounds']}: "
+          f"{sw['queries_per_s']:.1f} q/s ticks={sw['ticks']} "
+          f"(vs {sv['ticks']}) dispatches={sw['dispatches_total']} "
+          f"syncs/round={sw['host_syncs_per_round']:.2f}")
 
     with open(args.out, "w") as fh:
         json.dump(report, fh, indent=2)

@@ -174,3 +174,33 @@ print("-- flight recorder (python -m repro.obs.report) " + "-" * 22)
 print(report.render(recorder.to_session()), end="")
 print("obs ok: session saved to quickstart_obs_session.json "
       "(trace loads in Perfetto)")
+
+# 8. device-resident fixpoints (ISSUE 8): grid_mode='device_worklist'
+# compacts the frontier into the live-cell worklist ON DEVICE
+# (cumsum-scatter over the frontier chunk bitmap), so the whole BFS
+# fixpoint — sparse launches, convergence test and all — runs as ONE
+# lax.while_loop dispatch with zero per-round host syncs instead of one
+# dispatch + sync per round.  Same answer, bit for bit.
+dev_cfg = EngineConfig(use_pallas=True, grid_mode="device_worklist")
+reg = obs.registry()
+before = sum(reg.counter("engine_dispatches_total")
+             .snapshot_values().values())
+levels_dev, st_dev, _ = bfs(g, root, part=part, cfg=dev_cfg)
+dispatches = sum(reg.counter("engine_dispatches_total")
+                 .snapshot_values().values()) - before
+assert (levels_dev == levels).all() and dispatches == 1
+print(f"device-resident fixpoint ok: {int(st_dev.iterations)} BFS rounds "
+      f"in {dispatches} dispatch (host-driven pays "
+      f"{int(st_dev.iterations)} dispatches + syncs)")
+
+# the serving tick gets the same lever: tick_rounds=K advances every
+# live lane K rounds per dispatch (lanes carrying round budgets or
+# deadlines drop back to K=1 so their policing stays per-round exact)
+srv = QueryServer(part, n_lanes=2, cfg=dev_cfg, tick_rounds=4)
+for kind, r in queries:
+    srv.submit(kind, r)
+served_dev = srv.run()
+assert (served_dev[0].values == reference.bfs_levels(g, int(deg[0]))).all()
+print(f"windowed serving ok: {len(served_dev)} queries, "
+      f"{srv.rounds_driven} pool rounds in {srv.tick} ticks "
+      f"(~{srv.rounds_driven / max(srv.tick, 1):.1f} rounds/dispatch)")

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import typing
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -75,11 +76,22 @@ class EngineConfig:
     #              round loop, so it applies to the stacked runners and
     #              the delta rounds — traced collective loops
     #              (run_sharded's while_loop, the laned sharded fixpoint)
-    #              fall back to the dense grid, whose per-cell skip is
-    #              semantically identical
+    #              warn once and route to 'device_worklist', the traced
+    #              form of the same sparse launch
     # 'auto'     — per round: worklist when the live fraction of the
     #              dense grid drops below WORKLIST_AUTO_THRESHOLD
+    # 'device_worklist' — the live-cell list is compacted ON DEVICE
+    #              (cumsum-scatter over the frontier chunk bitmap) and
+    #              launched over the pow2-padded full grid with masked
+    #              tail cells.  Fully traced — composes with
+    #              jit/shard_map, so whole fixpoints run through
+    #              lax.while_loop with zero host syncs (ISSUE 8)
     grid_mode: str = "dense"
+    # Rounds per dispatch window for device_worklist loops that still
+    # need periodic host visibility (an installed flight recorder, the
+    # QueryServer default tick).  One download of the frontier
+    # trajectory per window instead of per round.
+    device_window: int = 8
     # SMEM byte budget for the fused kernel's scalar-prefetch tables
     # (chunk ranges, tile lists, worklist cells).  None disables the
     # guard; set to the real-TPU SMEM size to make select_kernel_path
@@ -106,8 +118,11 @@ class EngineConfig:
                 and self.vmem_budget_bytes <= 0:
             raise ValueError(
                 f"vmem_budget_bytes={self.vmem_budget_bytes!r}")
-        if self.grid_mode not in ("dense", "worklist", "auto"):
+        if self.grid_mode not in ("dense", "worklist", "auto",
+                                  "device_worklist"):
             raise ValueError(f"grid_mode={self.grid_mode!r}")
+        if self.device_window < 1:
+            raise ValueError(f"device_window={self.device_window!r}")
         if self.smem_budget_bytes is not None \
                 and self.smem_budget_bytes <= 0:
             raise ValueError(
@@ -115,10 +130,19 @@ class EngineConfig:
 
     @property
     def wants_worklist(self) -> bool:
-        """Whether runners should plan sparse worklist launches (only
-        meaningful on the fused Pallas path — the jnp oracle and the
-        pre-fusion composition have no grid to sparsify)."""
-        return (self.grid_mode != "dense" and self.use_pallas
+        """Whether runners should plan HOST-side sparse worklist launches
+        (only meaningful on the fused Pallas path — the jnp oracle and
+        the pre-fusion composition have no grid to sparsify)."""
+        return (self.grid_mode in ("worklist", "auto") and self.use_pallas
+                and self.pallas_mode == "fused")
+
+    @property
+    def wants_device_worklist(self) -> bool:
+        """Whether the relax phase compacts its worklist on device —
+        the traced launch mode that keeps whole fixpoints in one
+        dispatch.  ``relax`` reads this straight off ``grid_mode``; the
+        runners use it to pick the traced loop over the host loop."""
+        return (self.grid_mode == "device_worklist" and self.use_pallas
                 and self.pallas_mode == "fused")
 
 
@@ -310,8 +334,15 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
     # loop (bit-identical values/stats for min semirings — the loop the
     # worklist grid already runs) so each round can be recorded without
     # adding syncs to the traced while_loop; with no recorder the
-    # dispatch below is exactly the pre-obs one
-    if cfg.wants_worklist or obs.get_recorder() is not None:
+    # dispatch below is exactly the pre-obs one.  device_worklist keeps
+    # the traced loop (its compaction is traced) — a recorder there
+    # switches to the K-round windowed device loop, which downloads the
+    # frontier trajectory once per window instead of once per round
+    if cfg.wants_device_worklist:
+        if obs.get_recorder() is not None:
+            return _run_stacked_deviceloop(sem, part, arrays, cfg,
+                                           init_val, init_changed)
+    elif cfg.wants_worklist or obs.get_recorder() is not None:
         return _run_stacked_hostloop(sem, part, arrays, cfg, init_val,
                                      init_changed)
 
@@ -347,10 +378,30 @@ def run_stacked(sem: Semiring, part: Partition, init_val: np.ndarray,
     val, chg, it, stats = lax.while_loop(
         cond, body, (jnp.asarray(init_val), init_chg, zero, stats0)
     )
+    # the whole fixpoint was ONE traced dispatch; reading the results
+    # below is its single host sync
+    _count_dispatches(sem.name, 1, 1)
     if cfg.collapse == "deferred":
         val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
                                 arrays.sibling_mask)
     return val, stats
+
+
+def _count_dispatches(run: str, dispatches: int, host_syncs: int):
+    """Registry accounting for the BENCH dispatch/host-sync columns:
+    how many jitted dispatches a fixpoint issued and how many
+    device→host sync points (frontier/result downloads) it paid.  Host
+    loops pay one of each per round; device_worklist loops one per
+    K-round window — or one per whole fixpoint with no recorder."""
+    m = obs.registry()
+    m.counter(
+        "engine_dispatches_total",
+        "jitted dispatches issued by engine fixpoint loops"
+    ).labels(run=run).inc(dispatches)
+    m.counter(
+        "engine_host_syncs_total",
+        "device->host sync points paid by engine fixpoint loops"
+    ).labels(run=run).inc(host_syncs)
 
 
 def _host_stats(it, msgs, work, pruned):
@@ -418,6 +469,119 @@ def _run_stacked_hostloop(sem, part, arrays, cfg, init_val, init_changed):
             span.end(frontier=frontier, messages=mc)
             _obs_record_round(rec, sem.name, part, cfg, planner, it, gchg,
                               frontier, mc, work, wl, info, wall)
+    _count_dispatches(sem.name, it, it)
+    stats = _host_stats(it, msgs, work_total, pruned)
+    if cfg.collapse == "deferred":
+        val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
+                                arrays.sibling_mask)
+    return val, stats
+
+
+def _record_device_window(rec, run, part, planner, l_pad, window, it_end,
+                          counts_h, ent, wall):
+    """Post-hoc accounting for one K-round device window, recomputed
+    from the frontier trajectory the dispatch returned: ``ent[r]`` is
+    round r's ENTERING frontier bitmap (flattened), ``ent[k]`` the
+    window's exit frontier, ``counts_h[r]`` the round's message count.
+    Rounds whose entering frontier is empty are no-ops under every
+    semiring (absorbing identity) — they ran on device but count as
+    zero rounds, matching the host loop's early exit.  Appends ONE
+    per-window ``RoundRecord`` (``window`` field set; per-round cells /
+    DMA / shard mirrors summed over the window's live rounds, so window
+    sums equal the per-round host-driven totals) and returns
+    (live_rounds, messages, work, pruned)."""
+    k = counts_h.shape[0]
+    live_rounds = msgs = work = pruned = 0
+    cells = tile_dmas = dma_bytes = 0
+    shard_sum = None
+    for r in range(k):
+        if not ent[r].any():
+            break
+        live_rounds += 1
+        mc = int(counts_h[r])
+        wk = int(ent[r + 1].sum())
+        msgs += mc
+        work += wk
+        pruned += mc - min(wk, mc)
+        d = planner.dense_mirror(ent[r])
+        cells += d["cells"]
+        tile_dmas += d["tile_dmas"]
+        dma_bytes += d["dma_bytes"]
+        sh = np.asarray(exchange.shard_message_mirror(
+            part.edge_mask, part.edge_src_root_flat, ent[r]))
+        shard_sum = sh if shard_sum is None else shard_sum + sh
+    if rec is not None:
+        rec.add_round(
+            obs.RoundRecord(
+                run=run, round=it_end, frontier=int(ent[0].sum()),
+                messages=msgs, work=work, pruned=pruned,
+                grid="device_worklist", path=planner.path, cells=cells,
+                launched=l_pad * live_rounds, tile_dmas=tile_dmas,
+                dma_bytes=dma_bytes, wall_s=wall,
+                shard_messages=([int(x) for x in shard_sum]
+                                if shard_sum is not None else None),
+                window=window),
+            frontier_bitmap=ent[0].copy() if rec.keep_frontiers else None)
+    return live_rounds, msgs, work, pruned
+
+
+def _run_stacked_deviceloop(sem, part, arrays, cfg, init_val, init_changed):
+    """Recorder-visible device_worklist fixpoint: K-round windows
+    (``cfg.device_window``), each ONE traced dispatch through
+    ``exchange.fixpoint_window_stacked``.  The host sees the frontier
+    trajectory once per window — the flight recorder's per-window
+    ``RoundRecord`` mirrors are recomputed post-hoc from it, never from
+    extra syncs inside the loop.  With no recorder installed
+    ``run_stacked`` skips this loop entirely and runs the whole
+    fixpoint as a single traced while_loop dispatch."""
+    S, R_max = part.S, part.R_max
+    rec = obs.get_recorder()
+    planner = launch_planner(part, cfg)
+    from repro.kernels.fused_relax_reduce import _wl_pad_len
+    l_pad = _wl_pad_len(planner.total_cells)
+
+    window_fns: dict = {}
+
+    def window_fn(k):
+        if k not in window_fns:
+            window_fns[k] = jax.jit(
+                lambda v, c, _k=k: exchange.fixpoint_window_stacked(
+                    sem, arrays, cfg, S, R_max, _k, v, c))
+        return window_fns[k]
+
+    val = jnp.asarray(init_val)
+    if init_changed is not None:
+        chg = jnp.asarray(init_changed) & arrays.slot_valid
+    else:
+        chg = sem.improved(val, jnp.full_like(val, sem.identity)) \
+            & arrays.slot_valid
+    chg_h = np.asarray(chg)
+    it = msgs = work_total = pruned = 0
+    window = 0
+    while it < cfg.max_iters and chg_h.any():
+        k = min(cfg.device_window, cfg.max_iters - it)
+        window += 1
+        t0 = rec.tracer.now() if rec is not None else 0.0
+        span = (rec.tracer.span("window", track=f"engine/{sem.name}",
+                                window=window) if rec is not None else None)
+        val, chg, counts, frontiers = window_fn(k)(val, chg)
+        chg_h = np.asarray(chg)
+        wall = rec.tracer.now() - t0 if rec is not None else 0.0
+        ent = np.concatenate(
+            [np.asarray(frontiers).reshape(k, -1).astype(bool),
+             chg_h.reshape(1, -1)], axis=0)
+        live, w_msgs, w_work, w_pruned = _record_device_window(
+            rec, sem.name, part, planner, l_pad, window,
+            it + int((ent[:k].any(axis=1)).sum()), np.asarray(counts),
+            ent, wall)
+        it += live
+        msgs += w_msgs
+        work_total += w_work
+        pruned += w_pruned
+        if span is not None:
+            span.end(frontier=int(ent[0].sum()), messages=w_msgs,
+                     rounds=live)
+    _count_dispatches(sem.name, window, window)
     stats = _host_stats(it, msgs, work_total, pruned)
     if cfg.collapse == "deferred":
         val = exchange.collapse(sem, val.reshape(-1), arrays.sibling_flat,
@@ -489,6 +653,9 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
     S, R_max = part.S, part.R_max
     base = (1.0 - damping) / part.n
     tol_t = _tol_table(part, tol)
+    if cfg.wants_device_worklist:
+        return _run_pagerank_delta_deviceloop(
+            sem, part, arrays, cfg, damping, tol_t, base, max_rounds)
     rec = obs.get_recorder()
     planner = (launch_planner(part, cfg)
                if cfg.wants_worklist
@@ -531,6 +698,91 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
             span.end(frontier=frontier, messages=mc)
             _obs_record_round(rec, "pagerank_delta", part, cfg, planner,
                               it, gchg, frontier, mc, work, wl, info, wall)
+    _count_dispatches("pagerank_delta", it, it)
+    return rank, _host_stats(it, msgs, work_total, pruned)
+
+
+def _run_pagerank_delta_deviceloop(sem, part, arrays, cfg, damping, tol_t,
+                                   base, max_rounds):
+    """delta-PageRank under ``grid_mode='device_worklist'``: the
+    residual-tolerance frontier test runs ON DEVICE, so with no flight
+    recorder the whole fixpoint is ONE traced ``lax.while_loop``
+    dispatch; with a recorder it runs in K-round windows
+    (``cfg.device_window``) whose per-round accounting is recomputed
+    post-hoc from the returned frontier trajectory."""
+    S, R_max = part.S, part.R_max
+    rec = obs.get_recorder()
+    rank = delta = jnp.where(arrays.slot_valid, base, 0.0)
+
+    if rec is None:
+        @jax.jit
+        def fixpoint(rank, delta):
+            zero = (jnp.zeros((), jnp.int64)
+                    if jax.config.jax_enable_x64
+                    else jnp.zeros((), jnp.int32))
+
+            def body(carry):
+                rank, delta, it, msgs, work, pruned = carry
+                nr, nd, nchg, mc = exchange.delta_pagerank_round_stacked(
+                    sem, arrays, cfg, S, R_max, damping, tol_t, rank,
+                    delta)
+                mc = mc.astype(zero.dtype)
+                wk = nchg.sum(dtype=zero.dtype)
+                return (nr, nd, it + 1, msgs + mc, work + wk,
+                        pruned + mc - jnp.minimum(wk, mc))
+
+            def cond(carry):
+                _, delta, it, _, _, _ = carry
+                live = jnp.any((delta > tol_t) & arrays.slot_valid)
+                return live & (it < max_rounds)
+
+            return lax.while_loop(
+                cond, body, (rank, delta, zero, zero, zero, zero))
+
+        rank, delta, it, msgs, work, pruned = fixpoint(rank, delta)
+        _count_dispatches("pagerank_delta", 1, 1)
+        return rank, _host_stats(int(it), int(msgs), int(work),
+                                 int(pruned))
+
+    planner = launch_planner(part, cfg)
+    from repro.kernels.fused_relax_reduce import _wl_pad_len
+    l_pad = _wl_pad_len(planner.total_cells)
+
+    window_fns: dict = {}
+
+    def window_fn(k):
+        if k not in window_fns:
+            window_fns[k] = jax.jit(
+                lambda r, d, _k=k:
+                exchange.delta_pagerank_window_stacked(
+                    sem, arrays, cfg, S, R_max, _k, damping, tol_t, r, d))
+        return window_fns[k]
+
+    chg_h = np.asarray((delta > tol_t) & arrays.slot_valid)
+    it = msgs = work_total = pruned = 0
+    window = 0
+    while it < max_rounds and chg_h.any():
+        k = min(cfg.device_window, max_rounds - it)
+        window += 1
+        t0 = rec.tracer.now()
+        span = rec.tracer.span("window", track="engine/pagerank_delta",
+                               window=window)
+        rank, delta, chg, counts, frontiers = window_fn(k)(rank, delta)
+        chg_h = np.asarray(chg)
+        wall = rec.tracer.now() - t0
+        ent = np.concatenate(
+            [np.asarray(frontiers).reshape(k, -1).astype(bool),
+             chg_h.reshape(1, -1)], axis=0)
+        live, w_msgs, w_work, w_pruned = _record_device_window(
+            rec, "pagerank_delta", part, planner, l_pad, window,
+            it + int((ent[:k].any(axis=1)).sum()), np.asarray(counts),
+            ent, wall)
+        it += live
+        msgs += w_msgs
+        work_total += w_work
+        pruned += w_pruned
+        span.end(frontier=int(ent[0].sum()), messages=w_msgs, rounds=live)
+    _count_dispatches("pagerank_delta", window, window)
     return rank, _host_stats(it, msgs, work_total, pruned)
 
 
@@ -541,10 +793,11 @@ def make_sharded_pagerank_delta_fn(S: int, R_max: int, damping: float,
     """shard_map delta-PageRank round as a jit-able fn of (DeviceArrays,
     rank, delta) -> (rank, delta, psum'd count, psum'd live-slot count).
     The serving loop drives it un-looped (the frontier-empty termination
-    lives on host); the grid stays dense inside shard_map — the per-cell
-    chunk skip provides the pruning there."""
+    lives on host); host-planned worklist modes route to the traced
+    ``device_worklist`` launch inside shard_map (``_sharded_cfg``)."""
     from repro.core.actions import PAGERANK as sem
 
+    cfg = _sharded_cfg(cfg, "make_sharded_pagerank_delta_fn")
     axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
@@ -632,12 +885,36 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
                     shard_messages=[int(x) for x in shard]),
                 frontier_bitmap=gchg.copy() if rec.keep_frontiers
                 else None)
+    _count_dispatches("pagerank_delta_sharded", it, it)
     return rank, _host_stats(it, msgs, work_total, pruned)
 
 
 # --------------------------------------------------------------------------
 # sharded execution (shard_map over a real mesh)
 # --------------------------------------------------------------------------
+
+_SHARDED_GRID_WARNED: set = set()
+
+
+def _sharded_cfg(cfg: EngineConfig, where: str) -> EngineConfig:
+    """Traced collective loops cannot run host-planned worklists — they
+    used to silently drop ``grid_mode='worklist'|'auto'`` to the dense
+    fallback.  Now: warn once per call-site and route to the traced
+    ``'device_worklist'`` launch — the same sparse-launch intent, with
+    the compaction done on device inside the collective loop."""
+    if cfg.grid_mode in ("worklist", "auto") and cfg.use_pallas \
+            and cfg.pallas_mode == "fused":
+        if where not in _SHARDED_GRID_WARNED:
+            _SHARDED_GRID_WARNED.add(where)
+            warnings.warn(
+                f"{where}: grid_mode={cfg.grid_mode!r} needs a "
+                "host-driven round loop, which a traced collective loop "
+                "cannot run; routing to grid_mode='device_worklist' "
+                "(on-device compaction — same sparse launch, no host "
+                "sync)", stacklevel=3)
+        return dataclasses.replace(cfg, grid_mode="device_worklist")
+    return cfg
+
 
 def make_sharded_fn(sem: Semiring, S: int, R_max: int,
                     mesh: Mesh, axis_names=("data", "model"),
@@ -649,6 +926,7 @@ def make_sharded_fn(sem: Semiring, S: int, R_max: int,
         raise ValueError(
             "make_sharded_fn drives monotone min-semiring fixpoints; use "
             "make_sharded_pagerank_fn for counted sum-semiring rounds")
+    cfg = _sharded_cfg(cfg, "make_sharded_fn")
     axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
@@ -720,6 +998,7 @@ def run_sharded(sem: Semiring, part: Partition, init_val: np.ndarray,
     arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
     val_dev = jax.device_put(jnp.asarray(init_val), sharding)
     val, stats = fn(arrays_dev, val_dev)
+    _count_dispatches(f"{sem.name}_sharded", 1, 1)
     stats = jax.tree.map(lambda x: x[0], stats)
     return val, stats
 
@@ -733,6 +1012,7 @@ def make_sharded_pagerank_fn(S: int, R_max: int, n: int, damping: float,
     the same fused-kernel hot path as the fixpoint apps."""
     from repro.core.actions import PAGERANK as sem
 
+    cfg = _sharded_cfg(cfg, "make_sharded_pagerank_fn")
     axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map

@@ -47,13 +47,25 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
     kernel's dense early-exit grid for the 1-D sparse launch; it only
     applies to the fused Pallas path (the jnp oracle has no grid) and is
     built per round by the host-driven engine loops
-    (``EngineConfig.grid_mode``).
+    (``EngineConfig.grid_mode``).  With ``cfg.grid_mode=
+    'device_worklist'`` (and no explicit plan) the live-cell list is
+    compacted ON DEVICE instead — fully traced, so the same round
+    composes into `lax.while_loop` / `shard_map` fixpoints with zero
+    host syncs.
     """
     laned = gval.ndim == 2
     src = edge_src.reshape(-1)
     idsf = ids.reshape(-1)
     w = edge_w.reshape(-1)
     mask = edge_mask.reshape(-1)
+    # only the device mode is forwarded to the kernel dispatch: host
+    # modes ('worklist'/'auto') arrive as a pre-planned worklist= (or
+    # keep the dense grid on rounds the planner declined)
+    grid_mode = ("device_worklist"
+                 if (worklist is None
+                     and getattr(cfg, "grid_mode", "dense")
+                     == "device_worklist")
+                 else "dense")
 
     if not laned:
         if cfg.use_pallas and cfg.pallas_mode == "fused":
@@ -72,7 +84,8 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
                 relax_kind=sem.relax_kind, kind=sem.segment,
                 vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None),
                 worklist=worklist,
-                smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None))
+                smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None),
+                grid_mode=grid_mode)
             if not cfg.track_stats:
                 count = jnp.zeros((), jnp.int32)
             return partial, count
@@ -108,7 +121,8 @@ def relax(sem: Semiring, cfg, edge_src, edge_w, edge_mask, ids, gval, gchg,
             relax_kind=sem.relax_kind, kind=sem.segment,
             vmem_budget_bytes=getattr(cfg, "vmem_budget_bytes", None),
             worklist=worklist,
-            smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None))
+            smem_budget_bytes=getattr(cfg, "smem_budget_bytes", None),
+            grid_mode=grid_mode)
         if not cfg.track_stats:
             counts = jnp.zeros((q,), jnp.int32)
         return partial, counts

@@ -159,6 +159,58 @@ def delta_pagerank_round_stacked(sem: Semiring, arrays, cfg, S: int,
 
 
 # --------------------------------------------------------------------------
+# K-round windows: whole round sequences inside ONE traced dispatch
+# --------------------------------------------------------------------------
+# The device-resident loop machinery (ISSUE 8): `lax.scan` the stacked
+# round bodies K times so drivers dispatch once per WINDOW instead of
+# once per round.  A round whose entering frontier is empty is a no-op
+# under every semiring here (all sources read the absorbing identity,
+# min candidates equal val, delta residuals are zero), so windows that
+# overrun convergence stay exact — drivers trim the trailing dead
+# rounds from the returned per-round stacks.  Each step also emits the
+# frontier ENTERING that round, giving the host the full trajectory for
+# post-hoc planner-mirror accounting with zero extra syncs.
+
+
+def fixpoint_window_stacked(sem: Semiring, arrays, cfg, S: int, R_max: int,
+                            k: int, val, chg, lane_unitw=None,
+                            lane_mask=None):
+    """K stacked fixpoint rounds under one ``lax.scan``.  Returns
+    (val, chg, (k[, Q]) per-round message counts, (k, S, R_max[, Q])
+    per-round entering frontiers)."""
+
+    def step(carry, _):
+        val, chg = carry
+        nval, nchg, counts = fixpoint_round_stacked(
+            sem, arrays, cfg, S, R_max, val, chg, lane_unitw,
+            lane_mask=lane_mask)
+        return (nval, nchg), (counts, chg)
+
+    (val, chg), (counts, frontiers) = lax.scan(
+        step, (val, chg), None, length=k)
+    return val, chg, counts, frontiers
+
+
+def delta_pagerank_window_stacked(sem: Semiring, arrays, cfg, S: int,
+                                  R_max: int, k: int, damping, tol, rank,
+                                  delta):
+    """K stacked delta-PageRank rounds under one ``lax.scan``.  Returns
+    (rank, delta, chg, (k,) counts, (k, S, R_max) entering frontiers)."""
+
+    def step(carry, _):
+        rank, delta = carry
+        chg = (delta > tol) & arrays.slot_valid
+        nr, nd, _, counts = delta_pagerank_round_stacked(
+            sem, arrays, cfg, S, R_max, damping, tol, rank, delta)
+        return (nr, nd), (counts, chg)
+
+    (rank, delta), (counts, frontiers) = lax.scan(
+        step, (rank, delta), None, length=k)
+    new_chg = (delta > tol) & arrays.slot_valid
+    return rank, delta, new_chg, counts, frontiers
+
+
+# --------------------------------------------------------------------------
 # shard_map layout: one shard per device, real collectives
 # --------------------------------------------------------------------------
 

@@ -1135,6 +1135,120 @@ def plan_worklist(edge_dst, edge_mask, edge_src, gchg, num_segments: int,
 
 
 # --------------------------------------------------------------------------
+# device-side worklist compaction (grid_mode='device_worklist')
+# --------------------------------------------------------------------------
+# The traced twin of WorklistPlanner.plan: the live-cell list is built
+# from the same jnp chunk tables the dense kernels prefetch, compacted
+# j-major by a cumsum-scatter, and fed to the UNCHANGED worklist kernels
+# as scalar-prefetch operands (which are ordinary pallas_call inputs, so
+# traced values are fine — only host planning demands concreteness).
+# The launch length is the pow2-padded FULL cell grid, a static shape,
+# so whole fixpoints run inside one `lax.while_loop` / `shard_map` trace
+# with the tail masked by the kernels' `c < nlive` guard.  The device
+# list applies no dst filter and no cross-cell tile reuse (both are
+# inherently sequential host passes), so its exact host oracle is
+# ``WorklistPlanner.plan(gchg, dst_filter=False)``: cells == the dense
+# grid's live count, DMAs == ``tile_needed`` (the no-reuse schedule).
+
+
+def device_worklist_pad(num_edges: int, num_segments: int) -> int:
+    """Static 1-D launch length of the device-compacted worklist: the
+    pow2-padded full (i, j) cell grid.  Round-invariant by construction,
+    so a whole fixpoint traces once."""
+    n_i = _round_up(num_segments, SBLK) // SBLK
+    n_chunks = _round_up(num_edges, EBLK) // EBLK
+    return _wl_pad_len(n_i * n_chunks)
+
+
+def _compact_live_cells(chunk_lo, chunk_hi, chunk_act, n_i: int,
+                        l_pad: int):
+    """Cumsum-scatter frontier compaction: the (n_i, n_chunks) live-cell
+    matrix (the dense grid's two-level skip), flattened j-major — the
+    exact cell order ``WorklistPlanner.plan`` emits via
+    ``np.nonzero(live.T)`` — into fixed-shape ``wl_i``/``wl_j`` plus the
+    (1,) live count.  Dead cells scatter out of bounds and are dropped;
+    the padded tail keeps index 0 (cell (0, 0)), never executed."""
+    n_chunks = chunk_lo.shape[0]
+    seg0 = jnp.arange(n_i, dtype=jnp.int32)[:, None] * SBLK
+    intersects = (chunk_hi[None, :] >= seg0) & (chunk_lo[None, :]
+                                                < seg0 + SBLK)
+    live = (intersects & (chunk_act[None, :] > 0)).T.reshape(-1)
+    k = jnp.arange(n_chunks * n_i, dtype=jnp.int32)
+    pos = jnp.cumsum(live.astype(jnp.int32)) - 1
+    idx = jnp.where(live, pos, l_pad)
+    wl_i = jnp.zeros((l_pad,), jnp.int32).at[idx].set(k % n_i,
+                                                      mode="drop")
+    wl_j = jnp.zeros((l_pad,), jnp.int32).at[idx].set(k // n_i,
+                                                      mode="drop")
+    nlive = live.sum(dtype=jnp.int32).reshape(1)
+    return wl_i, wl_j, nlive
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "l_pad", "vblk", "num_slots"))
+def _device_worklist_arrays(gchg, edge_src, edge_mask, edge_dst,
+                            num_segments, l_pad, vblk=None,
+                            num_slots=None):
+    """Jitted device-worklist builder.  ``gchg`` may be (V,) or laned
+    (V, Q) — laned frontiers are OR'd across lanes exactly as the host
+    planner plans them.  With ``vblk`` also returns the per-cell tile
+    tables for the tiled kernels: each cell fetches its CHUNK's distinct
+    active-source tiles (the dense mirror's per-chunk lists), slots
+    alternating per position so the double-buffered prefetch stays safe,
+    every tile fetched (no cross-cell reuse)."""
+    e = edge_src.shape[0]
+    e_pad = _round_up(e, EBLK)
+    n_i = _round_up(num_segments, SBLK) // SBLK
+    gchg_i = jnp.asarray(gchg)
+    if gchg_i.ndim == 2:
+        gchg_i = gchg_i.any(axis=-1)
+    gchg_i = gchg_i.astype(jnp.int32)
+    ids_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_dst.astype(jnp.int32))
+    src_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_src.astype(jnp.int32))
+    mask_i = jnp.zeros((e_pad,), jnp.int32).at[:e].set(
+        edge_mask.astype(jnp.int32))
+    chunk_lo, chunk_hi, chunk_act, _, src_act = _chunk_tables(
+        ids_p, src_p, mask_i, gchg_i)
+    wl_i, wl_j, nlive = _compact_live_cells(chunk_lo, chunk_hi, chunk_act,
+                                            n_i, l_pad)
+    if vblk is None:
+        return wl_i, wl_j, nlive
+    v_pad = _round_up(num_slots, vblk)
+    ntiles, tiles = _chunk_tile_tables(src_p, src_act, v_pad, vblk)
+    t_max = tiles.shape[1]
+    cell_ntiles = jnp.take(ntiles, wl_j)
+    cell_tile = jnp.take(tiles, wl_j, axis=0)
+    tpos = jnp.arange(t_max, dtype=jnp.int32)[None, :]
+    cell_slot = jnp.broadcast_to(tpos % 2, cell_tile.shape)
+    cell_fetch = jnp.ones(cell_tile.shape, jnp.int32)
+    return (wl_i, wl_j, nlive, cell_ntiles, cell_tile, cell_slot,
+            cell_fetch)
+
+
+def build_device_worklist(gchg, edge_src, edge_mask, edge_dst,
+                          num_segments: int, path: str, vblk, num_slots):
+    """The ``grid_mode='device_worklist'`` plan: a :class:`Worklist`
+    whose leaves are traced device arrays — works under jit/shard_map,
+    where host planning (``grid_mode='worklist'``) cannot."""
+    l_pad = device_worklist_pad(edge_src.shape[0], num_segments)
+    if path == "tiled":
+        (wl_i, wl_j, nlive, cell_ntiles, cell_tile, cell_slot,
+         cell_fetch) = _device_worklist_arrays(
+            gchg, edge_src, edge_mask, edge_dst,
+            num_segments=num_segments, l_pad=l_pad, vblk=vblk,
+            num_slots=num_slots)
+        return Worklist(wl_i, wl_j, nlive, cell_ntiles, cell_tile,
+                        cell_slot, cell_fetch, path="tiled", vblk=vblk)
+    wl_i, wl_j, nlive = _device_worklist_arrays(
+        gchg, edge_src, edge_mask, edge_dst, num_segments=num_segments,
+        l_pad=l_pad)
+    return Worklist(wl_i, wl_j, nlive, path="pinned")
+
+
+# --------------------------------------------------------------------------
 # single-query launches
 # --------------------------------------------------------------------------
 
@@ -1459,6 +1573,10 @@ def fused_relax_reduce_pallas(gval, gchg, edge_src, edge_w, edge_mask,
         worklist = _launch_worklist(
             gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
             num_segments, path, vblk)
+    elif worklist is None and grid_mode == "device_worklist":
+        worklist = build_device_worklist(
+            gchg, edge_src, edge_mask, edge_dst, num_segments, path, vblk,
+            gval.shape[0])
     args = (gval, gchg, edge_src, edge_w, edge_mask, edge_dst)
     if worklist is not None:
         wl = worklist
@@ -1762,6 +1880,10 @@ def fused_relax_reduce_lanes_pallas(gval, gchg, lane_unitw, edge_src, edge_w,
         worklist = _launch_worklist(
             gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
             num_segments, path, vblk, lane_width=q_pad)
+    elif worklist is None and grid_mode == "device_worklist":
+        worklist = build_device_worklist(
+            gchg, edge_src, edge_mask, edge_dst, num_segments, path, vblk,
+            v)
     args = (gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst)
     if worklist is not None:
         wl = worklist
@@ -1891,6 +2013,21 @@ def fused_grid_cells(edge_dst, edge_mask, edge_src, gchg,
         out["wl_tile_needed"] = info.tile_needed
         out["wl_dma_bytes"] = info.dma_bytes
         out["smem_table_bytes"] = info.smem_table_bytes
+    elif grid_mode == "device_worklist":
+        # device-compaction mirror: no dst filter, no cross-cell reuse —
+        # cells are exactly the dense grid's live count and DMAs the
+        # per-chunk tile lists summed over live cells (the no-reuse
+        # schedule), matched by the kernels' with_debug counters
+        out["wl_cells"] = fused_live
+        out["wl_launched"] = device_worklist_pad(e, num_segments)
+        out["wl_tile_dmas"] = out.get("fused_tile_dmas", 0)
+        out["wl_tile_needed"] = out.get("fused_tile_dmas", 0)
+        out["wl_dma_bytes"] = out.get("dma_bytes", 0)
+        out["smem_table_bytes"] = smem_table_bytes(
+            e_pad // EBLK,
+            0 if vblk is None
+            else min(_round_up(int(gchg.shape[0]), vblk) // vblk, EBLK),
+            out["wl_launched"])
     elif vblk is not None:
         out["smem_table_bytes"] = smem_table_bytes(
             e_pad // EBLK,

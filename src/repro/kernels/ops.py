@@ -28,7 +28,7 @@ def segment_combine(data, segment_ids, num_segments: int, kind: str):
 def fused_relax_reduce(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
                        num_segments: int, relax_kind: str, kind: str,
                        vmem_budget_bytes=None, worklist=None,
-                       smem_budget_bytes=None):
+                       smem_budget_bytes=None, grid_mode: str = "dense"):
     """Fused frontier gather + semiring relax + mask + segment reduction —
     the whole per-round relax phase in one Pallas pass.  Returns
     ((num_segments,) partial, active-edge message count).  The value
@@ -37,13 +37,15 @@ def fused_relax_reduce(gval, gchg, edge_src, edge_w, edge_mask, edge_dst,
     with per-cell double-buffered async DMA — same results either way
     (bit-identical for min semirings).  A host-planned ``worklist``
     (see ``fused_relax_reduce.WorklistPlanner``) swaps the dense
-    early-exit grid for the 1-D live-cell launch; ``smem_budget_bytes``
-    arms the scalar-prefetch table guard."""
+    early-exit grid for the 1-D live-cell launch;
+    ``grid_mode='device_worklist'`` compacts the live-cell list on
+    device instead (traced — works inside jit/shard_map loops);
+    ``smem_budget_bytes`` arms the scalar-prefetch table guard."""
     return fused_relax_reduce_pallas(
         gval, gchg, edge_src, edge_w, edge_mask, edge_dst, num_segments,
         relax_kind, kind, interpret=_interpret(), with_count=True,
         vmem_budget_bytes=vmem_budget_bytes, worklist=worklist,
-        smem_budget_bytes=smem_budget_bytes
+        smem_budget_bytes=smem_budget_bytes, grid_mode=grid_mode
     )
 
 
@@ -51,17 +53,20 @@ def fused_relax_reduce_lanes(gval, gchg, lane_unitw, edge_src, edge_w,
                              edge_mask, edge_dst, num_segments: int,
                              relax_kind: str, kind: str,
                              vmem_budget_bytes=None, worklist=None,
-                             smem_budget_bytes=None):
+                             smem_budget_bytes=None,
+                             grid_mode: str = "dense"):
     """Lane-batched fused relax phase: per-lane (V, Q) values/frontiers
     over one shared edge structure, one launch for all queries.  Returns
     ((num_segments, Q) partial, (Q,) per-lane active-edge counts).  The
     lane axis is padded to the TPU lane tile (masked tail lanes) and the
     lane-padded table's residency follows ``vmem_budget_bytes`` as in
     ``fused_relax_reduce``; ``worklist`` (planned over the OR-across-
-    lanes frontier) selects the live-cell launch."""
+    lanes frontier) selects the live-cell launch, and
+    ``grid_mode='device_worklist'`` compacts that list on device."""
     return fused_relax_reduce_lanes_pallas(
         gval, gchg, lane_unitw, edge_src, edge_w, edge_mask, edge_dst,
         num_segments, relax_kind, kind, interpret=_interpret(),
         with_count=True, vmem_budget_bytes=vmem_budget_bytes,
-        worklist=worklist, smem_budget_bytes=smem_budget_bytes
+        worklist=worklist, smem_budget_bytes=smem_budget_bytes,
+        grid_mode=grid_mode
     )

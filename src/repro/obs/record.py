@@ -32,7 +32,14 @@ class RoundRecord:
     mirror of the actual launch (worklist: ``WorklistInfo``; dense grid:
     the two-level-skip live count) — zero on non-fused paths, where no
     Pallas grid exists.  ``shard_messages`` is the per-shard live-edge
-    (message) count mirror feeding the skew gauge."""
+    (message) count mirror feeding the skew gauge.
+
+    Under a ``device_worklist`` windowed loop one record covers a
+    K-round dispatch window: ``window`` is the 1-based window index
+    (0 = host-driven per-round record), ``round`` the cumulative round
+    count at window end, and the additive columns (messages, work,
+    cells, DMA…) are summed over the window's live rounds — so window
+    sums equal the per-round host-driven totals exactly."""
 
     run: str             # which runner/app emitted this round
     round: int           # 1-based round index within the run
@@ -48,6 +55,7 @@ class RoundRecord:
     dma_bytes: int
     wall_s: float
     shard_messages: list | None = None
+    window: int = 0      # dispatch-window index (0 = per-round record)
 
 
 def _skew(counts) -> float:

@@ -241,6 +241,7 @@ def _run_stacked_lanes_hostloop(part, arrays, cfg, sem, init_val,
         work += chg_h.sum(axis=0)
         exchanged += live.astype(np.int64) * vol
         it += 1
+    engine._count_dispatches("lanes_min", it, it)
     stats = LaneStats(*(jnp.asarray(x, jnp.int32) for x in
                         (rounds, messages, work, exchanged)))
     return val, stats
@@ -263,7 +264,10 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
 
     Under ``cfg.grid_mode='worklist'|'auto'`` (fused only) rounds run
     host-driven and each round's OR-across-lanes frontier plans a
-    sparse worklist launch (see ``engine.run_stacked``)."""
+    sparse worklist launch (see ``engine.run_stacked``); under
+    ``'device_worklist'`` the same live-cell launch is compacted ON
+    DEVICE, so the whole laned fixpoint stays one traced
+    ``while_loop`` dispatch with zero per-round host syncs."""
     init_val = jnp.asarray(init_val, jnp.float32)
     if init_val.ndim != 3:
         raise ValueError(f"init_val must be (S, R_max, Q); got "
@@ -289,7 +293,11 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
             part, arrays, cfg, sem, init_val, lane_unitw, init_chg,
             lane_budget)
     fn = make_stacked_lanes_fn(part, cfg, sem)
-    return fn(init_val, lane_unitw, init_chg, lane_budget)
+    out = fn(init_val, lane_unitw, init_chg, lane_budget)
+    # the traced while_loop (dense grid or device-compacted worklist)
+    # was ONE dispatch with one result sync
+    engine._count_dispatches("lanes_min", 1, 1)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -310,6 +318,7 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
     table, per-lane psum'd liveness for the termination test."""
     _check_cfg(cfg)
     _check_min(sem)
+    cfg = engine._sharded_cfg(cfg, "make_sharded_lanes_fn")
     axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
@@ -379,6 +388,7 @@ def make_sharded_min_round(S: int, R_max: int, mesh: Mesh,
     ``make_sharded_ppr_round`` for the sum pool."""
     _check_cfg(cfg)
     _check_min(sem)
+    cfg = engine._sharded_cfg(cfg, "make_sharded_min_round")
     axis_names = exchange.axis_tuple(axis_names)
     spec = P(axis_names)
     from jax.experimental.shard_map import shard_map
@@ -474,6 +484,7 @@ def make_sharded_ppr_round(S: int, R_max: int, mesh: Mesh,
     The lane count is taken from the traced argument shapes, so one
     returned fn serves any Q (jit specializes per shape)."""
     _check_cfg(cfg)
+    cfg = engine._sharded_cfg(cfg, "make_sharded_ppr_round")
     axis_names = exchange.axis_tuple(axis_names)
     sem = actions.PAGERANK
     spec = P(axis_names)
@@ -525,6 +536,7 @@ def make_sharded_ppr_delta_round(S: int, R_max: int, mesh: Mesh,
     delta path.  ``new_changed`` is returned sharded so the server's
     per-tick liveness probe never recomputes the predicate host-side."""
     _check_cfg(cfg)
+    cfg = engine._sharded_cfg(cfg, "make_sharded_ppr_delta_round")
     axis_names = exchange.axis_tuple(axis_names)
     sem = actions.PAGERANK
     spec = P(axis_names)
@@ -651,7 +663,9 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
     accepted), so late rounds diffuse only the few still-hot vertices of
     the few still-live lanes.  Host-driven (the per-lane frontier steers
     termination and, under ``grid_mode='worklist'|'auto'``, the sparse
-    launch plan).  Returns ((S, R_max, Q) scores, ``LaneStats``)."""
+    launch plan).  Under ``'device_worklist'`` the residual-tolerance
+    frontier test and worklist compaction both run on device, so the
+    whole multi-lane fixpoint is ONE traced dispatch."""
     q = len(seeds)
     dampings = np.broadcast_to(
         np.asarray(dampings, np.float32), (q,)).copy()
@@ -663,6 +677,43 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
                if cfg.wants_worklist else None)
     vol = _volume(part, cfg)
     slot_valid = np.asarray(part.slot_vertex >= 0)
+
+    if cfg.wants_device_worklist:
+        damp_j, tol_j = jnp.asarray(dampings), jnp.asarray(tols)
+        sv = jnp.asarray(slot_valid)[..., None]
+        vol_j = jnp.asarray(vol, jnp.int32)
+
+        @jax.jit
+        def fixpoint(rank, delta):
+            def body(carry):
+                rank, delta, it, stats = carry
+                live = ((delta > tol_j[None, None, :]) & sv) \
+                    .reshape(-1, q).any(axis=0)
+                nrank, ndelta, nchg, counts = round_fn(
+                    rank, delta, damp_j, tol_j)
+                stats = LaneStats(
+                    rounds=stats.rounds + live.astype(jnp.int32),
+                    messages=stats.messages + counts.astype(jnp.int32),
+                    work_actions=stats.work_actions
+                    + nchg.sum(axis=(0, 1), dtype=jnp.int32),
+                    exchanged=stats.exchanged
+                    + live.astype(jnp.int32) * vol_j,
+                )
+                return nrank, ndelta, it + 1, stats
+
+            def cond(carry):
+                _, delta, it, _ = carry
+                anyc = jnp.any((delta > tol_j[None, None, :]) & sv)
+                return anyc & (it < max_rounds)
+
+            rank, delta, _, stats = lax.while_loop(
+                cond, body,
+                (rank, delta, jnp.zeros((), jnp.int32), _zero_stats(q)))
+            return rank, stats
+
+        rank, stats = fixpoint(rank, delta)
+        engine._count_dispatches("ppr_delta_lanes", 1, 1)
+        return rank, stats
 
     rounds = np.zeros(q, np.int64)
     messages = np.zeros(q, np.int64)
@@ -687,6 +738,7 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
         work += chg_h.sum(axis=(0, 1))
         exchanged += live.astype(np.int64) * vol
         it += 1
+    engine._count_dispatches("ppr_delta_lanes", it, it)
     stats = LaneStats(*(jnp.asarray(x, jnp.int32) for x in
                         (rounds, messages, work, exchanged)))
     return rank, stats

@@ -71,6 +71,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import exchange, obs
@@ -199,13 +200,25 @@ class _LanePool:
     """Shared pool plumbing: lane state lives on device — stacked, or
     sharded over the server's mesh (``_sharding`` set, ``_arrays``
     holding the mesh-placed graph tables), in which case every state
-    update is re-placed so the per-tick round never re-shards."""
+    update is re-placed so the per-tick round never re-shards.
+
+    ``step_window(k)`` is the K-round tick (ISSUE 8): a ``lax.scan``
+    over the pool's round compiled as ONE dispatch, returning per-lane
+    message counts and live-round counts summed over the window.  A
+    lane that converges mid-window reads as the absorbing identity for
+    the remaining rounds, so the summed accounting equals K
+    single-round ticks exactly."""
 
     _sharding = None
 
     def _put(self, x):
         return x if self._sharding is None else jax.device_put(
             x, self._sharding)
+
+    def _window_fn(self, k: int):
+        if k not in self._windows:
+            self._windows[k] = jax.jit(self._build_window(k))
+        return self._windows[k]
 
 
 class _MinPool(_LanePool):
@@ -220,12 +233,14 @@ class _MinPool(_LanePool):
         self.exchange_volume = L._volume(part, cfg)
         self.unitw = np.zeros(n_lanes, np.int32)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
+        self._windows: dict = {}
         if mesh is None:
             def round_fn(val, chg, unitw):
                 return exchange.fixpoint_round_stacked(
                     actions.SSSP, arrays, cfg, S, R_max, val, chg,
                     lane_unitw=unitw)
 
+            self._round_raw = round_fn
             self._round = jax.jit(round_fn)
         else:
             self._round, self._sharding = L.make_sharded_min_round(
@@ -262,6 +277,39 @@ class _MinPool(_LanePool):
             arrays, self.val, self.chg, jnp.asarray(self.unitw))
         return np.asarray(counts)[0]     # psum'd — identical per shard row
 
+    def _build_window(self, k: int):
+        sharded = self._sharding is not None
+
+        def win(val, chg, unitw, arrays=None):
+            def stepf(carry, _):
+                val, chg = carry
+                live = jnp.any(chg, axis=(0, 1))
+                if sharded:
+                    nval, nchg, counts = self._round(arrays, val, chg,
+                                                     unitw)
+                    counts = counts[0]
+                else:
+                    nval, nchg, counts = self._round_raw(val, chg, unitw)
+                return (nval, nchg), (counts, live.astype(jnp.int32))
+
+            (val, chg), (counts, lives) = lax.scan(
+                stepf, (val, chg), None, length=k)
+            return val, chg, counts.sum(axis=0), lives.sum(axis=0)
+
+        return win
+
+    def step_window(self, k: int):
+        """K shared rounds as ONE dispatch; returns ((Q,) summed message
+        counts, (Q,) live-round counts) — exact K-tick accounting."""
+        unitw = jnp.asarray(self.unitw)
+        if self._sharding is None:
+            self.val, self.chg, counts, lives = self._window_fn(k)(
+                self.val, self.chg, unitw)
+        else:
+            self.val, self.chg, counts, lives = self._window_fn(k)(
+                self.val, self.chg, unitw, self._arrays)
+        return np.asarray(counts), np.asarray(lives)
+
     def extract(self, lane: int) -> np.ndarray:
         vv = engine.vertex_values(self.part, self.val[:, :, lane])
         return L.decode_min_values(vv, self.reqs[lane].kind)
@@ -290,6 +338,7 @@ class _PprPool(_LanePool):
         self.damping = np.zeros(n_lanes, np.float32)
         self.tol = np.full(n_lanes, 1e-6, np.float32)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
+        self._windows: dict = {}
         if mesh is None:
             self._round = L.make_ppr_delta_round(part, cfg, arrays=arrays)
         else:
@@ -332,6 +381,43 @@ class _PprPool(_LanePool):
             jnp.asarray(self.damping), jnp.asarray(self.tol))
         return np.asarray(counts)[0]     # psum'd — identical per shard row
 
+    def _build_window(self, k: int):
+        sharded = self._sharding is not None
+
+        def win(rank, delta, chg, damping, tol, arrays=None):
+            def stepf(carry, _):
+                rank, delta, chg = carry
+                live = jnp.any(chg, axis=(0, 1))
+                if sharded:
+                    nrank, ndelta, nchg, counts = self._round(
+                        arrays, rank, delta, damping, tol)
+                    counts = counts[0]
+                else:
+                    nrank, ndelta, nchg, counts = self._round(
+                        rank, delta, damping, tol)
+                return (nrank, ndelta, nchg), (counts,
+                                               live.astype(jnp.int32))
+
+            (rank, delta, chg), (counts, lives) = lax.scan(
+                stepf, (rank, delta, chg), None, length=k)
+            return rank, delta, chg, counts.sum(axis=0), lives.sum(axis=0)
+
+        return win
+
+    def step_window(self, k: int):
+        """K delta rounds as ONE dispatch; returns ((Q,) summed message
+        counts, (Q,) live-round counts) — exact K-tick accounting."""
+        damping, tol = jnp.asarray(self.damping), jnp.asarray(self.tol)
+        if self._sharding is None:
+            self.rank, self.delta, self.chg, counts, lives = \
+                self._window_fn(k)(self.rank, self.delta, self.chg,
+                                   damping, tol)
+        else:
+            self.rank, self.delta, self.chg, counts, lives = \
+                self._window_fn(k)(self.rank, self.delta, self.chg,
+                                   damping, tol, self._arrays)
+        return np.asarray(counts), np.asarray(lives)
+
     def extract(self, lane: int) -> np.ndarray:
         return engine.vertex_values(
             self.part, self.rank[:, :, lane]).astype(np.float64)
@@ -363,16 +449,35 @@ class QueryServer:
     ``clock`` injects a virtual wall clock (tests); ``server.counters``
     tallies every typed outcome for the load harness's consistency
     check.
+
+    ``tick_rounds=K`` (ISSUE 8) makes each tick a K-round window: one
+    ``lax.scan`` dispatch advances every pool up to K rounds, so a
+    16-lane query tick costs one dispatch instead of ~K host round
+    trips.  Converged lanes are inert mid-window and per-lane
+    rounds/messages come from the window's returned live-round counts,
+    so results and accounting are exactly the single-round tick's;
+    ticks serving a lane with a max_rounds / deadline / timeout
+    constraint fall back to single-round stepping automatically.
     """
 
     def __init__(self, part: Partition, n_lanes: int = 8,
                  cfg: EngineConfig = EngineConfig(),
                  ppr_lanes: int | None = None, mesh=None,
                  axis_names=("data", "model"),
-                 serve: ServeConfig | None = None, clock=None):
+                 serve: ServeConfig | None = None, clock=None,
+                 tick_rounds: int = 1):
         self.part = part
         self.mesh = mesh
         self.serve = serve if serve is not None else ServeConfig()
+        if int(tick_rounds) < 1:
+            raise ValueError(f"tick_rounds={tick_rounds!r}")
+        # K-round window tick (ISSUE 8): each tick advances every pool
+        # up to K rounds in ONE dispatch (lax.scan) instead of K host
+        # round trips.  Ticks with a lane under a max_rounds / deadline
+        # / timeout constraint fall back to single-round stepping so
+        # eviction points stay exact; tick_rounds=1 is the classic
+        # per-round tick, bit-for-bit.
+        self.tick_rounds = int(tick_rounds)
         self._clock = clock if clock is not None else time.monotonic
         self._clock_offset = 0.0         # advanced by FaultPlan tick delays
         # one device copy of the static graph tables, shared by both pools
@@ -394,6 +499,7 @@ class QueryServer:
         self.results: dict[int, QueryResult] = {}
         self.counters = collections.Counter()
         self.tick = 0
+        self.rounds_driven = 0   # pool rounds advanced (windows included)
         self._next_qid = 0
         self._lane_rounds = {}       # (pool, lane) -> rounds live
         self._lane_msgs = {}
@@ -733,6 +839,20 @@ class QueryServer:
                 occupied.remove(lane)
                 live_before[lane] = False
 
+    def _tick_window(self, pool, occupied) -> int:
+        """Rounds this tick may advance in one dispatch: ``tick_rounds``
+        unless some occupied lane carries a per-round constraint
+        (max_rounds / deadline_s / timeout_s), whose eviction point
+        must stay exact at round granularity."""
+        if self.tick_rounds == 1:
+            return 1
+        for lane in occupied:
+            r = pool.reqs[lane]
+            if r.max_rounds is not None or r.deadline_s is not None \
+                    or r.timeout_s is not None:
+                return 1
+        return self.tick_rounds
+
     def _step_pool(self, pool):
         occupied = [lane for lane in range(pool.n)
                     if pool.reqs[lane] is not None]
@@ -740,20 +860,30 @@ class QueryServer:
             return 0
         live_before = np.array(pool.live())   # writable copy: evictions
         self._evict_overdue(pool, occupied, live_before)  # flip lanes off
+        lives = None           # per-lane live-round counts (window tick)
         if not any(live_before[lane] for lane in occupied):
             # occupied-but-converged lanes (e.g. empty-frontier queries)
             # still retire below; nothing to relax
             counts = np.zeros(pool.n, np.int64)
         else:
-            counts = pool.step()
+            k = self._tick_window(pool, occupied)
+            if k == 1:
+                counts = pool.step()
+            else:
+                counts, lives = pool.step_window(k)
+            self.rounds_driven += k
+            engine._count_dispatches(
+                "server_min" if pool is self.min_pool else "server_ppr",
+                1, 1)
         live_after = pool.live()
         n_live = 0
         for lane in occupied:
             key = (id(pool), lane)
             if live_before[lane]:
-                self._lane_rounds[key] += 1
+                rl = 1 if lives is None else int(lives[lane])
+                self._lane_rounds[key] += rl
                 self._lane_msgs[key] += int(counts[lane])
-                self._lane_exchanged[key] += pool.exchange_volume
+                self._lane_exchanged[key] += pool.exchange_volume * rl
                 n_live += 1
             if not live_after[lane]:           # converged -> evict now
                 self._retire(pool, lane, QueryStatus.OK, partial=False)

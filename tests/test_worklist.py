@@ -9,11 +9,23 @@ semirings must agree **bit-identically**, sum up to the partial
 scatter's reassociation — and asserts the host-side planner mirror
 (``fused_grid_cells(grid_mode='worklist')``) EXACTLY equals the
 kernel-side ``with_debug`` executed-cell / issued-DMA counters.
+ISSUE 8 extends the suite with the device-compaction differential leg:
+``grid_mode='device_worklist'`` builds the same live-(i, j) cell list ON
+DEVICE (cumsum-scatter over the frontier chunk bitmap) — every case
+asserts the device-compacted list equals the host ``plan_worklist``
+output (order-normalized; exactly equal in the planner's j-major dense
+order), under jit, across lane counts, and over real sharded
+collectives in a subprocess.
 """
+import os
+import subprocess
+import sys
+import textwrap
 import warnings
 
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
 from repro.apps import bfs, sssp
@@ -21,9 +33,10 @@ from repro.core import actions, engine
 from repro.core.partition import PartitionConfig, build_partition
 from repro.graph import generators, reference
 from repro.kernels.fused_relax_reduce import (
-    EBLK, SBLK, WL_PAD, WorklistPlanner, fused_grid_cells,
+    EBLK, SBLK, WL_PAD, WorklistPlanner, build_device_worklist,
+    device_worklist_pad, fused_grid_cells,
     fused_relax_reduce_lanes_pallas, fused_relax_reduce_pallas,
-    select_kernel_path, smem_table_bytes,
+    plan_worklist, select_kernel_path, smem_table_bytes,
 )
 from repro.kernels.ref import (
     fused_relax_reduce_lanes_ref, fused_relax_reduce_ref,
@@ -427,6 +440,236 @@ def test_laned_engine_worklist_matches_dense(exchange):
                                   np.asarray(st_d.rounds))
     np.testing.assert_array_equal(np.asarray(st_w.work_actions),
                                   np.asarray(st_d.work_actions))
+
+
+# --------------------------------------------------------------------------
+# ISSUE 8: device-side frontier compaction == host planner, exactly
+# --------------------------------------------------------------------------
+
+def _device_cells(gchg, src, mask, ids, nseg, num_slots, path="pinned",
+                  vblk=None):
+    """Build the device worklist and return its live (i, j) list plus the
+    static launch length — all leaves are traced-capable arrays."""
+    wl = build_device_worklist(
+        jnp.asarray(gchg).reshape(-1), jnp.asarray(src),
+        jnp.asarray(mask), jnp.asarray(ids), nseg, path, vblk, num_slots)
+    n = int(wl.nlive[0])
+    cells = list(zip(np.asarray(wl.wl_i)[:n].tolist(),
+                     np.asarray(wl.wl_j)[:n].tolist()))
+    return cells, int(np.asarray(wl.wl_i).shape[0])
+
+
+def _host_cells(gchg, src, mask, ids, nseg, num_slots):
+    """The host oracle: ``plan_worklist`` without the dst filter (the
+    device compaction keeps every live cell) — j-major dense order."""
+    wl, info = plan_worklist(
+        np.asarray(ids), np.asarray(mask), np.asarray(src),
+        np.asarray(gchg).reshape(-1), nseg, num_slots=num_slots,
+        dst_filter=False)
+    n = int(wl.nlive[0])
+    return list(zip(np.asarray(wl.wl_i)[:n].tolist(),
+                    np.asarray(wl.wl_j)[:n].tolist())), info
+
+
+@pytest.mark.parametrize("v,e,nseg,vblk", WL_SHAPES)
+def test_device_compaction_equals_host_plan(v, e, nseg, vblk):
+    gval, gchg, src, w, mask, ids = _hub_case(v, e, nseg, 0.4,
+                                              seed=v + e + nseg)
+    dev, launched = _device_cells(gchg, src, mask, ids, nseg, v)
+    host, _ = _host_cells(gchg, src, mask, ids, nseg, v)
+    # same j-major dense order, not merely the same set
+    assert dev == host
+    assert sorted(dev) == sorted(host)          # order-normalized too
+    assert launched == device_worklist_pad(e, nseg)
+    # the dense early-exit grid's live count is the same population
+    mirror = fused_grid_cells(np.asarray(ids), np.asarray(mask),
+                              np.asarray(src), np.asarray(gchg), nseg,
+                              grid_mode="device_worklist")
+    assert len(dev) == mirror["wl_cells"] == mirror["fused_live"]
+    assert mirror["wl_launched"] == launched
+
+
+@pytest.mark.parametrize("case", ["empty", "single_vertex",
+                                  "tile_boundary", "skewed_hub"])
+def test_device_compaction_edge_cases(case):
+    v, e, nseg = 300, 2 * EBLK + 9, 2 * SBLK + 1
+    rng = np.random.default_rng(17)
+    src = rng.integers(0, v, e).astype(np.int32)
+    mask = rng.random(e) < 0.9
+    ids = np.sort(rng.integers(0, nseg, e)).astype(np.int32)
+    if case == "empty":
+        gchg = np.zeros(v, bool)
+    elif case == "single_vertex":
+        gchg = np.zeros(v, bool)
+        gchg[int(src[0])] = True
+    elif case == "tile_boundary":
+        # live exactly at the EBLK chunk seam: edge EBLK-1 and EBLK
+        gchg = np.zeros(v, bool)
+        gchg[src[EBLK - 1]] = True
+        gchg[src[EBLK]] = True
+        mask[:] = True
+    else:                                        # skewed_hub
+        hub = int(np.bincount(src, minlength=v).argmax())
+        gchg = np.zeros(v, bool)
+        gchg[hub] = True
+    dev, launched = _device_cells(gchg, src, mask, ids, nseg, v)
+    host, _ = _host_cells(gchg, src, mask, ids, nseg, v)
+    assert dev == host
+    assert launched == device_worklist_pad(e, nseg)
+    if case == "empty":
+        assert dev == []
+        # the static pad still launches; every cell is a masked no-op
+        gval = jnp.asarray(rng.uniform(0, 10, v).astype(np.float32))
+        out, dbg = fused_relax_reduce_pallas(
+            gval, jnp.asarray(gchg), jnp.asarray(src),
+            jnp.ones(e, jnp.float32), jnp.asarray(mask),
+            jnp.asarray(ids), nseg, "add_w", "min",
+            grid_mode="device_worklist", with_debug=True)
+        assert np.all(np.asarray(out) == np.inf)
+        assert int(dbg[0]) == 0 and int(dbg[1]) == 0
+
+
+def test_device_compaction_under_jit():
+    """The whole point: compaction traces — the same call fails for the
+    host-planned mode (see test_worklist_under_tracing_requires_plan)."""
+    gval, gchg, src, w, mask, ids = _hub_case(64, 100, 40, 0.5, seed=2)
+
+    @jax.jit
+    def f(gval, gchg):
+        return fused_relax_reduce_pallas(gval, gchg, src, w, mask, ids,
+                                         40, "add_w", "min",
+                                         grid_mode="device_worklist")
+
+    want = fused_relax_reduce_ref(gval, gchg, src, w, mask, ids, 40,
+                                  "add_w", "min")
+    np.testing.assert_array_equal(np.asarray(f(gval, gchg)),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("q", [1, 3, 128])
+def test_device_compaction_lanes(q):
+    v, e, nseg = (40, 200, 60) if q == 128 else (260, 900, 300)
+    gval, gchg, src, w, mask, ids = _hub_case(v, e, nseg, 0.4,
+                                              seed=q, q=q)
+    unitw = jnp.asarray(np.arange(q) % 2, jnp.int32)
+    want = fused_relax_reduce_lanes_ref(gval, gchg, unitw, src, w, mask,
+                                        ids, nseg, "add_w", "min")
+    or_chg = np.asarray(gchg).any(axis=-1)
+    host, _ = _host_cells(or_chg, src, mask, ids, nseg, v)
+    for path, vblk in (("pinned", None), ("tiled", 128)):
+        got, dbg = fused_relax_reduce_lanes_pallas(
+            gval, gchg, unitw, src, w, mask, ids, nseg, "add_w", "min",
+            grid_mode="device_worklist", path=path, vblk=vblk,
+            with_debug=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # kernel executed exactly the host-oracle live cells
+        assert int(dbg[0]) == len(host)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(v=st.integers(2, 400),
+           e=st.integers(1, 2 * EBLK + 40),
+           nseg=st.integers(1, 2 * SBLK + 9),
+           frontier=st.floats(0.0, 1.0),
+           seed=st.integers(0, 2**31 - 1))
+    def test_device_compaction_hypothesis(v, e, nseg, frontier, seed):
+        """Randomized sweep: device-compacted live cells equal the host
+        plan on arbitrary skew / frontier density / tile alignment."""
+        gval, gchg, src, w, mask, ids = _hub_case(v, e, nseg, frontier,
+                                                  seed=seed)
+        dev, launched = _device_cells(gchg, src, mask, ids, nseg, v)
+        host, _ = _host_cells(gchg, src, mask, ids, nseg, v)
+        assert dev == host
+        assert launched == device_worklist_pad(e, nseg)
+
+
+SHARDED_DEVICE_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import actions, engine
+    from repro.core.partition import PartitionConfig, build_partition
+    from repro.graph import generators
+
+    assert len(jax.devices()) == 8
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+
+    g = generators.ba_skewed(400, m_per=4, seed=11).with_random_weights(
+        seed=11)
+    part = build_partition(g, PartitionConfig(num_shards=8, rpvo_max=2))
+    init = engine.init_values(part, actions.SSSP, {0: 0.0})
+
+    base = dict(use_pallas=True, pallas_mode="fused")
+    val_d, st_d = engine.run_sharded(
+        actions.SSSP, part, init, mesh, ("data", "model"),
+        engine.EngineConfig(grid_mode="dense", **base))
+    val_dev, st_dev = engine.run_sharded(
+        actions.SSSP, part, init, mesh, ("data", "model"),
+        engine.EngineConfig(grid_mode="device_worklist", **base))
+    # host-planned grid_mode='worklist' cannot trace under shard_map:
+    # the runner must warn ONCE and route to the device compaction
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        val_w, st_w = engine.run_sharded(
+            actions.SSSP, part, init, mesh, ("data", "model"),
+            engine.EngineConfig(grid_mode="worklist", **base))
+        engine.run_sharded(
+            actions.SSSP, part, init, mesh, ("data", "model"),
+            engine.EngineConfig(grid_mode="worklist", **base))
+    routed = [w for w in rec if "device_worklist" in str(w.message)]
+    assert len(routed) == 1, [str(w.message) for w in rec]
+
+    np.testing.assert_array_equal(np.asarray(val_dev), np.asarray(val_d))
+    np.testing.assert_array_equal(np.asarray(val_w), np.asarray(val_d))
+    for f in ("iterations", "messages", "work_actions", "pruned_actions"):
+        assert int(getattr(st_dev, f)) == int(getattr(st_d, f))
+        assert int(getattr(st_w, f)) == int(getattr(st_d, f))
+    print("SHARDED_DEVICE_WL_OK it=%d" % int(st_dev.iterations))
+""")
+
+
+def test_device_compaction_sharded_8dev_subprocess():
+    """8-host-device sharded parity: the device-compacted worklist grid
+    executes INSIDE run_sharded's traced collective loop and matches the
+    dense sharded run exactly; 'worklist' warns once and routes."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = os.environ.copy()
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"    # see test_engine_sharded.py
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_DEVICE_CHILD], env=env,
+        capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "SHARDED_DEVICE_WL_OK" in out.stdout
+
+
+def test_engine_device_worklist_matches_dense():
+    """run_stacked under grid_mode='device_worklist': the whole fixpoint
+    is one traced while_loop dispatch; values and stats equal dense."""
+    g = generators.ba_skewed(260, m_per=4, seed=9).with_random_weights(
+        seed=9)
+    root = int(np.argmax(g.out_degrees()))
+    cfg_d = engine.EngineConfig(use_pallas=True)
+    cfg_dev = engine.EngineConfig(use_pallas=True,
+                                  grid_mode="device_worklist")
+    for app in (bfs, sssp):
+        out_d, st_d, _ = app(g, root, num_shards=8, rpvo_max=4, cfg=cfg_d)
+        out_v, st_v, _ = app(g, root, num_shards=8, rpvo_max=4,
+                             cfg=cfg_dev)
+        np.testing.assert_array_equal(out_v, out_d)
+        for f in ("iterations", "messages", "work_actions",
+                  "pruned_actions"):
+            assert int(getattr(st_v, f)) == int(getattr(st_d, f))
 
 
 def test_planner_live_fraction_and_auto_threshold():
