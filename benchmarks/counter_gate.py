@@ -95,6 +95,51 @@ def run_gate() -> dict:
                                     grid_mode="device_worklist"))
         out["runs"]["pagerank_delta_device"] = _totals(
             rec.rounds, "pagerank_delta")
+
+    out["runs"].update(_stream_leg(gw))
+    return out
+
+
+def _stream_leg(gw) -> dict:
+    """Streaming leg: a FIXED mutation schedule on the same scale-8
+    RMAT; pins the incremental-maintenance message/cell counters (the
+    warm-start fixpoints the ISSUE 9 splice path drives) so a change
+    that silently re-lifts more than the affected region fails CI."""
+    from repro.core.streaming import StreamingGraph
+
+    root = int(np.argmax(gw.out_degrees()))
+    pcfg = PartitionConfig(num_shards=SHARDS, rpvo_max=RPVO_MAX)
+    cfg = engine.EngineConfig(use_pallas=True, grid_mode="dense")
+    sg = StreamingGraph(gw, pcfg, cfg=cfg)
+    sg.track("bfs", root)
+    sg.track("sssp", root)
+    rng = np.random.default_rng(SEED)
+    out = {}
+    with obs.recording() as rec:
+        for batch in range(2):
+            s = rng.integers(0, gw.n, 16).astype(np.int32)
+            d = rng.integers(0, gw.n, 16).astype(np.int32)
+            w = rng.integers(1, 10, 16).astype(np.float32)
+            sg.insert_edges(s, d, w)
+            if batch == 1:
+                idx = rng.choice(sg.g.num_edges, 8, replace=False)
+                sg.delete_edges(sg.g.src[idx], sg.g.dst[idx])
+            info = sg.commit()
+            for name in ("bfs", "sssp"):
+                key = f"stream_{name}_batch{batch}"
+                out[key] = _totals(rec.rounds, name)
+                ms = info.maint[(name, root)]
+                out[key]["maint_messages"] = ms.messages
+                out[key]["seeds"] = ms.seeds
+                out[key]["invalidated"] = ms.invalidated
+            sp = info.splices["base"]
+            out[f"stream_splice_batch{batch}"] = {
+                "shards_rebuilt": sp.shards_rebuilt,
+                "replicas_added": sp.replicas_added,
+                "replicas_moved": sp.replicas_moved,
+                "affected_edges": sp.affected_edges,
+            }
+            rec.rounds.clear()
     return out
 
 
@@ -138,7 +183,7 @@ def main(argv=None) -> int:
             print("  " + e)
         return 1
     n = len(base["runs"])
-    msgs = sum(r["messages"] for r in base["runs"].values())
+    msgs = sum(r.get("messages", 0) for r in base["runs"].values())
     print(f"counter gate OK: {n} runs, {msgs} messages, all counters exact")
     return 0
 

@@ -62,15 +62,19 @@ class DynamicGraph:
     def delete_edges(self, src, dst) -> np.ndarray:
         src = np.asarray(src, np.int64)
         dst = np.asarray(dst, np.int64)
-        kill = set(zip(src.tolist(), dst.tolist()))
-        keep = np.array(
-            [(int(s), int(d)) not in kill
-             for s, d in zip(self.g.src, self.g.dst)], dtype=bool)
+        # vectorized membership: (src, dst) pairs keyed as src*n + dst
+        kill_key = np.unique(src * self.g.n + dst)
+        edge_key = self.g.src.astype(np.int64) * self.g.n \
+            + self.g.dst.astype(np.int64)
+        keep = ~np.isin(edge_key, kill_key)
         self.g = COOGraph(self.g.n, self.g.src[keep], self.g.dst[keep],
                           self.g.weight[keep])
         self._migrate_from = self.part
         self.part = build_partition(self.g, self.part.cfg)
-        self.values.pop("bfs", None)   # deletions invalidate monotone state
+        # deletions can RAISE monotone values: every cached monotone app
+        # is stale, not just BFS
+        for app in ("bfs", "sssp", "cc"):
+            self.values.pop(app, None)
         return np.unique(dst).astype(np.int32)
 
     # ---------------------------------------------------- incremental apps

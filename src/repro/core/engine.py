@@ -631,7 +631,8 @@ def _tol_table(part: Partition, tol):
 
 def run_pagerank_delta(part: Partition, damping: float = 0.85,
                        tol=1e-6, cfg: EngineConfig = EngineConfig(),
-                       max_rounds: int = 256):
+                       max_rounds: int = 256,
+                       init_rank=None, init_delta=None):
     """Stacked **delta-PageRank**: push-based residual propagation with
     per-vertex pruning (ISSUE 5 tentpole).
 
@@ -646,16 +647,27 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
     Runs host-driven (the termination test and any worklist planning
     need the frontier on host).  Returns ((S, R_max) ranks, RunStats
     with the Fig-6 accounting: messages delivered, slots whose residual
-    stayed live (work), deliveries pruned below tolerance)."""
+    stayed live (work), deliveries pruned below tolerance).
+
+    ``init_rank`` / ``init_delta`` warm-start the Neumann accumulation:
+    streaming maintenance seeds the migrated old ranks plus a (possibly
+    negative) residual correction on mutated vertices, so only the
+    affected region re-diffuses (frontier tests use ``|delta|``)."""
     from repro.core.actions import PAGERANK as sem
 
     arrays = DeviceArrays.from_partition(part)
     S, R_max = part.S, part.R_max
     base = (1.0 - damping) / part.n
     tol_t = _tol_table(part, tol)
+    if init_rank is None:
+        rank0 = delta0 = jnp.where(arrays.slot_valid, base, 0.0)
+    else:
+        rank0 = jnp.asarray(init_rank, jnp.float32)
+        delta0 = jnp.asarray(init_delta, jnp.float32)
     if cfg.wants_device_worklist:
         return _run_pagerank_delta_deviceloop(
-            sem, part, arrays, cfg, damping, tol_t, base, max_rounds)
+            sem, part, arrays, cfg, damping, tol_t, rank0, delta0,
+            max_rounds)
     rec = obs.get_recorder()
     planner = (launch_planner(part, cfg)
                if cfg.wants_worklist
@@ -669,10 +681,10 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
             sem, arrays, cfg, S, R_max, damping, tol_t, rank, delta,
             worklist=worklist)
 
-    rank = delta = jnp.where(arrays.slot_valid, base, 0.0)
+    rank, delta = rank0, delta0
     # each round returns next round's frontier — computed on device,
     # downloaded ONCE per round for planning + accounting alike
-    chg_h = np.asarray((delta > tol_t) & arrays.slot_valid)
+    chg_h = np.asarray((jnp.abs(delta) > tol_t) & arrays.slot_valid)
     it = msgs = work_total = pruned = 0
     while it < max_rounds:
         if not chg_h.any():
@@ -703,7 +715,7 @@ def run_pagerank_delta(part: Partition, damping: float = 0.85,
 
 
 def _run_pagerank_delta_deviceloop(sem, part, arrays, cfg, damping, tol_t,
-                                   base, max_rounds):
+                                   rank0, delta0, max_rounds):
     """delta-PageRank under ``grid_mode='device_worklist'``: the
     residual-tolerance frontier test runs ON DEVICE, so with no flight
     recorder the whole fixpoint is ONE traced ``lax.while_loop``
@@ -712,7 +724,7 @@ def _run_pagerank_delta_deviceloop(sem, part, arrays, cfg, damping, tol_t,
     post-hoc from the returned frontier trajectory."""
     S, R_max = part.S, part.R_max
     rec = obs.get_recorder()
-    rank = delta = jnp.where(arrays.slot_valid, base, 0.0)
+    rank, delta = rank0, delta0
 
     if rec is None:
         @jax.jit
@@ -733,7 +745,8 @@ def _run_pagerank_delta_deviceloop(sem, part, arrays, cfg, damping, tol_t,
 
             def cond(carry):
                 _, delta, it, _, _, _ = carry
-                live = jnp.any((delta > tol_t) & arrays.slot_valid)
+                live = jnp.any((jnp.abs(delta) > tol_t)
+                               & arrays.slot_valid)
                 return live & (it < max_rounds)
 
             return lax.while_loop(
@@ -758,7 +771,7 @@ def _run_pagerank_delta_deviceloop(sem, part, arrays, cfg, damping, tol_t,
                     sem, arrays, cfg, S, R_max, _k, damping, tol_t, r, d))
         return window_fns[k]
 
-    chg_h = np.asarray((delta > tol_t) & arrays.slot_valid)
+    chg_h = np.asarray((jnp.abs(delta) > tol_t) & arrays.slot_valid)
     it = msgs = work_total = pruned = 0
     window = 0
     while it < max_rounds and chg_h.any():
@@ -825,7 +838,8 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
                                tol: float = 1e-6, mesh: Mesh = None,
                                axis_names=("data", "model"),
                                cfg: EngineConfig = EngineConfig(),
-                               max_rounds: int = 256):
+                               max_rounds: int = 256,
+                               init_rank=None, init_delta=None):
     """shard_map delta-PageRank execution (host-driven rounds over real
     collectives); layout as in ``run_sharded``.  Scalar ``tol`` only —
     a per-vertex table would need its own sharded layout."""
@@ -837,9 +851,10 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
     arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
     slot_valid = np.asarray(part.slot_vertex) >= 0
     base = (1.0 - damping) / part.n
-    init = jnp.where(jnp.asarray(slot_valid), base, 0.0)
-    rank = jax.device_put(init, sharding)
-    delta = jax.device_put(init, sharding)
+    if init_rank is None:
+        init_rank = init_delta = jnp.where(jnp.asarray(slot_valid), base, 0.0)
+    rank = jax.device_put(jnp.asarray(init_rank, jnp.float32), sharding)
+    delta = jax.device_put(jnp.asarray(init_delta, jnp.float32), sharding)
     it = msgs = work_total = pruned = 0
     rec = obs.get_recorder()
     rec_path = "jnp"
@@ -852,12 +867,13 @@ def run_pagerank_delta_sharded(part: Partition, damping: float = 0.85,
         rec_path = cfg.pallas_mode
     # the round's psum'd live-slot count IS the next round's frontier
     # size — only the initial frontier needs a host check
-    live = bool(((np.asarray(delta) > tol) & slot_valid).any())
+    live = bool(((np.abs(np.asarray(delta)) > tol) & slot_valid).any())
     while live and it < max_rounds:
         if rec is not None:
             # recorder-only frontier download: the per-shard message
             # mirror needs the live-residual bitmap host-side
-            gchg = ((np.asarray(delta) > tol) & slot_valid).reshape(-1)
+            gchg = ((np.abs(np.asarray(delta)) > tol)
+                    & slot_valid).reshape(-1)
             frontier = int(gchg.sum())
             t0 = rec.tracer.now()
             span = rec.tracer.span(

@@ -141,20 +141,22 @@ def delta_pagerank_round_stacked(sem: Semiring, arrays, cfg, S: int,
     Ranks follow the Neumann series ``rank = Σ_k (d·Aᵀ)^k base`` — the
     same fixpoint as the dense power iteration — but each round ships
     only the *residual delta*, and only where it still exceeds ``tol``
-    (scalar or per-slot): the frontier ``delta > tol`` masks the relax,
+    (scalar or per-slot): the frontier ``|delta| > tol`` masks the relax
+    (absolute value, so streaming's negative incremental corrections
+    diffuse too; cold deltas are nonnegative, making this bit-identical),
     sub-tolerance residuals are dropped (the paper's pruned diffusions),
     and the sum semiring finally has a genuinely shrinking frontier for
     the chunk-skip / worklist / tile-filter stack to prune against.
 
     Returns (new rank, new delta, new changed, message count); callers
     seed ``rank = delta = base`` (see ``engine.run_pagerank_delta``)."""
-    chg = (delta > tol) & arrays.slot_valid
+    chg = (jnp.abs(delta) > tol) & arrays.slot_valid
     total_in, counts = stacked_total_in(
         sem, arrays, cfg, S, R_max, _flat(delta), _flat(chg),
         worklist=worklist)
     new_delta = jnp.where(arrays.slot_valid, damping * total_in, 0.0)
     new_rank = rank + new_delta
-    new_chg = (new_delta > tol) & arrays.slot_valid
+    new_chg = (jnp.abs(new_delta) > tol) & arrays.slot_valid
     return new_rank, new_delta, new_chg, counts
 
 
@@ -199,14 +201,14 @@ def delta_pagerank_window_stacked(sem: Semiring, arrays, cfg, S: int,
 
     def step(carry, _):
         rank, delta = carry
-        chg = (delta > tol) & arrays.slot_valid
+        chg = (jnp.abs(delta) > tol) & arrays.slot_valid
         nr, nd, _, counts = delta_pagerank_round_stacked(
             sem, arrays, cfg, S, R_max, damping, tol, rank, delta)
         return (nr, nd), (counts, chg)
 
     (rank, delta), (counts, frontiers) = lax.scan(
         step, (rank, delta), None, length=k)
-    new_chg = (delta > tol) & arrays.slot_valid
+    new_chg = (jnp.abs(delta) > tol) & arrays.slot_valid
     return rank, delta, new_chg, counts, frontiers
 
 
@@ -320,13 +322,13 @@ def delta_pagerank_round_shard(sem: Semiring, arrays_s, cfg, S: int,
     def gather(x):
         return lax.all_gather(x, axis_names, tiled=True)
 
-    chg = (delta > tol) & arrays_s.slot_valid
+    chg = (jnp.abs(delta) > tol) & arrays_s.slot_valid
     total_in, counts = shard_total_in(
         sem, arrays_s, cfg, S, R_max, axis_names, gather(delta),
         gather(chg))
     new_delta = jnp.where(arrays_s.slot_valid, damping * total_in, 0.0)
     new_rank = rank + new_delta
-    new_chg = (new_delta > tol) & arrays_s.slot_valid
+    new_chg = (jnp.abs(new_delta) > tol) & arrays_s.slot_valid
     return new_rank, new_delta, new_chg, counts
 
 

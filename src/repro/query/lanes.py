@@ -307,7 +307,8 @@ def run_stacked_lanes(part: Partition, init_val, lane_unitw=None,
 def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
                           axis_names=("data", "model"),
                           cfg: EngineConfig = EngineConfig(),
-                          sem: Semiring = actions.SSSP):
+                          sem: Semiring = actions.SSSP,
+                          with_init_changed: bool = False):
     """shard_map laned fixpoint as a jit-able fn of (DeviceArrays,
     (S, R_max, Q) val, (Q,) lane_unitw) -> (val, LaneStats).  Same
     collective plan as ``engine.make_sharded_fn`` with the lane axis
@@ -315,7 +316,12 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
     all_gather, inbox all_to_all — the full (S, R_max, Q) table under
     ``exchange='dense'``, only the (S, P_t, Q) targeted compact tables
     under ``exchange='compact'`` — sibling collapse over the gathered
-    table, per-lane psum'd liveness for the termination test."""
+    table, per-lane psum'd liveness for the termination test.
+
+    With ``with_init_changed=True`` the returned fn takes a fourth
+    argument, an (S, R_max, Q) bool initial frontier, instead of
+    deriving it from non-identity values — streaming warm-starts seed
+    only the mutation-affected slots this way."""
     _check_cfg(cfg)
     _check_min(sem)
     cfg = engine._sharded_cfg(cfg, "make_sharded_lanes_fn")
@@ -328,8 +334,10 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
         spec,
         P(),                                   # lane_unitw: replicated
     )
+    if with_init_changed:
+        in_specs = in_specs + (spec,)
 
-    def shard_fn(arrays_l: DeviceArrays, val_l, lane_unitw):
+    def shard_fn(arrays_l: DeviceArrays, val_l, lane_unitw, *rest):
         arrays_s = jax.tree.map(lambda x: x[0], arrays_l)
         val = val_l[0]                         # (R_max, Q)
         vol = exchange.exchange_volume(
@@ -358,10 +366,13 @@ def make_sharded_lanes_fn(S: int, R_max: int, Q: int, mesh: Mesh,
             anyc = lax.psum(chg.any().astype(jnp.int32), axis_names)
             return (anyc > 0) & (it < cfg.max_iters)
 
-        init_chg = (
-            sem.improved(val, jnp.full_like(val, sem.identity))
-            & arrays_s.slot_valid[..., None]
-        )
+        if with_init_changed:
+            init_chg = rest[0][0] & arrays_s.slot_valid[..., None]
+        else:
+            init_chg = (
+                sem.improved(val, jnp.full_like(val, sem.identity))
+                & arrays_s.slot_valid[..., None]
+            )
         val, chg, it, stats = lax.while_loop(
             cond, body,
             (val, init_chg, jnp.zeros((), jnp.int32), _zero_stats(Q)))
@@ -417,18 +428,27 @@ def make_sharded_min_round(S: int, R_max: int, mesh: Mesh,
 def run_sharded_lanes(part: Partition, init_val, lane_unitw=None,
                       mesh: Mesh = None, axis_names=("data", "model"),
                       cfg: EngineConfig = EngineConfig(),
-                      sem: Semiring = actions.SSSP):
-    """shard_map laned execution; layout as in ``engine.run_sharded``."""
+                      sem: Semiring = actions.SSSP,
+                      init_changed=None):
+    """shard_map laned execution; layout as in ``engine.run_sharded``.
+    ``init_changed`` optionally seeds the first frontier (streaming
+    warm-starts); default derives it from non-identity values."""
     init_val = jnp.asarray(init_val, jnp.float32)
     q = init_val.shape[-1]
     lane_unitw = (np.zeros((q,), np.int32) if lane_unitw is None
                   else np.asarray(lane_unitw, np.int32).reshape(q))
     fn, sharding = make_sharded_lanes_fn(
-        part.S, part.R_max, q, mesh, axis_names, cfg, sem)
+        part.S, part.R_max, q, mesh, axis_names, cfg, sem,
+        with_init_changed=init_changed is not None)
     arrays = DeviceArrays.from_partition(part)
     arrays_dev = jax.tree.map(lambda x: jax.device_put(x, sharding), arrays)
     val_dev = jax.device_put(init_val, sharding)
-    val, stats = fn(arrays_dev, val_dev, jnp.asarray(lane_unitw))
+    if init_changed is not None:
+        chg_dev = jax.device_put(jnp.asarray(init_changed, bool), sharding)
+        val, stats = fn(arrays_dev, val_dev, jnp.asarray(lane_unitw),
+                        chg_dev)
+    else:
+        val, stats = fn(arrays_dev, val_dev, jnp.asarray(lane_unitw))
     stats = jax.tree.map(lambda x: x[0], stats)
     return val, stats
 
@@ -556,13 +576,14 @@ def make_sharded_ppr_delta_round(S: int, R_max: int, mesh: Mesh,
         def gather(x):
             return lax.all_gather(x, axis_names, tiled=True)
 
-        chg = (delta > tol[None, :]) & arrays_s.slot_valid[..., None]
+        chg = (jnp.abs(delta) > tol[None, :]) \
+            & arrays_s.slot_valid[..., None]
         total_in, counts = exchange.shard_total_in(
             sem, arrays_s, cfg, S, R_max, axis_names,
             gather(delta), gather(chg))
         new_delta = jnp.where(arrays_s.slot_valid[..., None],
                               damping[None, :] * total_in, 0.0)
-        new_chg = (new_delta > tol[None, :]) \
+        new_chg = (jnp.abs(new_delta) > tol[None, :]) \
             & arrays_s.slot_valid[..., None]
         counts = lax.psum(counts, axis_names)
         return ((rank + new_delta)[None], new_delta[None], new_chg[None],
@@ -641,13 +662,14 @@ def make_ppr_delta_round(part: Partition,
     @jax.jit
     def round_fn(rank, delta, damping, tol, worklist=None):
         q = rank.shape[-1]
-        chg = (delta > tol[None, None, :]) & arrays.slot_valid[..., None]
+        chg = (jnp.abs(delta) > tol[None, None, :]) \
+            & arrays.slot_valid[..., None]
         total_in, counts = exchange.stacked_total_in(
             sem, arrays, cfg, S, R_max, delta.reshape(total, q),
             chg.reshape(total, q), worklist=worklist)
         new_delta = jnp.where(arrays.slot_valid[..., None],
                               damping[None, None, :] * total_in, 0.0)
-        new_chg = (new_delta > tol[None, None, :]) \
+        new_chg = (jnp.abs(new_delta) > tol[None, None, :]) \
             & arrays.slot_valid[..., None]
         return rank + new_delta, new_delta, new_chg, counts
 
@@ -687,7 +709,7 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
         def fixpoint(rank, delta):
             def body(carry):
                 rank, delta, it, stats = carry
-                live = ((delta > tol_j[None, None, :]) & sv) \
+                live = ((jnp.abs(delta) > tol_j[None, None, :]) & sv) \
                     .reshape(-1, q).any(axis=0)
                 nrank, ndelta, nchg, counts = round_fn(
                     rank, delta, damp_j, tol_j)
@@ -703,7 +725,8 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
 
             def cond(carry):
                 _, delta, it, _ = carry
-                anyc = jnp.any((delta > tol_j[None, None, :]) & sv)
+                anyc = jnp.any((jnp.abs(delta) > tol_j[None, None, :])
+                               & sv)
                 return anyc & (it < max_rounds)
 
             rank, delta, _, stats = lax.while_loop(
@@ -723,7 +746,7 @@ def run_ppr_delta_lanes(part: Partition, seeds, dampings,
     damp_j, tol_j = jnp.asarray(dampings), jnp.asarray(tols)
     # each round returns next round's per-lane frontier — computed on
     # device, downloaded ONCE per round for planning + accounting alike
-    chg_h = (base > tols[None, None, :]) & slot_valid[..., None]
+    chg_h = (np.abs(base) > tols[None, None, :]) & slot_valid[..., None]
     while it < max_rounds:
         live = chg_h.any(axis=(0, 1))
         if not live.any():

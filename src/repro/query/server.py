@@ -229,12 +229,21 @@ class _MinPool(_LanePool):
                  arrays: engine.DeviceArrays, mesh=None,
                  axis_names=("data", "model")):
         self.part, self.n = part, n_lanes
+        self._cfg, self._mesh, self._axis_names = cfg, mesh, axis_names
         S, R_max = part.S, part.R_max
         self.exchange_volume = L._volume(part, cfg)
         self.unitw = np.zeros(n_lanes, np.int32)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
         self._windows: dict = {}
-        if mesh is None:
+        self._bind_rounds(arrays)
+        self.val = self._put(jnp.full((S, R_max, n_lanes), jnp.inf,
+                                      jnp.float32))
+        self.chg = self._put(jnp.zeros((S, R_max, n_lanes), bool))
+
+    def _bind_rounds(self, arrays):
+        part, cfg = self.part, self._cfg
+        S, R_max = part.S, part.R_max
+        if self._mesh is None:
             def round_fn(val, chg, unitw):
                 return exchange.fixpoint_round_stacked(
                     actions.SSSP, arrays, cfg, S, R_max, val, chg,
@@ -244,11 +253,54 @@ class _MinPool(_LanePool):
             self._round = jax.jit(round_fn)
         else:
             self._round, self._sharding = L.make_sharded_min_round(
-                S, R_max, mesh, axis_names, cfg)
+                S, R_max, self._mesh, self._axis_names, cfg)
             self._arrays = arrays          # already device_put by the server
-        self.val = self._put(jnp.full((S, R_max, n_lanes), jnp.inf,
-                                      jnp.float32))
-        self.chg = self._put(jnp.zeros((S, R_max, n_lanes), bool))
+
+    def rebind(self, part: Partition, arrays: engine.DeviceArrays,
+               insert_seeds=None, has_deletes: bool = False) -> None:
+        """Swap the pool onto a mutated partition (streaming commit).
+
+        Rounds/windows recompile over the new arrays (shapes may change
+        when splicing grows ``R_max``).  Live lanes migrate: insert-only
+        batches warm-continue — per-vertex values are still valid upper
+        bounds, so they re-scatter onto the new replica layout with the
+        lane frontier OR'd with the insert seeds; a batch with deletes
+        can RAISE min values, so affected lanes restart cold from their
+        original request (same lane, rounds keep accumulating)."""
+        old_part = self.part
+        old_val = np.asarray(self.val)
+        old_chg = np.asarray(self.chg)
+        self.part = part
+        self.exchange_volume = L._volume(part, self._cfg)
+        self._windows = {}
+        self._bind_rounds(arrays)
+        S, R_max = part.S, part.R_max
+        val = np.full((S, R_max, self.n), np.inf, np.float32)
+        chg = np.zeros((S, R_max, self.n), bool)
+        sv_old = np.asarray(old_part.slot_vertex)
+        ok_old = sv_old >= 0
+        sv_new = np.asarray(part.slot_vertex)
+        ok_new = sv_new >= 0
+        restart = []
+        for lane, req in enumerate(self.reqs):
+            if req is None:
+                continue
+            if has_deletes:
+                restart.append(lane)
+                continue
+            vv = engine.vertex_values(old_part, old_val[:, :, lane])
+            fl = np.zeros(part.n, bool)
+            np.logical_or.at(fl, sv_old[ok_old],
+                             old_chg[:, :, lane][ok_old])
+            if insert_seeds is not None and len(insert_seeds):
+                seeds = np.asarray(insert_seeds, np.int64)
+                fl[seeds[np.isfinite(vv[seeds])]] = True
+            val[:, :, lane][ok_new] = vv[sv_new[ok_new]]
+            chg[:, :, lane][ok_new] = fl[sv_new[ok_new]]
+        self.val = self._put(jnp.asarray(val))
+        self.chg = self._put(jnp.asarray(chg))
+        for lane in restart:
+            self.inject(lane, self.reqs[lane])
 
     def inject(self, lane: int, req: QueryRequest):
         init, unitw = L.init_lane_values(
@@ -333,21 +385,43 @@ class _PprPool(_LanePool):
                  arrays: engine.DeviceArrays, mesh=None,
                  axis_names=("data", "model")):
         self.part, self.n = part, n_lanes
+        self._cfg, self._mesh, self._axis_names = cfg, mesh, axis_names
         S, R_max = part.S, part.R_max
         self.exchange_volume = L._volume(part, cfg)
         self.damping = np.zeros(n_lanes, np.float32)
         self.tol = np.full(n_lanes, 1e-6, np.float32)
         self.reqs: list[QueryRequest | None] = [None] * n_lanes
         self._windows: dict = {}
-        if mesh is None:
-            self._round = L.make_ppr_delta_round(part, cfg, arrays=arrays)
-        else:
-            self._round, self._sharding = L.make_sharded_ppr_delta_round(
-                S, R_max, mesh, axis_names, cfg)
-            self._arrays = arrays          # already device_put by the server
+        self._bind_rounds(arrays)
         self.rank = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
         self.delta = self._put(jnp.zeros((S, R_max, n_lanes), jnp.float32))
         self.chg = self._put(jnp.zeros((S, R_max, n_lanes), bool))
+
+    def _bind_rounds(self, arrays):
+        part, cfg = self.part, self._cfg
+        if self._mesh is None:
+            self._round = L.make_ppr_delta_round(part, cfg, arrays=arrays)
+        else:
+            self._round, self._sharding = L.make_sharded_ppr_delta_round(
+                part.S, part.R_max, self._mesh, self._axis_names, cfg)
+            self._arrays = arrays          # already device_put by the server
+
+    def rebind(self, part: Partition, arrays: engine.DeviceArrays,
+               insert_seeds=None, has_deletes: bool = False) -> None:
+        """Swap the pool onto a mutated partition (streaming commit).
+        Sum-semiring residual state is exact only for the graph it was
+        seeded on, so every live lane restarts from its request."""
+        self.part = part
+        self.exchange_volume = L._volume(part, self._cfg)
+        self._windows = {}
+        self._bind_rounds(arrays)
+        S, R_max = part.S, part.R_max
+        self.rank = self._put(jnp.zeros((S, R_max, self.n), jnp.float32))
+        self.delta = self._put(jnp.zeros((S, R_max, self.n), jnp.float32))
+        self.chg = self._put(jnp.zeros((S, R_max, self.n), bool))
+        for lane, req in enumerate(self.reqs):
+            if req is not None:
+                self.inject(lane, req)
 
     def inject(self, lane: int, req: QueryRequest):
         srcs = np.asarray(req.sources).reshape(-1)
@@ -693,6 +767,44 @@ class QueryServer:
                 "serve_cache_total", "result-cache events").labels(
                     event="invalidation").inc(n)
         return n
+
+    # ------------------------------------------------------- streaming ops
+    def apply_mutation(self, new_part: Partition, insert_seeds=None,
+                       has_deletes: bool = False,
+                       affected_roots=None) -> None:
+        """Swap the server onto a mutated partition between ticks (the
+        ``StreamingGraph.commit`` hook).
+
+        One fresh device copy of the new graph tables feeds both pools'
+        ``rebind``: compiled rounds/windows recompile, live min lanes
+        warm-continue across insert-only batches (frontier OR'd with
+        ``insert_seeds``) and restart when ``has_deletes``, ppr lanes
+        always restart.  The result cache is then invalidated — whole
+        cache when ``affected_roots`` is None (exact: a mutation can
+        move any root's result), else per affected root (the root-affine
+        heuristic ``invalidate_cache(root)`` documents)."""
+        arrays = engine.DeviceArrays.from_partition(new_part)
+        if self.mesh is not None:
+            sharding = NamedSharding(
+                self.mesh, P(exchange.axis_tuple(
+                    self.min_pool._axis_names)))
+            arrays = jax.tree.map(
+                lambda x: jax.device_put(x, sharding), arrays)
+        self.part = new_part
+        self.min_pool.rebind(new_part, arrays, insert_seeds=insert_seeds,
+                             has_deletes=has_deletes)
+        self.ppr_pool.rebind(new_part, arrays)
+        if affected_roots is None:
+            self.invalidate_cache(None)
+        else:
+            for root in np.asarray(affected_roots).reshape(-1):
+                self.invalidate_cache(int(root))
+        self.counters["mutations"] += 1
+        rec = obs.get_recorder()
+        if rec is not None:
+            rec.registry.counter(
+                "serve_mutations_total",
+                "partition swaps applied between ticks").inc()
 
     # -------------------------------------------------------------- admit
     def _tenant_in_flight(self) -> dict:

@@ -85,7 +85,7 @@ def test_costmodel_rhizomes_cut_contention():
     loads = {}
     for rmax in (1, 16):
         part = build_partition(g, PartitionConfig(
-            num_shards=64, rpvo_max=rmax, local_edge_list_size=8, seed=5))
+            num_shards=64, rpvo_max=rmax, local_edge_list_size=8, seed=0))
         cm = CostModel(part, torus=True)
         loads[rmax] = cm.replay(trace)
     # hub arrivals concentrate on one CC without rhizomes

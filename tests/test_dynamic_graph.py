@@ -77,6 +77,42 @@ def test_delete_edges_full_recompute_use_pallas():
     assert int(stats.messages) > 0
 
 
+def test_delete_edges_vectorized_mask_removes_all_copies():
+    """The hashed-key mask removes every copy of each (src, dst) pair —
+    including duplicates — exactly like the old per-edge membership loop."""
+    n = 10
+    src = np.array([0, 1, 1, 2, 2, 2, 3], np.int32)
+    dst = np.array([1, 2, 2, 3, 3, 4, 4], np.int32)   # dup (1,2) and (2,3)
+    g = COOGraph(n, src, dst, None)
+    dg = DynamicGraph.build(g, PartitionConfig(num_shards=4, rpvo_max=1))
+    dg.delete_edges([1, 2], [2, 3])
+    keep = [(int(s), int(d)) for s, d in zip(dg.g.src, dg.g.dst)]
+    assert keep == [(0, 1), (2, 4), (3, 4)]
+    # slow-path oracle: per-pair membership
+    kills = {(1, 2), (2, 3)}
+    want = [(int(s), int(d)) for s, d in zip(src, dst)
+            if (int(s), int(d)) not in kills]
+    assert keep == want
+
+
+def test_delete_edges_invalidates_every_monotone_app():
+    """Deletions can raise ANY monotone min-fixpoint, so delete_edges
+    must drop every cached monotone app — not just bfs."""
+    n = 8
+    src = np.arange(n - 1, dtype=np.int32)
+    g = COOGraph(n, src, (src + 1).astype(np.int32), None)
+    dg = DynamicGraph.build(g, PartitionConfig(num_shards=4, rpvo_max=1))
+    dg.bfs_full(0)
+    dg.values["sssp"] = np.zeros(n)     # pretend a cached SSSP/CC state
+    dg.values["cc"] = np.zeros(n)
+    dg.values["pagerank"] = np.zeros(n)  # sum app: unaffected by the rule
+    dg.delete_edges([3], [4])
+    assert "bfs" not in dg.values
+    assert "sssp" not in dg.values
+    assert "cc" not in dg.values
+    assert "pagerank" in dg.values
+
+
 def test_incremental_insert_warm_start_use_pallas():
     from repro.core import engine
     cfg = engine.EngineConfig(use_pallas=True)
