@@ -97,7 +97,47 @@ def run_gate() -> dict:
             rec.rounds, "pagerank_delta")
 
     out["runs"].update(_stream_leg(gw))
+    out["runs"].update(_resilient_leg(gw, part, root))
     return out
+
+
+def _resilient_leg(gw, part, root) -> dict:
+    """Kill-and-restore leg (ISSUE 10): a shard killed at round 3, the
+    resilient driver restores from the round-2 checkpoint, and the
+    POST-RECOVERY totals — rounds, messages, work — are pinned EQUAL to
+    the uninterrupted run's (counters ride in the checkpoint tree, so
+    recovery is invisible in the accounting)."""
+    import tempfile
+
+    from repro.core.resilient import StackedTask, run_resilient
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.runtime.chaos import ChaosEvent, ChaosPlan
+
+    cfg = engine.EngineConfig(checkpoint_every=2)
+    init = engine.init_values(part, actions.SSSP, {root: 0.0})
+    base_val, base_stats = engine.run_stacked(
+        actions.SSSP, part, init, engine.EngineConfig())
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=3, kind="kill_shard", shard=1),))
+    with tempfile.TemporaryDirectory() as d:
+        got, stats, report = run_resilient(
+            StackedTask(actions.SSSP, part, init, cfg), chaos=chaos,
+            manager=CheckpointManager(d))
+    return {"resilient_kill_restore": {
+        "status": report.status,
+        "faults": len(report.faults),
+        "restores": report.restores,
+        "rounds_lost": report.rounds_lost,
+        "checkpoints_written": report.checkpoints_written,
+        "rounds": int(stats.iterations),
+        "messages": int(stats.messages),
+        "work": int(stats.work_actions),
+        "equal_uninterrupted": bool(
+            int(stats.iterations) == int(base_stats.iterations)
+            and int(stats.messages) == int(base_stats.messages)
+            and int(stats.work_actions) == int(base_stats.work_actions)
+            and np.array_equal(np.asarray(got), np.asarray(base_val))),
+    }}
 
 
 def _stream_leg(gw) -> dict:

@@ -44,17 +44,20 @@ class CheckpointManager:
         self.shard_suffix = shard_suffix
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._async_error: BaseException | None = None
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree, blocking: bool = True) -> str:
+    def save(self, step: int, tree, blocking: bool = True,
+             meta: dict | None = None) -> str:
         self.wait()
         leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
         host = [(_flat_key(p), np.asarray(l)) for p, l in leaves_with_path]
         treedef = jax.tree.structure(tree)
         if blocking:
-            return self._write(step, host, treedef)
+            return self._write(step, host, treedef, meta)
         self._thread = threading.Thread(
-            target=self._write, args=(step, host, treedef), daemon=True)
+            target=self._write_guarded, args=(step, host, treedef, meta),
+            daemon=True)
         self._thread.start()
         return self._final_path(step)
 
@@ -62,16 +65,29 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise RuntimeError(
+                "async checkpoint write failed") from err
+
+    def _write_guarded(self, step, host, treedef, meta):
+        # writer-thread shim: a failed background save must not die
+        # silently — the exception re-raises on the next save()/wait()
+        try:
+            self._write(step, host, treedef, meta)
+        except BaseException as e:  # noqa: BLE001
+            self._async_error = e
 
     def _final_path(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
-    def _write(self, step: int, host, treedef) -> str:
+    def _write(self, step: int, host, treedef, meta=None) -> str:
         final = self._final_path(step)
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        manifest = {"step": step, "treedef": str(treedef), "leaves": {}}
+        manifest = {"step": step, "treedef": str(treedef), "leaves": {},
+                    "meta": meta if meta is not None else {}}
         for key, arr in host:
             fname = f"{key}{self.shard_suffix}.npy"
             np.save(os.path.join(tmp, fname), arr)
@@ -131,6 +147,13 @@ class CheckpointManager:
                 arr = jax.device_put(arr, sh)
             out.append(arr)
         return jax.tree.unflatten(treedef, out)
+
+    def restore_meta(self, step: int) -> dict:
+        """The JSON ``meta`` dict stored alongside step ``step``'s leaves
+        (empty for checkpoints written without one)."""
+        with open(os.path.join(self._final_path(step),
+                               "manifest.json")) as f:
+            return json.load(f).get("meta", {})
 
     def restore_latest(self, like, shardings=None):
         step = self.latest_step()

@@ -97,6 +97,12 @@ class EngineConfig:
     # guard; set to the real-TPU SMEM size to make select_kernel_path
     # warn and widen vblk before a ~100k-chunk launch would overflow.
     smem_budget_bytes: int | None = None
+    # Checkpoint cadence for the resilient driver (core.resilient): a
+    # crc-verified snapshot of value/frontier state + accounting every K
+    # rounds.  None disables (and keeps every shipped loop here exactly
+    # as before — run_stacked never checkpoints; only the resilient
+    # driver reads this knob, so the obs-off path stays trace-identical).
+    checkpoint_every: int | None = None
     # VMEM byte budget for the fused kernel's value-table residency: the
     # kernel pins the whole padded (S*R_max[, Q]) slot table in VMEM when
     # it fits the budget, else tiles it out of HBM with per-cell
@@ -123,6 +129,9 @@ class EngineConfig:
             raise ValueError(f"grid_mode={self.grid_mode!r}")
         if self.device_window < 1:
             raise ValueError(f"device_window={self.device_window!r}")
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every={self.checkpoint_every!r}")
         if self.smem_budget_bytes is not None \
                 and self.smem_budget_bytes <= 0:
             raise ValueError(

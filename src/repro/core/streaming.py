@@ -208,9 +208,17 @@ class StreamingGraph:
     def __init__(self, g: COOGraph, pcfg: PartitionConfig,
                  cfg: engine.EngineConfig = engine.EngineConfig(),
                  runner: str = "stacked", mesh=None,
-                 axis_names=("data", "model")):
+                 axis_names=("data", "model"),
+                 staleness_slo: float | None = None,
+                 staleness_metric: str = "edges"):
         if runner not in ("stacked", "lanes", "sharded"):
             raise ValueError(f"unknown runner {runner!r}")
+        if staleness_metric not in ("edges", "pr_mass"):
+            raise ValueError(f"unknown staleness metric "
+                             f"{staleness_metric!r}")
+        if staleness_slo is not None and not staleness_slo > 0:
+            raise ValueError(f"staleness_slo must be > 0; got "
+                             f"{staleness_slo!r}")
         if pcfg.indegree_cutoff is None:
             # pin Eq. 1's cutoff to the initial graph so streamed
             # in-degree growth splits rhizomes instead of re-deriving
@@ -235,6 +243,10 @@ class StreamingGraph:
         self._commits = 0
         # sym-view directed-pair support counts (lazy, see _ensure_view)
         self._mult: dict[int, int] | None = None
+        # deferred-commit staleness SLO (see staleness())
+        self.staleness_slo = staleness_slo
+        self._staleness_metric = staleness_metric
+        self.auto_refreshes = 0
 
     # ------------------------------------------------------------- views
     def view(self, name: str) -> _View:
@@ -326,12 +338,56 @@ class StreamingGraph:
         w = (np.ones(src.size, np.float32) if weight is None
              else np.asarray(weight, np.float32).reshape(-1))
         self._pending_ins.append((src, dst, w))
+        self._maybe_auto_refresh()
 
     def delete_edges(self, src, dst) -> None:
         """Buffer deletion of every edge matching each (src, dst) pair."""
         src = np.asarray(src, np.int32).reshape(-1)
         dst = np.asarray(dst, np.int32).reshape(-1)
         self._pending_del.append((src, dst))
+        self._maybe_auto_refresh()
+
+    # ------------------------------------------------- staleness SLO
+    def staleness(self) -> float:
+        """How stale the tracked results are under the deferred
+        (uncommitted) mutations.  ``'edges'``: buffered edge-mutation
+        count.  ``'pr_mass'``: an upper bound on the L1 norm of the
+        zeroth-order delta-PageRank correction ``d·(A'-A)ᵀ p`` —
+        ``d · Σ p[u]`` over the pending mutations' distinct source
+        vertices (each mutated source redistributes at most its full
+        damped rank mass) — i.e. staleness in rank units rather than
+        edge counts.  Falls back to the edge count when no pagerank
+        query is tracked."""
+        n_pend = sum(int(x[0].size) for x in self._pending_ins) \
+            + sum(int(x[0].size) for x in self._pending_del)
+        if self._staleness_metric == "edges" \
+                or ("pagerank", None) not in self.tracked:
+            return float(n_pend)
+        if n_pend == 0:
+            return 0.0
+        srcs = np.unique(np.concatenate(
+            [x[0] for x in self._pending_ins]
+            + [x[0] for x in self._pending_del]).astype(np.int64))
+        p = np.asarray(self.tracked[("pagerank", None)]["vals"],
+                       np.float64)
+        d = self.tracked[("pagerank", None)]["damping"]
+        return float(d * p[srcs].sum())
+
+    def _maybe_auto_refresh(self):
+        """Deferred-commit auto-refresh (the staleness SLO): buffering
+        is free until the staleness crosses ``staleness_slo``, at which
+        point the batch commits — bounded staleness without paying a
+        splice per mutation."""
+        if self.staleness_slo is None:
+            return
+        if self.staleness() > self.staleness_slo:
+            self.auto_refreshes += 1
+            rec = obs.get_recorder()
+            if rec is not None:
+                rec.registry.counter(
+                    "stream_auto_refresh_total",
+                    "commits triggered by the staleness SLO").inc()
+            self.commit()
 
     def bind_server(self, server, cache_invalidation: str = "all") -> None:
         """Wire a ``QueryServer`` serving the base view: each commit
@@ -694,3 +750,123 @@ class StreamingGraph:
         maint[("pagerank", None)] = MaintStats(
             app="pagerank", mode="warm", rounds=r, messages=m, work=w,
             seeds=int((np.abs(c) > tol).sum()), invalidated=0)
+
+    # ---------------------------------------------- checkpoint / WAL
+    def snapshot(self) -> tuple[dict, dict]:
+        """(array tree, JSON meta) of the full streaming state: the
+        committed graph, every tracked query's values, and the
+        **write-ahead log** — the buffered-but-uncommitted mutation
+        batches.  A crash mid-commit restores to the pre-commit
+        boundary with the batch still in the WAL; replaying it through
+        the normal ``commit()`` path reproduces the interrupted commit
+        EXACTLY (same splice, same warm-start maintenance, bit-identical
+        min values) — commit is all-or-nothing."""
+        tree = {
+            "graph": {"src": np.asarray(self.g.src),
+                      "dst": np.asarray(self.g.dst),
+                      "weight": np.asarray(self.g.weight)},
+            "tracked": {_skey(k): np.asarray(st["vals"])
+                        for k, st in self.tracked.items()},
+            "wal_ins": {str(i): {"src": s, "dst": d, "w": w}
+                        for i, (s, d, w)
+                        in enumerate(self._pending_ins)},
+            "wal_del": {str(i): {"src": s, "dst": d}
+                        for i, (s, d) in enumerate(self._pending_del)},
+        }
+        meta = {
+            "n": int(self.g.n),
+            "pcfg": _pcfg_to_dict(self.pcfg),
+            "commits": self._commits,
+            "auto_refreshes": self.auto_refreshes,
+            "staleness_slo": self.staleness_slo,
+            "staleness_metric": self._staleness_metric,
+            "tracked": {_skey(k): {kk: vv for kk, vv in st.items()
+                                   if kk != "vals"}
+                        for k, st in self.tracked.items()},
+            "n_wal_ins": len(self._pending_ins),
+            "n_wal_del": len(self._pending_del),
+        }
+        return tree, meta
+
+    def save_checkpoint(self, manager, blocking: bool = False) -> int:
+        """Snapshot to a ``CheckpointManager`` at the current commit
+        count (async by default).  Returns the checkpoint step."""
+        tree, meta = self.snapshot()
+        manager.save(self._commits, tree, blocking=blocking, meta=meta)
+        return self._commits
+
+    @classmethod
+    def restore(cls, manager, *, step: int | None = None,
+                cfg: engine.EngineConfig = engine.EngineConfig(),
+                runner: str = "stacked", mesh=None,
+                axis_names=("data", "model")) -> "StreamingGraph":
+        """Rebuild a ``StreamingGraph`` from a checkpoint: committed
+        graph and partition (deterministic ``build_partition``), tracked
+        values (no cold recompute), and the WAL of uncommitted batches —
+        call ``commit()`` to replay a batch interrupted mid-commit."""
+        if step is None:
+            step = manager.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint to restore from")
+        meta = manager.restore_meta(step)
+        like = {
+            "graph": {"src": 0, "dst": 0, "weight": 0},
+            "tracked": {k: 0 for k in meta["tracked"]},
+            "wal_ins": {str(i): {"src": 0, "dst": 0, "w": 0}
+                        for i in range(meta["n_wal_ins"])},
+            "wal_del": {str(i): {"src": 0, "dst": 0}
+                        for i in range(meta["n_wal_del"])},
+        }
+        tree = manager.restore(step, like)
+        g = COOGraph(meta["n"],
+                     np.asarray(tree["graph"]["src"], np.int32),
+                     np.asarray(tree["graph"]["dst"], np.int32),
+                     np.asarray(tree["graph"]["weight"], np.float32))
+        pcfg = _pcfg_from_dict(meta["pcfg"])
+        sg = cls(g, pcfg, cfg=cfg, runner=runner, mesh=mesh,
+                 axis_names=axis_names,
+                 staleness_slo=meta["staleness_slo"],
+                 staleness_metric=meta["staleness_metric"])
+        sg._commits = meta["commits"]
+        sg.auto_refreshes = meta["auto_refreshes"]
+        for skey, params in meta["tracked"].items():
+            entry = dict(params)
+            entry["vals"] = np.asarray(tree["tracked"][skey])
+            sg.tracked[_unskey(skey)] = entry
+        sg._pending_ins = [
+            (np.asarray(b["src"], np.int32),
+             np.asarray(b["dst"], np.int32),
+             np.asarray(b["w"], np.float32))
+            for b in (tree["wal_ins"][str(i)]
+                      for i in range(meta["n_wal_ins"]))]
+        sg._pending_del = [
+            (np.asarray(b["src"], np.int32),
+             np.asarray(b["dst"], np.int32))
+            for b in (tree["wal_del"][str(i)]
+                      for i in range(meta["n_wal_del"]))]
+        return sg
+
+
+def _skey(key: tuple) -> str:
+    app, root = key
+    return f"{app}:{'' if root is None else int(root)}"
+
+
+def _unskey(s: str) -> tuple:
+    app, _, root = s.partition(":")
+    return (app, int(root) if root else None)
+
+
+def _pcfg_to_dict(pcfg: PartitionConfig) -> dict:
+    d = dataclasses.asdict(pcfg)
+    for k, v in d.items():
+        if isinstance(v, tuple):
+            d[k] = list(v)
+    return d
+
+
+def _pcfg_from_dict(d: dict) -> PartitionConfig:
+    fields = {f.name for f in dataclasses.fields(PartitionConfig)}
+    kw = {k: (tuple(v) if isinstance(v, list) else v)
+          for k, v in d.items() if k in fields}
+    return PartitionConfig(**kw)

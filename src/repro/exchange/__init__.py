@@ -18,8 +18,9 @@ from repro.exchange.primitives import (
 )
 from repro.exchange.rounds import (
     axis_tuple, delta_pagerank_round_shard, delta_pagerank_round_stacked,
-    delta_pagerank_window_stacked, fixpoint_round_stacked,
-    fixpoint_window_stacked, make_shard_fixpoint_round,
+    delta_pagerank_window_stacked, expected_round_messages,
+    fixpoint_round_stacked, fixpoint_window_stacked,
+    make_shard_fixpoint_round, mask_shard_frontier,
     pagerank_round_stacked, shard_collapse, shard_inbox,
     shard_message_mirror, shard_total_in, stacked_collapse, stacked_inbox,
     stacked_total_in,
@@ -29,8 +30,10 @@ __all__ = [
     "axis_tuple", "collapse", "compact_collapse",
     "delta_pagerank_round_shard", "delta_pagerank_round_stacked",
     "delta_pagerank_window_stacked", "exchange_volume",
+    "expected_round_messages",
     "fixpoint_round_stacked", "fixpoint_window_stacked",
-    "make_shard_fixpoint_round", "pagerank_round_stacked", "reduce_axis0",
+    "make_shard_fixpoint_round", "mask_shard_frontier",
+    "pagerank_round_stacked", "reduce_axis0",
     "relax", "scatter_inbox", "shard_collapse", "shard_inbox",
     "shard_message_mirror", "shard_total_in", "stacked_collapse",
     "stacked_compact_partial",

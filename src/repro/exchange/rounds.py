@@ -351,3 +351,44 @@ def shard_message_mirror(edge_mask, edge_src_root_flat, gchg):
     srcs = np.asarray(edge_src_root_flat)
     g = np.asarray(gchg).reshape(-1)
     return (mask & g[srcs]).sum(axis=tuple(range(1, mask.ndim)))
+
+
+def expected_round_messages(edge_mask, edge_src_root_flat, gchg,
+                            laned: bool = False) -> int:
+    """The exact message total a clean round on frontier ``gchg`` must
+    report — ``shard_message_mirror`` summed over shards.  This is the
+    resilient driver's inbox-integrity detector: a dispatched round whose
+    reported count falls short (a dropped inbox) or overshoots (a
+    duplicated inbox) of this host mirror raises a typed
+    ``FaultDetected`` instead of silently converging to a wrong-work
+    fixpoint.  With ``laned=True`` the trailing axis of ``gchg`` is the
+    query-lane axis Q and the expectation sums over lanes, matching the
+    laned ``relax`` population count."""
+    import numpy as np
+
+    g = np.asarray(gchg)
+    if not laned:
+        return int(shard_message_mirror(
+            edge_mask, edge_src_root_flat, g).sum())
+    gq = g.reshape(-1, g.shape[-1])
+    return int(sum(
+        shard_message_mirror(edge_mask, edge_src_root_flat,
+                             gq[:, q]).sum()
+        for q in range(gq.shape[1])))
+
+
+def mask_shard_frontier(chg, shard: int):
+    """Frontier ``chg`` ((S, R_max[, Q])) with shard ``shard``'s rows
+    forced False — the chaos injector's 'dropped inbox': that shard's
+    outgoing messages silently vanish for one round.  Returns a new
+    array; the caller keeps the untampered original for retry."""
+    return chg.at[shard].set(False) if hasattr(chg, "at") else _mask_np(
+        chg, shard)
+
+
+def _mask_np(chg, shard: int):
+    import numpy as np
+
+    out = np.array(chg, copy=True)
+    out[shard] = False
+    return out

@@ -79,6 +79,7 @@ from repro.core import actions, engine
 from repro.core.engine import EngineConfig
 from repro.core.partition import Partition
 from repro.query import lanes as L
+from repro.serve import admission as _adm
 from repro.serve.admission import (
     AdmissionError, AdmissionQueue, FaultPlan, QueryStatus,
     QueryValidationError, ResultCache, ServeConfig,
@@ -194,6 +195,57 @@ def _cache_key(req: QueryRequest):
     if req.kind == "ppr":
         key += (float(req.damping), float(req.tol))
     return key
+
+
+def _req_to_dict(req: QueryRequest) -> dict:
+    """JSON-able form of a request (checkpoint manifest payload)."""
+    if isinstance(req.sources, dict):
+        src = {"kind": "map", "v": [[int(v), float(x)]
+                                    for v, x in req.sources.items()]}
+    elif isinstance(req.sources, (list, tuple, np.ndarray)):
+        src = {"kind": "list",
+               "v": [int(v) for v in np.asarray(req.sources).reshape(-1)]}
+    else:
+        src = {"kind": "one", "v": int(req.sources)}
+    return {"qid": req.qid, "kind": req.kind, "sources": src,
+            "damping": float(req.damping), "tol": float(req.tol),
+            "priority": req.priority, "tenant": req.tenant,
+            "deadline_s": req.deadline_s, "timeout_s": req.timeout_s,
+            "max_rounds": req.max_rounds}
+
+
+def _req_from_dict(d: dict) -> QueryRequest:
+    src = d["sources"]
+    if src["kind"] == "map":
+        sources = {int(v): float(x) for v, x in src["v"]}
+    elif src["kind"] == "list":
+        sources = [int(v) for v in src["v"]]
+    else:
+        sources = int(src["v"])
+    return QueryRequest(qid=d["qid"], kind=d["kind"], sources=sources,
+                        damping=d["damping"], tol=d["tol"],
+                        priority=d["priority"], tenant=d["tenant"],
+                        deadline_s=d["deadline_s"],
+                        timeout_s=d["timeout_s"],
+                        max_rounds=d["max_rounds"])
+
+
+_RESULT_META_FIELDS = (
+    "qid", "kind", "rounds", "messages", "lane", "admitted_tick",
+    "completed_tick", "latency_s", "exchanged", "status", "partial",
+    "cached", "tenant", "priority", "preemptions", "submitted_tick")
+
+
+def _result_to_dict(r: QueryResult) -> dict:
+    d = {f: getattr(r, f) for f in _RESULT_META_FIELDS}
+    d["latency_s"] = float(d["latency_s"])
+    d["has_values"] = r.values is not None
+    return d
+
+
+def _result_from_dict(d: dict, values) -> QueryResult:
+    return QueryResult(values=values,
+                       **{f: d[f] for f in _RESULT_META_FIELDS})
 
 
 class _LanePool:
@@ -589,6 +641,8 @@ class QueryServer:
         self.occupancy_trace: list[int] = []   # live lanes per tick
         self._obs_submit_t = {}      # qid -> tracer time at submit
         self._obs_admit_t = {}       # qid -> tracer time at admission
+        self._ckpt_manager = None    # attach_checkpoints() wires saving
+        self._resumed_qids: set[int] = set()   # lanes that crossed a restore
 
     def now(self) -> float:
         """Server wall clock (injected faults advance it)."""
@@ -902,7 +956,12 @@ class QueryServer:
     def _retire(self, pool, lane: int, status: str, partial: bool):
         req = pool.reqs[lane]
         key = (id(pool), lane)
+        if status == QueryStatus.OK and req.qid in self._resumed_qids:
+            # the lane crossed a restore: the values are complete (and
+            # bit-identical for min lanes) but the path was not clean
+            status = QueryStatus.RECOVERED
         keep_values = (status == QueryStatus.OK
+                       or status == QueryStatus.RECOVERED
                        or status in QueryStatus.PARTIAL_VALUED)
         values = pool.extract(lane) if keep_values else None
         self.results[req.qid] = QueryResult(
@@ -1038,6 +1097,9 @@ class QueryServer:
             + self._step_pool(self.ppr_pool)
         self.occupancy_trace.append(n_live)
         self.tick += 1
+        K = self.serve.checkpoint_every
+        if self._ckpt_manager is not None and K and self.tick % K == 0:
+            self.save_checkpoint()
         if rec is not None:
             depth = len(self.queue)
             span.end(live=n_live, queue=depth)
@@ -1058,6 +1120,205 @@ class QueryServer:
             if not self.step():
                 break
         return self.results
+
+    # ------------------------------------------------- checkpoint/restore
+    def attach_checkpoints(self, manager) -> None:
+        """Wire a ``CheckpointManager``: with ``ServeConfig.
+        checkpoint_every=K`` set, ``step()`` snapshots the whole serving
+        state every K ticks (async, atomic, crc-verified)."""
+        self._ckpt_manager = manager
+
+    def snapshot(self) -> tuple[dict, dict]:
+        """(array tree, JSON meta) capturing the server at a tick
+        boundary: both pools' lane tables + per-lane unit-weight /
+        damping / tolerance vectors, every queued and in-flight request,
+        the per-lane accounting, completed results, and the admission
+        queue — everything ``restore`` needs to warm-boot a server whose
+        min lanes resume bit-identically."""
+        tree = {
+            "min": {"val": np.asarray(self.min_pool.val),
+                    "chg": np.asarray(self.min_pool.chg),
+                    "unitw": np.array(self.min_pool.unitw, copy=True)},
+            "ppr": {"rank": np.asarray(self.ppr_pool.rank),
+                    "delta": np.asarray(self.ppr_pool.delta),
+                    "chg": np.asarray(self.ppr_pool.chg),
+                    "damping": np.array(self.ppr_pool.damping, copy=True),
+                    "tol": np.array(self.ppr_pool.tol, copy=True)},
+            "results": {str(qid): np.asarray(r.values)
+                        for qid, r in self.results.items()
+                        if r.values is not None},
+        }
+        pools = {"min": self.min_pool, "ppr": self.ppr_pool}
+        lanes = {}
+        for name, pool in pools.items():
+            rows = []
+            for lane, req in enumerate(pool.reqs):
+                if req is None:
+                    rows.append(None)
+                    continue
+                key = (id(pool), lane)
+                rows.append({
+                    "req": _req_to_dict(req),
+                    "rounds": int(self._lane_rounds[key]),
+                    "msgs": int(self._lane_msgs[key]),
+                    "exchanged": int(self._lane_exchanged[key]),
+                    "admit_tick": int(self._admit_tick[key]),
+                    "admit_time": float(self._admit_time[key]),
+                })
+            lanes[name] = rows
+        meta = {
+            "n_lanes": self.min_pool.n, "ppr_lanes": self.ppr_pool.n,
+            "tick_rounds": self.tick_rounds,
+            "tick": self.tick, "rounds_driven": self.rounds_driven,
+            "next_qid": self._next_qid, "now": float(self.now()),
+            "counters": {k: int(v) for k, v in self.counters.items()},
+            "occupancy_trace": [int(x) for x in self.occupancy_trace],
+            "pools_used": [n for n, p in pools.items()
+                           if id(p) in self._pools_used],
+            "lanes": lanes,
+            "queue": {
+                "seq": self.queue.next_seq,
+                "entries": [[int(e.seq), int(e.priority), e.tenant,
+                             _req_to_dict(e.item)]
+                            for e in self.queue._entries]},
+            "submit_time": {str(k): float(v)
+                            for k, v in self._submit_time.items()},
+            "submit_tick": {str(k): int(v)
+                            for k, v in self._submit_tick.items()},
+            "deadline_at": {str(k): float(v)
+                            for k, v in self._deadline_at.items()},
+            "seq_of_qid": {str(k): int(v)
+                           for k, v in self._seq_of_qid.items()},
+            "preempt_count": {str(k): int(v)
+                              for k, v in self._preempt_count.items()},
+            "resumed_qids": sorted(self._resumed_qids),
+            "results": [_result_to_dict(r) for r in self.results.values()],
+        }
+        return tree, meta
+
+    def save_checkpoint(self, blocking: bool = False) -> int:
+        """Snapshot the serving state to the attached manager at the
+        current tick (async by default).  Returns the checkpoint step."""
+        if self._ckpt_manager is None:
+            raise RuntimeError("no CheckpointManager attached "
+                               "(call attach_checkpoints first)")
+        tree, meta = self.snapshot()
+        self._ckpt_manager.save(self.tick, tree, blocking=blocking,
+                                meta=meta)
+        rec = obs.get_recorder()
+        if rec is not None:
+            rec.registry.counter(
+                "serve_checkpoints_total",
+                "serving-state checkpoints written").inc()
+        return self.tick
+
+    @classmethod
+    def restore(cls, part: Partition, manager, *, step: int | None = None,
+                cfg: EngineConfig = EngineConfig(), mesh=None,
+                axis_names=("data", "model"),
+                serve: ServeConfig | None = None, clock=None):
+        """Warm-boot a server from a checkpoint: lane tables, queued and
+        in-flight requests, accounting, and results all resume at the
+        checkpointed tick — min-semiring lanes bit-identically (same
+        tables, same compiled round).  In-flight lanes complete with
+        ``QueryStatus.RECOVERED``.  ``part``/``cfg``/``mesh`` must
+        describe the same served graph the checkpoint was taken on."""
+        if step is None:
+            step = manager.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint to restore from")
+        meta = manager.restore_meta(step)
+        srv = cls(part, n_lanes=meta["n_lanes"], cfg=cfg,
+                  ppr_lanes=meta["ppr_lanes"], mesh=mesh,
+                  axis_names=axis_names, serve=serve, clock=clock,
+                  tick_rounds=meta["tick_rounds"])
+        like = {
+            "min": {"val": 0, "chg": 0, "unitw": 0},
+            "ppr": {"rank": 0, "delta": 0, "chg": 0, "damping": 0,
+                    "tol": 0},
+            "results": {str(r["qid"]): 0 for r in meta["results"]
+                        if r["has_values"]},
+        }
+        tree = manager.restore(step, like)
+        srv._load_snapshot(tree, meta)
+        return srv
+
+    def _load_snapshot(self, tree: dict, meta: dict):
+        mp, pp = self.min_pool, self.ppr_pool
+        mp.val = mp._put(jnp.asarray(tree["min"]["val"]))
+        mp.chg = mp._put(jnp.asarray(tree["min"]["chg"]))
+        mp.unitw = np.asarray(tree["min"]["unitw"], np.int32)
+        pp.rank = pp._put(jnp.asarray(tree["ppr"]["rank"]))
+        pp.delta = pp._put(jnp.asarray(tree["ppr"]["delta"]))
+        pp.chg = pp._put(jnp.asarray(tree["ppr"]["chg"]))
+        pp.damping = np.asarray(tree["ppr"]["damping"], np.float32)
+        pp.tol = np.asarray(tree["ppr"]["tol"], np.float32)
+        self.tick = int(meta["tick"])
+        self.rounds_driven = int(meta["rounds_driven"])
+        self._next_qid = int(meta["next_qid"])
+        self.counters = collections.Counter(meta["counters"])
+        self.occupancy_trace = list(meta["occupancy_trace"])
+        pools = {"min": mp, "ppr": pp}
+        self._pools_used = {id(pools[n]) for n in meta["pools_used"]}
+        for name, pool in pools.items():
+            for lane, row in enumerate(meta["lanes"][name]):
+                if row is None:
+                    continue
+                req = _req_from_dict(row["req"])
+                pool.reqs[lane] = req
+                key = (id(pool), lane)
+                self._lane_rounds[key] = row["rounds"]
+                self._lane_msgs[key] = row["msgs"]
+                self._lane_exchanged[key] = row["exchanged"]
+                self._admit_tick[key] = row["admit_tick"]
+                self._admit_time[key] = row["admit_time"]
+                self._resumed_qids.add(req.qid)
+                if name == "min":
+                    _, unitw = L.init_lane_values(
+                        self.part,
+                        [("bfs" if req.kind == "reachability"
+                          else req.kind, req.sources)])
+                    pool.unitw[lane] = int(unitw[0])
+        self.queue._entries = [
+            _adm._Entry(seq, pri, tenant, _req_from_dict(d))
+            for seq, pri, tenant, d in meta["queue"]["entries"]]
+        self.queue._seq = int(meta["queue"]["seq"])
+        self._submit_time = {int(k): v
+                             for k, v in meta["submit_time"].items()}
+        self._submit_tick = {int(k): v
+                             for k, v in meta["submit_tick"].items()}
+        self._deadline_at = {int(k): v
+                             for k, v in meta["deadline_at"].items()}
+        self._seq_of_qid = {int(k): v
+                            for k, v in meta["seq_of_qid"].items()}
+        self._preempt_count = {int(k): v
+                               for k, v in meta["preempt_count"].items()}
+        self._resumed_qids.update(meta["resumed_qids"])
+        for rd in meta["results"]:
+            vals = (tree["results"][str(rd["qid"])]
+                    if rd["has_values"] else None)
+            self.results[rd["qid"]] = _result_from_dict(rd, vals)
+        # resume the snapshot's wall clock so restored deadlines /
+        # timeouts / latencies stay coherent under any injected clock
+        self._clock_offset = meta["now"] - self._clock()
+
+    def degrade_in_flight(self) -> list[int]:
+        """Graceful degradation when recovery is impossible (no usable
+        checkpoint, restore budget exhausted): every in-flight lane
+        retires with ``QueryStatus.DEGRADED`` partial values, every
+        queued request resolves ``DEGRADED`` with no values.  The server
+        stays serviceable for new traffic.  Returns the affected qids."""
+        out = []
+        for pool in (self.min_pool, self.ppr_pool):
+            for lane in range(pool.n):
+                if pool.reqs[lane] is not None:
+                    out.append(pool.reqs[lane].qid)
+                    self._retire(pool, lane, QueryStatus.DEGRADED,
+                                 partial=True)
+        for req in self.queue.drain_if(lambda r: True):
+            out.append(req.qid)
+            self._finish(req, values=None, status=QueryStatus.DEGRADED)
+        return out
 
     # ------------------------------------------------------------ metrics
     def occupancy(self) -> float:

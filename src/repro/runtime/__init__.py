@@ -1,3 +1,8 @@
-from repro.runtime.elastic import ElasticCoordinator, StragglerMonitor
+from repro.runtime.chaos import (
+    ChaosEvent, ChaosPlan, FaultDetected, FixpointReport, RecoveryPolicy)
+from repro.runtime.elastic import (
+    ElasticCoordinator, ShardPool, StragglerMonitor)
 
-__all__ = ["ElasticCoordinator", "StragglerMonitor"]
+__all__ = ["ChaosEvent", "ChaosPlan", "ElasticCoordinator",
+           "FaultDetected", "FixpointReport", "RecoveryPolicy",
+           "ShardPool", "StragglerMonitor"]

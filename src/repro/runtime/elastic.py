@@ -76,6 +76,13 @@ class ElasticCoordinator:
             return True
         return False
 
+    def revive(self, host_id: int, step: int):
+        """A restarted host rejoins the fleet (recovery after a restore
+        re-dispatch): alive again, heartbeat clock reset to ``step``."""
+        hs = self.hosts[host_id]
+        hs.alive = True
+        hs.last_heartbeat = step
+
     def kill_host(self, host_id: int):
         """Test hook: simulate an abrupt host failure."""
         self.hosts[host_id].alive = False
@@ -111,6 +118,55 @@ class ElasticCoordinator:
             if best is None:
                 best = cand
         return best
+
+
+class ShardPool:
+    """Graph-shard liveness tracker for the resilient fixpoint driver
+    (ISSUE 10 tentpole part 3): the multi-host heartbeat/declare-dead
+    state machine above, reused one-"host"-per-shard.
+
+    Shards heartbeat every fixpoint round; a shard that misses
+    ``window`` consecutive rounds is declared dead at the next
+    ``tick()``.  The driver then either restores the same layout from
+    the last checkpoint (the dead shard's process restarts — ``revive``)
+    or shrinks the shard pool: rebuild the partition on the survivors
+    (``core.resilient.shrink_partition``) and migrate per-vertex values.
+    A *delayed* shard — missed heartbeats but fewer than the window —
+    never trips the machine (stragglers are not failures)."""
+
+    def __init__(self, num_shards: int, window: int = 3):
+        self.num_shards = num_shards
+        self.coord = ElasticCoordinator(
+            n_hosts=num_shards, devices_per_host=1, model_axis=1,
+            heartbeat_window=window)
+
+    def heartbeat(self, shard: int, round_: int):
+        self.coord.heartbeat(shard, round_)
+
+    def heartbeat_all(self, round_: int, except_shards=()):
+        for s in range(self.num_shards):
+            if s not in except_shards:
+                self.coord.heartbeat(s, round_)
+
+    def tick(self, round_: int) -> list[int]:
+        """Advance the round clock; returns shards NEWLY declared dead."""
+        before = set(self.alive())
+        self.coord.tick(round_)
+        return sorted(before - set(self.alive()))
+
+    def alive(self) -> list[int]:
+        return self.coord.alive_hosts()
+
+    def dead(self) -> list[int]:
+        return [s for s in range(self.num_shards)
+                if s not in set(self.alive())]
+
+    def revive(self, shard: int, round_: int):
+        self.coord.revive(shard, round_)
+
+    def revive_all(self, round_: int):
+        for s in self.dead():
+            self.coord.revive(s, round_)
 
 
 class StragglerMonitor:

@@ -50,12 +50,15 @@ class QueryStatus:
     TIMEOUT = "timeout"                # wall-clock execution cap hit
     BUDGET_EXHAUSTED = "budget_exhausted"  # round budget hit; partial
     FAILED = "lane_failed"             # injected / detected lane failure
+    RECOVERED = "recovered"            # completed after checkpoint restore
+    DEGRADED = "degraded"              # recovery exhausted; partial values
 
     TERMINAL = frozenset((OK, REJECTED, SHED, DEADLINE_EXPIRED, TIMEOUT,
-                          BUDGET_EXHAUSTED, FAILED))
-    # statuses that still carry (partial) values
+                          BUDGET_EXHAUSTED, FAILED, RECOVERED, DEGRADED))
+    # statuses that still carry (partial) values — RECOVERED is not here
+    # because it carries a *complete* result (like OK, after a restore)
     PARTIAL_VALUED = frozenset((DEADLINE_EXPIRED, TIMEOUT,
-                                BUDGET_EXHAUSTED))
+                                BUDGET_EXHAUSTED, DEGRADED))
 
 
 class QueryValidationError(ValueError):
@@ -118,6 +121,9 @@ class ServeConfig:
     cache_size: root-keyed LRU result-cache capacity; 0 disables.
     cache_ttl_s: staleness bound for cache hits (None = never stale).
     faults: optional ``FaultPlan`` for fault injection.
+    checkpoint_every: snapshot the server's lane/queue state to its
+        attached ``CheckpointManager`` every K ticks (None disables —
+        the default keeps the unpoliced path trace-identical).
     """
 
     max_queue: int | None = None
@@ -128,6 +134,7 @@ class ServeConfig:
     cache_size: int = 0
     cache_ttl_s: float | None = None
     faults: FaultPlan | None = None
+    checkpoint_every: int | None = None
 
     def __post_init__(self):
         if self.overload_policy not in ("block", "reject", "shed"):
@@ -136,6 +143,9 @@ class ServeConfig:
                 "expected 'block', 'reject', or 'shed'")
         if self.max_queue is not None and self.max_queue < 1:
             raise ValueError("max_queue must be >= 1 (or None = unbounded)")
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                "checkpoint_every must be >= 1 (or None = disabled)")
 
 
 class _Entry(typing.NamedTuple):

@@ -65,3 +65,45 @@ def test_corruption_detected(tmp_path):
     np.save(fname, arr)
     with pytest.raises(IOError, match="corrupt"):
         cm.restore(11, t)
+
+
+def test_async_write_failure_surfaces(tmp_path):
+    """A failed background save must not die silently: the writer
+    thread's exception re-raises on the next wait()/save()."""
+    cm = CheckpointManager(str(tmp_path))
+    t = _tree(1)
+    cm.save(1, t, blocking=False)
+    cm.wait()                              # clean write: no raise
+    # point the writer at an unwritable location (a file, not a dir)
+    blocked = tmp_path / "blocked"
+    blocked.write_text("not a directory")
+    cm.dir = str(blocked)
+    cm.save(2, t, blocking=False)
+    with pytest.raises(RuntimeError, match="async checkpoint"):
+        cm.wait()
+    # the error is consumed: the manager is usable again
+    cm.dir = str(tmp_path)
+    cm.save(3, t, blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 3
+
+
+def test_async_write_failure_surfaces_on_next_save(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    t = _tree(2)
+    blocked = tmp_path / "blocked2"
+    blocked.write_text("not a directory")
+    cm.dir = str(blocked)
+    cm.save(1, t, blocking=False)
+    cm.dir = str(tmp_path)
+    with pytest.raises(RuntimeError, match="async checkpoint"):
+        cm.save(2, t)                      # save() waits first
+
+
+def test_meta_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    meta = {"round": 7, "run": "sssp", "nested": {"k": [1, 2]}}
+    cm.save(7, _tree(7), meta=meta)
+    assert cm.restore_meta(7) == meta
+    cm.save(8, _tree(8))                   # no meta -> empty dict
+    assert cm.restore_meta(8) == {}

@@ -1,8 +1,9 @@
 """Elastic re-mesh + straggler state machine."""
 import numpy as np
+import pytest
 
 from repro.runtime.elastic import (
-    ElasticCoordinator, StragglerMonitor, viable_mesh_shapes)
+    ElasticCoordinator, ShardPool, StragglerMonitor, viable_mesh_shapes)
 
 
 def test_viable_shapes_keep_model_axis():
@@ -58,3 +59,77 @@ def test_straggler_recovery_resets_flags():
             m.record(h, 1.0)  # host 1 recovers
         cls = m.classify()
     assert cls == {"bypass": [], "evict": []}
+
+
+def test_viable_shapes_factorizations_exact():
+    # total = 8*1 = 8, model 2 -> rest 4: (2,2,2) and (1,4,2)
+    shapes = viable_mesh_shapes(n_hosts=8, devices_per_host=1,
+                                model_axis=2)
+    assert set(shapes) == {(2, 2, 2), (1, 4, 2)}
+    # indivisible model axis -> no viable shape
+    assert viable_mesh_shapes(n_hosts=3, devices_per_host=1,
+                              model_axis=2) == []
+    # sorted largest-device-count first, all preserve the model axis
+    shapes = viable_mesh_shapes(n_hosts=64, devices_per_host=4,
+                                model_axis=16)
+    assert all(s[2] == 16 for s in shapes)
+    sizes = [s[0] * s[1] * s[2] for s in shapes]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_declare_dead_window_boundary_exact():
+    """Death fires strictly AFTER the window: a host whose last
+    heartbeat was at step t dies at the first tick with
+    step - t > window, not at step - t == window."""
+    c = ElasticCoordinator(n_hosts=2, devices_per_host=1, model_axis=1,
+                           heartbeat_window=3)
+    c.heartbeat(0, 0)
+    c.heartbeat(1, 0)
+    for step in (1, 2, 3):
+        c.heartbeat(0, step)
+        assert not c.tick(step)        # host 1 silent but inside window
+        assert c.hosts[1].alive
+    c.heartbeat(0, 4)
+    assert c.tick(4)                   # 4 - 0 > 3: declared dead
+    assert not c.hosts[1].alive
+    assert c.remesh_events[-1]["died"] == [1]
+    # revival resets the clock: no immediate re-death
+    c.revive(1, 5)
+    assert not c.tick(5)
+    assert c.hosts[1].alive
+
+
+def test_straggler_ewma_exact_math():
+    m = StragglerMonitor(alpha=0.3)
+    m.record(0, 2.0)
+    assert m.hosts[0].ewma_step_s == pytest.approx(2.0)  # seeded, not decayed
+    m.record(0, 4.0)
+    assert m.hosts[0].ewma_step_s == pytest.approx(0.3 * 4.0 + 0.7 * 2.0)
+    m.record(0, 1.0)
+    assert m.hosts[0].ewma_step_s == pytest.approx(
+        0.3 * 1.0 + 0.7 * (0.3 * 4.0 + 0.7 * 2.0))
+
+
+def test_shard_pool_heartbeat_declare_dead_and_revive():
+    pool = ShardPool(4, window=2)
+    pool.heartbeat_all(0)
+    assert pool.tick(0) == [] and pool.alive() == [0, 1, 2, 3]
+    for r in (1, 2, 3):
+        pool.heartbeat_all(r, except_shards=(1, 3))
+        newly = pool.tick(r)
+        if r < 3:
+            assert newly == []         # inside the window
+        else:
+            assert newly == [1, 3]     # both declared dead together
+    assert pool.dead() == [1, 3]
+    pool.revive(1, 4)
+    assert pool.dead() == [3]
+    pool.revive_all(4)
+    assert pool.dead() == [] and pool.alive() == [0, 1, 2, 3]
+    # tick() reports each death exactly once (newly-dead, not all-dead)
+    pool2 = ShardPool(2, window=1)
+    pool2.heartbeat_all(0)
+    pool2.heartbeat(0, 2)
+    assert pool2.tick(2) == [1]
+    pool2.heartbeat(0, 3)
+    assert pool2.tick(3) == []

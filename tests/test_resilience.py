@@ -1,0 +1,616 @@
+"""Crash-safe fixpoints (ISSUE 10): the chaos differential suite.
+
+Every fault class x layout: inject a deterministic fault, let the
+resilient driver detect and recover, and assert the terminal result
+equals a fault-free oracle — min-semiring values BIT-identical, the
+accounting counters (rounds/messages/work) exactly equal (counters ride
+in the checkpoint tree), delta-PageRank within reassociation tolerance.
+Plus: checkpoint/restore round trips (engine, serving, streaming WAL),
+shrink-on-death field-for-field partition equality, graceful
+degradation, and post-recovery flight-recorder records that still match
+the planner/kernel mirrors.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import actions, engine
+from repro.core.partition import PartitionConfig, build_partition
+from repro.core.resilient import (
+    LanesTask, PagerankTask, StackedTask, migrate_values, run_resilient,
+    shrink_partition)
+from repro.core.streaming import StreamingGraph
+from repro.graph import generators
+from repro.runtime.chaos import (
+    ChaosEvent, ChaosPlan, FaultDetected, RecoveryPolicy)
+from repro.runtime.elastic import ShardPool
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _case(scale=7, seed=5, shards=4, rpvo=2):
+    g = generators.rmat(scale, edge_factor=5, seed=seed)
+    g = g.with_random_weights(seed=seed)
+    part = build_partition(g, PartitionConfig(num_shards=shards,
+                                              rpvo_max=rpvo))
+    root = int(np.argsort(-g.out_degrees())[0])
+    return g, part, root
+
+
+def _sssp_init(part, root):
+    return engine.init_values(part, actions.SSSP, {root: 0.0})
+
+
+# --------------------------------------------------------------------------
+# clean runs: the resilient driver IS the shipped runner when no fault fires
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    engine.EngineConfig(),
+    engine.EngineConfig(use_pallas=True, grid_mode="worklist"),
+    engine.EngineConfig(use_pallas=True, grid_mode="device_worklist"),
+], ids=["dense", "worklist", "device_worklist"])
+def test_resilient_no_chaos_equals_run_stacked(cfg):
+    g, part, root = _case()
+    init = _sssp_init(part, root)
+    want, wstats = engine.run_stacked(actions.SSSP, part, init, cfg)
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init, cfg))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert report.status == "ok" and not report.faults
+    assert (stats.iterations, stats.messages, stats.work_actions) == \
+        (wstats.iterations, wstats.messages, wstats.work_actions)
+
+
+def test_resilient_pagerank_clean_equals_delta_runner():
+    g, part, _ = _case(seed=8)
+    want, wstats = engine.run_pagerank_delta(part, 0.85, 1e-6)
+    got, stats, report = run_resilient(PagerankTask(part, 0.85, 1e-6))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert report.status == "ok"
+    assert stats.iterations == wstats.iterations
+    assert stats.messages == wstats.messages
+
+
+# --------------------------------------------------------------------------
+# the fault-class differential: every injected fault -> typed recovery,
+# values equal the fault-free oracle, accounting totals exactly equal
+# --------------------------------------------------------------------------
+
+FAULTS = [
+    ("kill_shard", "restore"),
+    ("corrupt_tile", "restore"),
+    ("drop_inbox", "retry"),
+    ("dup_inbox", "retry"),
+    ("delay_shard", None),       # a straggler is NOT a fault
+]
+
+
+@pytest.mark.parametrize("kind,action", FAULTS,
+                         ids=[k for k, _ in FAULTS])
+@pytest.mark.parametrize("grid", ["dense", "device_worklist"])
+def test_fault_differential_stacked(kind, action, grid):
+    cfg = engine.EngineConfig(use_pallas=(grid != "dense"),
+                              grid_mode=grid)
+    g, part, root = _case()
+    init = _sssp_init(part, root)
+    want, wstats = engine.run_stacked(actions.SSSP, part, init, cfg)
+    assert wstats.iterations > 4, "case too small to inject at round 3"
+    chaos = ChaosPlan(events=(ChaosEvent(round=3, kind=kind, shard=2,
+                                         rounds=1),))
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init, cfg), chaos=chaos)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if action is None:
+        assert report.status == "ok" and not report.faults
+        assert stats.messages == wstats.messages
+        assert stats.iterations == wstats.iterations
+    else:
+        assert report.status == "recovered"
+        assert any(f.kind == kind and f.action == action
+                   for f in report.faults)
+        # counters ride the recovery: totals equal the uninterrupted run
+        assert stats.messages == wstats.messages
+        assert stats.iterations == wstats.iterations
+        assert stats.work_actions == wstats.work_actions
+
+
+def test_fault_differential_pagerank():
+    g, part, _ = _case(seed=8)
+    want, wstats = engine.run_pagerank_delta(part, 0.85, 1e-6)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=2, kind="corrupt_tile", shard=1),
+        ChaosEvent(round=4, kind="drop_inbox", shard=0)))
+    got, stats, report = run_resilient(PagerankTask(part, 0.85, 1e-6),
+                                       chaos=chaos)
+    assert report.status == "recovered"
+    kinds = {f.kind for f in report.faults}
+    assert "corrupt_tile" in kinds
+    # sum semiring: reassociation tolerance (bit-exact in practice on
+    # one device — the traced reductions replay unreordered)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-9)
+    assert stats.iterations == wstats.iterations
+    assert stats.messages == wstats.messages
+
+
+def test_fault_differential_lanes():
+    from repro.query import lanes as L
+    g, part, root = _case()
+    roots = np.argsort(-g.out_degrees())[:3]
+    queries = [("sssp", int(roots[0])), ("bfs", int(roots[1])),
+               ("sssp", int(roots[2]))]
+    init, unitw = L.init_lane_values(part, queries)
+    want, wstats = L.run_stacked_lanes(part, init, unitw)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=2, kind="corrupt_tile", shard=3),
+        ChaosEvent(round=3, kind="dup_inbox", shard=1)))
+    got, stats, report = run_resilient(
+        LanesTask(part, init, unitw), chaos=chaos)
+    assert report.status == "recovered"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # laned message counts: resilient total equals the lane-summed stats
+    assert stats.messages == int(np.asarray(wstats.messages).sum())
+
+
+def test_chaos_exhaustive_kinds_single_run():
+    """One run surviving the whole fault zoo still lands on the oracle."""
+    g, part, root = _case(scale=8, seed=11)
+    init = _sssp_init(part, root)
+    cfg = engine.EngineConfig()
+    want, wstats = engine.run_stacked(actions.SSSP, part, init, cfg)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=2, kind="delay_shard", shard=0, rounds=1),
+        ChaosEvent(round=3, kind="drop_inbox", shard=2),
+        ChaosEvent(round=4, kind="corrupt_tile", shard=1),
+        ChaosEvent(round=5, kind="dup_inbox", shard=3),
+        ChaosEvent(round=6, kind="kill_shard", shard=0)))
+    policy = RecoveryPolicy(max_retries=2, max_restores=4)
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init, cfg), chaos=chaos,
+        policy=policy)
+    assert report.status == "recovered"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert stats.messages == wstats.messages
+    assert stats.iterations == wstats.iterations
+
+
+# --------------------------------------------------------------------------
+# checkpoint/restore through a real CheckpointManager
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("checkpoint_every", [1, 3])
+def test_checkpointed_restore_exact(checkpoint_every, tmp_path):
+    g, part, root = _case(scale=8, seed=2)
+    cfg = engine.EngineConfig(checkpoint_every=checkpoint_every)
+    init = _sssp_init(part, root)
+    want, wstats = engine.run_stacked(actions.SSSP, part, init,
+                                         engine.EngineConfig())
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=6, kind="kill_shard", shard=1),))
+    mgr = CheckpointManager(str(tmp_path))
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init, cfg), chaos=chaos,
+        manager=mgr)
+    assert report.status == "recovered"
+    assert report.checkpoints_written > 0
+    # restore resumes from the last boundary: <= K rounds replayed
+    assert 0 <= report.rounds_lost <= checkpoint_every + \
+        RecoveryPolicy().heartbeat_window
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert stats.iterations == wstats.iterations
+    assert stats.messages == wstats.messages
+
+
+def test_restore_without_manager_uses_round0():
+    g, part, root = _case()
+    init = _sssp_init(part, root)
+    want, wstats = engine.run_stacked(actions.SSSP, part, init,
+                                         engine.EngineConfig())
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=4, kind="corrupt_tile", shard=0),))
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init), chaos=chaos)
+    assert report.status == "recovered"
+    assert report.rounds_lost >= 3     # all the way back to round 0
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert stats.messages == wstats.messages
+
+
+# --------------------------------------------------------------------------
+# graceful degradation + typed raise
+# --------------------------------------------------------------------------
+
+def test_degraded_after_budget_exhaustion():
+    g, part, root = _case()
+    init = _sssp_init(part, root)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=2, kind="corrupt_tile", shard=0),))
+    got, stats, report = run_resilient(
+        StackedTask(actions.SSSP, part, init), chaos=chaos,
+        policy=RecoveryPolicy(max_restores=0))
+    assert report.status == "degraded"
+    assert any(f.action == "degrade" for f in report.faults)
+    assert np.asarray(got).shape == (part.S, part.R_max)  # partial values
+
+
+def test_degrade_false_raises_typed():
+    g, part, root = _case()
+    init = _sssp_init(part, root)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=2, kind="corrupt_tile", shard=0),))
+    with pytest.raises(FaultDetected) as ei:
+        run_resilient(StackedTask(actions.SSSP, part, init), chaos=chaos,
+                      policy=RecoveryPolicy(max_restores=0,
+                                            degrade=False))
+    assert ei.value.kind == "corrupt_tile"
+
+
+# --------------------------------------------------------------------------
+# ChaosPlan semantics
+# --------------------------------------------------------------------------
+
+def test_chaos_plan_random_deterministic():
+    a = ChaosPlan.random(seed=3, n_events=6, max_round=10, num_shards=4)
+    b = ChaosPlan.random(seed=3, n_events=6, max_round=10, num_shards=4)
+    assert a.events == b.events
+    c = ChaosPlan.random(seed=4, n_events=6, max_round=10, num_shards=4)
+    assert a.events != c.events
+    assert all(1 <= e.round <= 10 and 0 <= e.shard < 4 for e in a.events)
+
+
+def test_chaos_events_fire_exactly_once():
+    plan = ChaosPlan(events=(ChaosEvent(round=2, kind="drop_inbox",
+                                        shard=0),))
+    evs = plan.events_at(2)
+    assert len(evs) == 1
+    plan.mark_fired(evs[0])
+    assert plan.events_at(2) == []     # a replayed round does not re-fire
+    plan.reset()
+    assert len(plan.events_at(2)) == 1
+
+
+# --------------------------------------------------------------------------
+# shard-pool shrink (tentpole part 3)
+# --------------------------------------------------------------------------
+
+def test_shrink_partition_equals_independent_build():
+    g, part, _ = _case(shards=4)
+    new_part, new_cfg = shrink_partition(g, part.cfg, 3)
+    indep = build_partition(
+        g, PartitionConfig(num_shards=3, rpvo_max=part.cfg.rpvo_max,
+                           seed=part.cfg.seed,
+                           indegree_cutoff=part.cfg.indegree_cutoff))
+    assert new_cfg.num_shards == 3
+    for f in ("slot_vertex", "slot_is_root", "edge_src_root_flat",
+              "edge_dst_flat", "edge_mask", "edge_w", "root_flat",
+              "num_replicas", "sibling_flat", "sibling_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(new_part, f)),
+            np.asarray(getattr(indep, f)), err_msg=f)
+
+
+def test_shrink_on_death_reconverges_to_oracle():
+    g, part, root = _case(shards=4)
+    init = _sssp_init(part, root)
+    want, _ = engine.run_stacked(actions.SSSP, part, init,
+                                    engine.EngineConfig())
+    want_vv = engine.vertex_values(part, want)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=3, kind="kill_shard", shard=2),))
+    task = StackedTask(actions.SSSP, part, init, graph=g)
+    got, stats, report = run_resilient(
+        task, chaos=chaos, policy=RecoveryPolicy(on_dead="shrink"))
+    assert report.status == "recovered"
+    assert any(f.action == "shrink" for f in report.faults)
+    assert task.part.S == 3            # pool shrank by the dead shard
+    got_vv = engine.vertex_values(task.part, got)
+    np.testing.assert_array_equal(got_vv, want_vv)
+
+
+def test_migrate_values_consistent_view():
+    g, part, root = _case(shards=4)
+    init = _sssp_init(part, root)
+    done, _ = engine.run_stacked(actions.SSSP, part, init,
+                                    engine.EngineConfig())
+    new_part, _ = shrink_partition(g, part.cfg, 3)
+    mig = migrate_values(part, done, new_part, actions.SSSP)
+    sv = np.asarray(new_part.slot_vertex)
+    vv = engine.vertex_values(part, done)
+    # every valid replica slot holds its vertex's old root value
+    np.testing.assert_array_equal(mig[sv >= 0], vv[sv[sv >= 0]])
+    assert (mig[sv < 0] == np.float32(np.inf)).all()
+
+
+def test_shard_pool_delay_inside_window_never_dies():
+    pool = ShardPool(4, window=3)
+    pool.heartbeat_all(0)
+    for r in range(1, 8):
+        pool.heartbeat_all(r, except_shards=(2,) if r in (3, 4) else ())
+        assert pool.tick(r) == []      # 2 missed heartbeats < window
+    assert pool.alive() == [0, 1, 2, 3]
+
+
+# --------------------------------------------------------------------------
+# recovered rounds still satisfy the planner-mirror/with_debug harness
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid_mode", ["dense", "worklist"])
+def test_records_after_recovery_match_mirrors(grid_mode):
+    from test_obs import _assert_record_exact
+    g, part, root = _case()
+    cfg = engine.EngineConfig(use_pallas=True, grid_mode=grid_mode)
+    init = _sssp_init(part, root)
+    want, _ = engine.run_stacked(actions.SSSP, part, init, cfg)
+    chaos = ChaosPlan(events=(
+        ChaosEvent(round=3, kind="corrupt_tile", shard=1),))
+    with obs.recording(keep_frontiers=True) as rec:
+        got, _, report = run_resilient(
+            StackedTask(actions.SSSP, part, init, cfg), chaos=chaos)
+    assert report.status == "recovered"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every committed round record — including the replayed ones — is
+    # internally consistent with the host mirror AND kernel counters
+    _assert_record_exact(part, cfg, rec, runs={"sssp"})
+
+
+# --------------------------------------------------------------------------
+# sharded layout over real collectives (8 host devices, subprocess)
+# --------------------------------------------------------------------------
+
+CHILD_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import actions, engine
+    from repro.core.partition import PartitionConfig, build_partition
+    from repro.core.resilient import ShardedTask, run_resilient
+    from repro.graph import generators
+    from repro.runtime.chaos import ChaosEvent, ChaosPlan
+
+    assert len(jax.devices()) == 8
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    g = generators.rmat(8, edge_factor=5, seed=4).with_random_weights(seed=4)
+    part = build_partition(g, PartitionConfig(num_shards=8, rpvo_max=2))
+    root = int(np.argsort(-g.out_degrees())[0])
+    init = engine.init_values(part, actions.SSSP, {root: 0.0})
+
+    clean, cstats, creport = run_resilient(
+        ShardedTask(actions.SSSP, part, init, mesh))
+    assert creport.status == "ok"
+
+    for kind, rnd, shard in (("corrupt_tile", 3, 5), ("kill_shard", 4, 2),
+                             ("drop_inbox", 3, 1)):
+        chaos = ChaosPlan(events=(ChaosEvent(round=rnd, kind=kind,
+                                             shard=shard),))
+        got, stats, report = run_resilient(
+            ShardedTask(actions.SSSP, part, init, mesh), chaos=chaos)
+        assert report.status == "recovered", (kind, report.status)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+        assert stats.messages == cstats.messages, kind
+        assert stats.iterations == cstats.iterations, kind
+    print("RESILIENT_SHARDED_OK")
+""")
+
+
+def test_sharded_chaos_differential_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", CHILD_SHARDED], env=env,
+        capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, \
+        f"stdout={out.stdout}\nstderr={out.stderr}"
+    assert "RESILIENT_SHARDED_OK" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# serving: kill-and-restore a QueryServer mid-flight
+# --------------------------------------------------------------------------
+
+def _serving_case():
+    g = generators.rmat(7, edge_factor=5, seed=5).with_random_weights(
+        seed=5)
+    part = build_partition(g, PartitionConfig(num_shards=4, rpvo_max=2))
+    roots = [int(r) for r in np.argsort(-g.out_degrees())[:4]]
+    return g, part, roots
+
+
+def test_server_kill_and_restore_bit_identical(tmp_path):
+    from repro.query import QueryServer
+    from repro.serve.admission import QueryStatus, ServeConfig
+
+    g, part, roots = _serving_case()
+
+    def submit_all(srv):
+        return [srv.submit("bfs", roots[0]),
+                srv.submit("sssp", roots[1]),
+                srv.submit("sssp", roots[2]),
+                srv.submit("bfs", roots[3])]
+
+    # oracle: uninterrupted serving run
+    oracle = QueryServer(part, n_lanes=2)
+    oq = submit_all(oracle)
+    ores = oracle.run()
+
+    serve = ServeConfig(checkpoint_every=2)
+    srv = QueryServer(part, n_lanes=2, serve=serve)
+    qs = submit_all(srv)
+    srv.attach_checkpoints(CheckpointManager(str(tmp_path)))
+    for _ in range(4):                 # crash mid-flight, past a snapshot
+        srv.step()
+    assert srv.results.keys() != set(qs)
+    del srv                            # crash
+
+    srv2 = QueryServer.restore(part, CheckpointManager(str(tmp_path)),
+                               serve=serve)
+    res = srv2.run()
+    assert set(res) == set(qs)
+    for q, oq_ in zip(qs, oq):
+        o = ores[oq_]
+        r = res[q]
+        np.testing.assert_array_equal(np.asarray(r.values),
+                                      np.asarray(o.values))
+        assert r.rounds == o.rounds
+        assert r.messages == o.messages
+    # queries in flight at the snapshot finish as RECOVERED, the rest OK
+    statuses = {res[q].status for q in qs}
+    assert QueryStatus.RECOVERED in statuses
+    assert statuses <= {QueryStatus.OK, QueryStatus.RECOVERED}
+
+
+def test_server_restore_without_checkpoint_raises(tmp_path):
+    from repro.query import QueryServer
+    _, part, _ = _serving_case()
+    with pytest.raises(FileNotFoundError):
+        QueryServer.restore(part, CheckpointManager(str(tmp_path)))
+
+
+def test_server_degrade_in_flight():
+    from repro.query import QueryServer
+    from repro.serve.admission import QueryStatus
+    _, part, roots = _serving_case()
+    srv = QueryServer(part, n_lanes=1)
+    q0 = srv.submit("sssp", roots[0])
+    q1 = srv.submit("sssp", roots[1])   # queued behind the single lane
+    srv.step()
+    hit = srv.degrade_in_flight()
+    assert set(hit) == {q0, q1}
+    assert srv.results[q0].status == QueryStatus.DEGRADED
+    assert srv.results[q0].values is not None          # partial values
+    assert srv.results[q1].status == QueryStatus.DEGRADED
+    assert srv.results[q1].values is None
+    # the server stays serviceable for new traffic
+    q2 = srv.submit("bfs", roots[2])
+    res = srv.run()
+    assert res[q2].status == QueryStatus.OK
+
+
+# --------------------------------------------------------------------------
+# streaming: WAL replay makes crash-mid-commit exact
+# --------------------------------------------------------------------------
+
+def _stream_case():
+    g = generators.rmat(7, edge_factor=5, seed=3)
+    pcfg = PartitionConfig(num_shards=4, rpvo_max=2)
+    return g, pcfg
+
+
+def _stream_batch(g, seed=7, k=40):
+    rng = np.random.default_rng(seed)
+    ins = (rng.integers(0, g.n, k).astype(np.int32),
+           rng.integers(0, g.n, k).astype(np.int32),
+           (rng.random(k) + 0.1).astype(np.float32))
+    dels = (np.asarray(g.src)[:10].copy(), np.asarray(g.dst)[:10].copy())
+    return ins, dels
+
+
+def test_streaming_wal_crash_mid_commit_exact(tmp_path):
+    g, pcfg = _stream_case()
+    ins, dels = _stream_batch(g)
+
+    def make():
+        sg = StreamingGraph(g, pcfg)
+        sg.track("bfs", 0)
+        sg.track("sssp", 1)
+        sg.track("pagerank")
+        return sg
+
+    oracle = make()
+    oracle.insert_edges(*ins)
+    oracle.delete_edges(*dels)
+    oracle.commit()
+
+    sg = make()
+    sg.insert_edges(*ins)
+    sg.delete_edges(*dels)
+    mgr = CheckpointManager(str(tmp_path))
+    sg.save_checkpoint(mgr, blocking=True)   # WAL holds the batch
+    del sg                                   # crash mid-commit
+
+    sg2 = StreamingGraph.restore(CheckpointManager(str(tmp_path)))
+    assert sg2._pending_ins and sg2._pending_del
+    sg2.commit()                             # replay the WAL
+    for k in oracle.tracked:
+        np.testing.assert_array_equal(
+            np.asarray(oracle.tracked[k]["vals"]),
+            np.asarray(sg2.tracked[k]["vals"]), err_msg=str(k))
+
+
+def test_streaming_checkpoint_roundtrip_post_commit(tmp_path):
+    g, pcfg = _stream_case()
+    ins, dels = _stream_batch(g)
+    sg = StreamingGraph(g, pcfg)
+    sg.track("sssp", 0)
+    sg.insert_edges(*ins)
+    sg.delete_edges(*dels)
+    sg.commit()
+    mgr = CheckpointManager(str(tmp_path))
+    sg.save_checkpoint(mgr, blocking=True)
+    sg2 = StreamingGraph.restore(mgr)
+    assert sg2._commits == sg._commits
+    assert not sg2._pending_ins and not sg2._pending_del
+    np.testing.assert_array_equal(
+        np.asarray(sg.tracked[("sssp", 0)]["vals"]),
+        np.asarray(sg2.tracked[("sssp", 0)]["vals"]))
+    # the restored instance keeps streaming: a further mutation commits
+    sg.insert_edges(*_stream_batch(g, seed=9, k=8)[0])
+    sg2.insert_edges(*_stream_batch(g, seed=9, k=8)[0])
+    sg.commit()
+    sg2.commit()
+    np.testing.assert_array_equal(
+        np.asarray(sg.tracked[("sssp", 0)]["vals"]),
+        np.asarray(sg2.tracked[("sssp", 0)]["vals"]))
+
+
+# --------------------------------------------------------------------------
+# streaming staleness SLO (deferred-commit auto refresh)
+# --------------------------------------------------------------------------
+
+def test_streaming_staleness_slo_auto_refresh():
+    g, pcfg = _stream_case()
+    sg = StreamingGraph(g, pcfg, staleness_slo=25.0)
+    sg.track("bfs", 0)
+    ins, _ = _stream_batch(g, k=20)
+    sg.insert_edges(*ins)              # 20 <= 25: stays buffered
+    assert sg.auto_refreshes == 0 and sg._pending_ins
+    more, _ = _stream_batch(g, seed=8, k=10)
+    sg.insert_edges(*more)             # 30 > 25: auto-commit
+    assert sg.auto_refreshes == 1
+    assert not sg._pending_ins and sg.staleness() == 0.0
+    # equal to an eager instance that committed the same batches
+    ref = StreamingGraph(g, pcfg)
+    ref.track("bfs", 0)
+    ref.insert_edges(*ins)
+    ref.insert_edges(*more)
+    ref.commit()
+    np.testing.assert_array_equal(
+        np.asarray(sg.tracked[("bfs", 0)]["vals"]),
+        np.asarray(ref.tracked[("bfs", 0)]["vals"]))
+
+
+def test_streaming_staleness_pr_mass_metric():
+    g, pcfg = _stream_case()
+    sg = StreamingGraph(g, pcfg, staleness_slo=1e9,
+                        staleness_metric="pr_mass")
+    sg.track("pagerank")
+    ins, _ = _stream_batch(g, k=15)
+    sg.insert_edges(*ins)
+    s = sg.staleness()
+    p = np.asarray(sg.tracked[("pagerank", None)]["vals"])
+    d = sg.tracked[("pagerank", None)]["damping"]
+    srcs = np.unique(ins[0])
+    assert s == pytest.approx(float(d * p[srcs].sum()))
+    with pytest.raises(ValueError):
+        StreamingGraph(g, pcfg, staleness_slo=1.0,
+                       staleness_metric="nope")
